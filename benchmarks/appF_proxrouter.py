@@ -1,0 +1,70 @@
+"""Appendix F: the paper's second benchmark (ProxRouter-Data analogue).
+
+14 models × 10 task clusters, Dirichlet α = 0.4 query heterogeneity,
+UNIFORM model logging (App. B.2: "For ProxRouter-Data, we use uniform model
+logging for variety"). Repeats the Fig. 2 (fed vs local, global test) and
+Fig. 9 (fed vs centralized) comparisons — App. F reports the same
+conclusions hold."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+from repro.data.partition import client_slice, federated_split, flatten_clients
+from repro.data.synthetic import make_eval_corpus
+
+N_MODELS_PROX = 14
+
+
+def run():
+    t = C.Timer()
+    corpus = make_eval_corpus(jax.random.PRNGKey(21), n_queries=6000,
+                              n_tasks=10, n_models=N_MODELS_PROX,
+                              d_emb=C.D_EMB)
+    rcfg = dataclasses.replace(C.RCFG, num_models=N_MODELS_PROX)
+    fcfg = dataclasses.replace(C.FCFG, dirichlet_alpha=0.4,
+                               model_alpha=float("inf"), seed=21)
+    split = federated_split(jax.random.PRNGKey(22), corpus, fcfg)
+    tg = split["test_global"]
+
+    fed_mlp, _ = F.fedavg(jax.random.PRNGKey(23), split["train"], rcfg,
+                          fcfg, rounds=30)
+    auc_fed = C.auc_of(lambda x: F.R.apply_mlp_router(fed_mlp, x), tg)
+    aucs_loc = []
+    for i in range(fcfg.num_clients):
+        p_i, _ = F.sgd_train(jax.random.PRNGKey(40 + i),
+                             client_slice(split["train"], i), rcfg, fcfg,
+                             steps=400)
+        aucs_loc.append(C.auc_of(
+            lambda x, p=p_i: F.R.apply_mlp_router(p, x), tg))
+    cen, _ = F.sgd_train(jax.random.PRNGKey(24),
+                         flatten_clients(split["train"]), rcfg, fcfg,
+                         steps=360)
+    auc_cen = C.auc_of(lambda x: F.R.apply_mlp_router(cen, x), tg)
+
+    km_fed = KR.fed_kmeans_router(jax.random.PRNGKey(25), split["train"],
+                                  rcfg, num_models=N_MODELS_PROX)
+    auc_kfed = C.auc_of(C.kmeans_pred(km_fed), tg)
+    aucs_kloc = [
+        C.auc_of(C.kmeans_pred(KR.local_kmeans_router(
+            jax.random.PRNGKey(50 + i), client_slice(split["train"], i),
+            rcfg, num_models=N_MODELS_PROX)), tg)
+        for i in range(fcfg.num_clients)]
+
+    us = t.us()
+    C.emit("appF_mlp_fed_auc", us, f"{auc_fed:.4f}")
+    C.emit("appF_mlp_local_mean_auc", us, f"{np.mean(aucs_loc):.4f}")
+    C.emit("appF_mlp_centralized_auc", us, f"{auc_cen:.4f}")
+    C.emit("appF_kmeans_fed_auc", us, f"{auc_kfed:.4f}")
+    C.emit("appF_kmeans_local_mean_auc", us, f"{np.mean(aucs_kloc):.4f}")
+    return {"mlp": (auc_fed, np.mean(aucs_loc), auc_cen),
+            "kmeans": (auc_kfed, np.mean(aucs_kloc))}
+
+
+if __name__ == "__main__":
+    run()

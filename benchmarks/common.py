@@ -1,0 +1,87 @@
+"""Shared setup for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, RouterConfig
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+from repro.core import mlp_router as R
+from repro.core import policy
+from repro.data.partition import client_slice, federated_split, flatten_clients
+from repro.data.synthetic import make_eval_corpus
+
+D_EMB = 48
+N_MODELS = 11
+N_TASKS = 8
+N_QUERIES = 6000
+
+RCFG = RouterConfig(d_emb=D_EMB, num_models=N_MODELS)
+FCFG = FedConfig()
+
+
+@functools.lru_cache(maxsize=4)
+def corpus_and_split(alpha: float = 0.6, seed: int = 0,
+                     n_queries: int = N_QUERIES):
+    corpus = make_eval_corpus(jax.random.PRNGKey(seed), n_queries=n_queries,
+                              n_tasks=N_TASKS, n_models=N_MODELS,
+                              d_emb=D_EMB)
+    fcfg = FedConfig(dirichlet_alpha=alpha, seed=seed)
+    split = federated_split(jax.random.PRNGKey(seed + 1), corpus, fcfg)
+    return corpus, split, fcfg
+
+
+def auc_of(pred_fn, test) -> float:
+    *_, auc = policy.eval_router(pred_fn, test["x"], test["acc_table"],
+                                 test["cost_table"])
+    return auc
+
+
+def mlp_pred(params):
+    return lambda x: R.apply_mlp_router(params, x)
+
+
+def kmeans_pred(router):
+    return lambda x: KR.predict(router, x)
+
+
+def train_fed_mlp(split, fcfg, rounds=30, seed=2):
+    params, hist = F.fedavg(jax.random.PRNGKey(seed), split["train"], RCFG,
+                            fcfg, rounds=rounds)
+    return params, hist
+
+
+def train_local_mlps(split, fcfg, steps=400, seed=100):
+    out = []
+    for i in range(split["train"]["x"].shape[0]):
+        p, _ = F.sgd_train(jax.random.PRNGKey(seed + i),
+                           client_slice(split["train"], i), RCFG, fcfg,
+                           steps=steps)
+        out.append(p)
+    return out
+
+
+def train_centralized(split, fcfg, steps=None, seed=4):
+    pooled = flatten_clients(split["train"])
+    steps = steps or fcfg.rounds * int(np.ceil(
+        split["train"]["x"].shape[1] / fcfg.batch_size))
+    p, _ = F.sgd_train(jax.random.PRNGKey(seed), pooled, RCFG, fcfg,
+                       steps=steps)
+    return p
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us(self, calls: int = 1) -> float:
+        return (time.time() - self.t0) * 1e6 / max(calls, 1)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

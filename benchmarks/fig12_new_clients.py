@@ -1,0 +1,63 @@
+"""Fig. 12 / App. D.3: onboarding new clients. Train with 7 clients, then 3
+new clients join; MLP continues training on the new clients only with a
+distillation regularizer; K-means does a weighted stat update. Global-test
+AUC before/after, plus a forgetting check on the original clients."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import expansion as E
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+
+
+def _subset(train, idx):
+    return jax.tree.map(lambda a: a[np.asarray(idx)], train)
+
+
+def run():
+    _, split, fcfg = C.corpus_and_split()
+    tg = split["test_global"]
+    old_idx, new_idx = list(range(7)), [7, 8, 9]
+    t = C.Timer()
+
+    old_train = _subset(split["train"], old_idx)
+    new_train = _subset(split["train"], new_idx)
+
+    fed7, _ = F.fedavg(jax.random.PRNGKey(2), old_train, C.RCFG, fcfg,
+                       rounds=25)
+    auc_before = C.auc_of(C.mlp_pred(fed7), tg)
+    # gentler adaptation: lower lr + distillation anchor (App. D.3)
+    fcfg_adapt = dataclasses.replace(fcfg, lr=3e-4)
+    fed10, _ = E.onboard_clients_mlp(jax.random.PRNGKey(3), fed7, new_train,
+                                     C.RCFG, fcfg_adapt, rounds=10, beta=2.0)
+    auc_after = C.auc_of(C.mlp_pred(fed10), tg)
+
+    # forgetting check on original clients' local tests
+    old_tests = [split["test"][i] for i in old_idx
+                 if split["test"][i]["x"].shape[0] >= 10]
+    f_before = np.mean([C.auc_of(C.mlp_pred(fed7), te) for te in old_tests])
+    f_after = np.mean([C.auc_of(C.mlp_pred(fed10), te) for te in old_tests])
+
+    km7 = KR.fed_kmeans_router(jax.random.PRNGKey(4), old_train, C.RCFG)
+    km10 = KR.merge_client_stats(km7, new_train, C.RCFG)
+    auc_km_before = C.auc_of(C.kmeans_pred(km7), tg)
+    auc_km_after = C.auc_of(C.kmeans_pred(km10), tg)
+
+    us = t.us()
+    C.emit("fig12_mlp_auc_before_join", us, f"{auc_before:.4f}")
+    C.emit("fig12_mlp_auc_after_join", us, f"{auc_after:.4f}")
+    C.emit("fig12_mlp_old_clients_auc_before", us, f"{f_before:.4f}")
+    C.emit("fig12_mlp_old_clients_auc_after", us, f"{f_after:.4f}")
+    C.emit("fig12_kmeans_auc_before_join", us, f"{auc_km_before:.4f}")
+    C.emit("fig12_kmeans_auc_after_join", us, f"{auc_km_after:.4f}")
+    return {"mlp": (auc_before, auc_after),
+            "kmeans": (auc_km_before, auc_km_after)}
+
+
+if __name__ == "__main__":
+    run()

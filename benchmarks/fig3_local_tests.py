@@ -1,0 +1,44 @@
+"""Fig. 3/10/11: federated vs client-local routers on each client's LOCAL
+test set — the in-distribution model-coverage effect."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import kmeans_router as KR
+
+
+def run():
+    _, split, fcfg = C.corpus_and_split()
+    t = C.Timer()
+    fed_mlp, _ = C.train_fed_mlp(split, fcfg)
+    locals_mlp = C.train_local_mlps(split, fcfg)
+    r_fed = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
+                                 C.RCFG)
+
+    fed_m, loc_m, fed_k, loc_k = [], [], [], []
+    for i, test_i in enumerate(split["test"]):
+        if test_i["x"].shape[0] < 10:
+            continue
+        fed_m.append(C.auc_of(C.mlp_pred(fed_mlp), test_i))
+        loc_m.append(C.auc_of(C.mlp_pred(locals_mlp[i]), test_i))
+        fed_k.append(C.auc_of(C.kmeans_pred(r_fed), test_i))
+        r_i = KR.local_kmeans_router(
+            jax.random.PRNGKey(40 + i),
+            jax.tree.map(lambda a: a[i], split["train"]), C.RCFG)
+        loc_k.append(C.auc_of(C.kmeans_pred(r_i), test_i))
+
+    us = t.us()
+    C.emit("fig3_mlp_fed_mean_local_auc", us, f"{np.mean(fed_m):.4f}")
+    C.emit("fig3_mlp_local_mean_local_auc", us, f"{np.mean(loc_m):.4f}")
+    C.emit("fig3_kmeans_fed_mean_local_auc", us, f"{np.mean(fed_k):.4f}")
+    C.emit("fig3_kmeans_local_mean_local_auc", us, f"{np.mean(loc_k):.4f}")
+    wins = sum(f >= l for f, l in zip(fed_m, loc_m))
+    C.emit("fig3_mlp_fed_wins_clients", us, f"{wins}/{len(fed_m)}")
+    return {"mlp": (np.mean(fed_m), np.mean(loc_m)),
+            "kmeans": (np.mean(fed_k), np.mean(loc_k))}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,102 @@
+"""Fig. 4 / §6.3: onboarding new models. Three models are withheld during
+initial training, then introduced via a 10%-of-prompts calibration subset:
+MLP gets fresh heads trained with a frozen trunk; K-means gets new
+per-cluster statistics. Frontier AUC before vs after expansion."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import expansion as E
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+from repro.core import policy
+from repro.data.partition import federated_split
+from repro.data.synthetic import observe
+
+
+def _restricted_pred(pred, keep):
+    def f(x):
+        A, Cc = pred(x)
+        return A[:, keep], Cc[:, keep]
+    return f
+
+
+def run():
+    corpus, _, _ = C.corpus_and_split()
+    M = C.N_MODELS
+    withheld = [M - 3, M - 2, M - 1]
+    base_models = list(range(M - 3))
+    fcfg = dataclasses.replace(C.FCFG, seed=11)
+    split = federated_split(jax.random.PRNGKey(9), corpus, fcfg,
+                            model_subset=base_models)
+    tg = split["test_global"]
+    rcfg8 = dataclasses.replace(C.RCFG, num_models=M - 3)
+    t = C.Timer()
+
+    # ---- initial training on the reduced pool
+    fed8, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], rcfg8, fcfg)
+    auc_before = policy.eval_router(
+        lambda x: F.R.apply_mlp_router(fed8, x), tg["x"],
+        tg["acc_table"][:, base_models], tg["cost_table"][:, base_models])[-1]
+
+    km8 = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"], rcfg8,
+                               num_models=M - 3)
+
+    # ---- calibration set: 10% of each client's prompts × 3 new models
+    rng = np.random.default_rng(0)
+    calib_q = []
+    for tr in split["train_idx"]:
+        k = max(1, len(tr) // 10)
+        calib_q.extend(rng.choice(tr, size=k, replace=False).tolist())
+    calib_q = np.asarray(calib_q)
+    xs, ms, accs, costs = [], [], [], []
+    for j, m_new in enumerate(withheld):
+        a, cst = observe(jax.random.PRNGKey(50 + j), corpus,
+                         jnp.asarray(calib_q),
+                         jnp.full(len(calib_q), m_new))
+        xs.append(np.asarray(corpus["x"])[calib_q])
+        ms.append(np.full(len(calib_q), m_new))
+        accs.append(np.asarray(a))
+        costs.append(np.asarray(cst))
+    calib = {"x": jnp.asarray(np.concatenate(xs)),
+             "m": jnp.asarray(np.concatenate(ms), jnp.int32),
+             "acc": jnp.asarray(np.concatenate(accs)),
+             "cost": jnp.asarray(np.concatenate(costs)),
+             "w": jnp.ones(3 * len(calib_q))}
+
+    # ---- MLP: append + train only new heads (frozen trunk)
+    fed11, _ = E.onboard_models_mlp(jax.random.PRNGKey(4), fed8, calib,
+                                    rcfg8, fcfg, 3, steps=400)
+    auc_after = policy.eval_router(
+        lambda x: F.R.apply_mlp_router(fed11, x), tg["x"], tg["acc_table"],
+        tg["cost_table"])[-1]
+
+    # ---- K-means: training-free stat estimation per new model
+    km11 = km8
+    for j, m_new in enumerate(withheld):
+        sel = slice(j * len(calib_q), (j + 1) * len(calib_q))
+        km11 = KR.add_model_stats(km11, {k: calib[k][sel]
+                                         for k in ("x", "acc", "cost", "w")})
+    auc_km_before = policy.eval_router(
+        lambda x: KR.predict(km8, x), tg["x"],
+        tg["acc_table"][:, base_models], tg["cost_table"][:, base_models])[-1]
+    auc_km_after = policy.eval_router(
+        lambda x: KR.predict(km11, x), tg["x"], tg["acc_table"],
+        tg["cost_table"])[-1]
+
+    us = t.us()
+    C.emit("fig4_mlp_auc_before_expansion", us, f"{auc_before:.4f}")
+    C.emit("fig4_mlp_auc_after_expansion", us, f"{auc_after:.4f}")
+    C.emit("fig4_kmeans_auc_before_expansion", us, f"{auc_km_before:.4f}")
+    C.emit("fig4_kmeans_auc_after_expansion", us, f"{auc_km_after:.4f}")
+    return {"mlp": (auc_before, auc_after),
+            "kmeans": (auc_km_before, auc_km_after)}
+
+
+if __name__ == "__main__":
+    run()

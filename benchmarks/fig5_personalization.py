@@ -1,0 +1,99 @@
+"""Fig. 5 / §6.4: adaptive personalization under extreme heterogeneity
+(Dirichlet α = 0.03). Per-client local-test AUC for federated, client-local,
+and the adaptive federated/local mixture.
+
+Deviation from the paper, documented in EXPERIMENTS.md: the paper calibrates
+on the SAME training points used to fit the local router; with our tiny
+extreme-α clients the local MLP memorizes its binary accuracy labels
+(train-MAE → 0), which collapses the mixture weight onto the overfit local
+router. We therefore hold out 20% of each client's training rows for
+calibration (still the client's own offline data — no extra model calls),
+which restores the paper's qualitative result. Both variants are emitted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import kmeans_router as KR
+from repro.core import personalization as P
+from repro.data.partition import client_slice
+
+
+def _holdout(di, frac=0.2, seed=0):
+    """Split one client's rows into fit/calibration via the w mask."""
+    rng = np.random.default_rng(seed)
+    w = np.asarray(di["w"])
+    idx = np.where(w > 0)[0]
+    rng.shuffle(idx)
+    n_cal = max(1, int(len(idx) * frac))
+    cal_idx = idx[:n_cal]
+    w_fit, w_cal = w.copy(), np.zeros_like(w)
+    w_fit[cal_idx] = 0.0
+    w_cal[cal_idx] = 1.0
+    fit = dict(di); cal = dict(di)
+    fit["w"] = jnp.asarray(w_fit)
+    cal["w"] = jnp.asarray(w_cal)
+    return fit, cal
+
+
+def run():
+    _, split, fcfg = C.corpus_and_split(alpha=0.03, seed=7)
+    t = C.Timer()
+    fed_mlp, _ = C.train_fed_mlp(split, fcfg)
+    locals_mlp = C.train_local_mlps(split, fcfg)
+    km_fed = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
+                                  C.RCFG)
+
+    rows = {"fed": [], "loc": [], "ada": [], "ada_paper": [],
+            "kfed": [], "kloc": [], "kada": []}
+    for i, test_i in enumerate(split["test"]):
+        if test_i["x"].shape[0] < 10:
+            continue
+        di = client_slice(split["train"], i)
+        fit_i, cal_i = _holdout(di, seed=100 + i)
+        fed_fn = C.mlp_pred(fed_mlp)
+        loc_fn = C.mlp_pred(locals_mlp[i])
+        # holdout-calibrated local router (fit on 80%, calibrate on 20%)
+        from repro.core import federated as F
+        p_fit, _ = F.sgd_train(jax.random.PRNGKey(200 + i), fit_i, C.RCFG,
+                               fcfg, steps=300)
+        loc_fit_fn = C.mlp_pred(p_fit)
+        ada_fn, _ = P.make_personalized(fed_fn, loc_fit_fn, cal_i,
+                                        C.N_MODELS)
+        # paper-faithful variant: calibrate on the very training points
+        ada_p_fn, _ = P.make_personalized(fed_fn, loc_fn, di, C.N_MODELS)
+        rows["fed"].append(C.auc_of(fed_fn, test_i))
+        rows["loc"].append(C.auc_of(loc_fn, test_i))
+        rows["ada"].append(C.auc_of(ada_fn, test_i))
+        rows["ada_paper"].append(C.auc_of(ada_p_fn, test_i))
+
+        km_loc = KR.local_kmeans_router(jax.random.PRNGKey(60 + i), di,
+                                        C.RCFG)
+        km_fit = KR.local_kmeans_router(jax.random.PRNGKey(60 + i), fit_i,
+                                        C.RCFG)
+        kfed_fn = C.kmeans_pred(km_fed)
+        kloc_fn = C.kmeans_pred(km_loc)
+        kada_fn, _ = P.make_personalized(kfed_fn, C.kmeans_pred(km_fit),
+                                         cal_i, C.N_MODELS)
+        rows["kfed"].append(C.auc_of(kfed_fn, test_i))
+        rows["kloc"].append(C.auc_of(kloc_fn, test_i))
+        rows["kada"].append(C.auc_of(kada_fn, test_i))
+
+    us = t.us()
+    for k, v in rows.items():
+        C.emit(f"fig5_{k}_mean_local_auc", us, f"{np.mean(v):.4f}")
+    # adaptive must track (or beat) the better of fed/local per client
+    best = np.maximum(rows["fed"], rows["loc"])
+    C.emit("fig5_ada_vs_best_gap", us,
+           f"{np.mean(np.asarray(rows['ada']) - best):+.4f}")
+    n_fed_losses = sum(f < l - 0.01 for f, l in zip(rows["fed"], rows["loc"]))
+    C.emit("fig5_clients_where_fed_underperforms", us,
+           f"{n_fed_losses}/{len(rows['fed'])}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

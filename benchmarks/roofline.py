@@ -1,0 +1,54 @@
+"""Roofline table (deliverable g): reads the dry-run JSONL cache and prints
+per-(arch × shape × mesh) compute/memory/collective terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPs. Does NOT lower anything itself —
+run launch/dryrun.py first (it needs the 512-device process)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common as C
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun.jsonl"
+
+
+def load(tag=None):
+    recs = {}
+    if not RESULTS.exists():
+        return recs
+    for line in RESULTS.read_text().splitlines():
+        if not line.strip():
+            continue
+        r = json.loads(line)
+        if tag and r.get("tag") != tag:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))] = r
+    return recs
+
+
+def run():
+    recs = load()
+    n_ok = n_skip = n_err = 0
+    for key, r in sorted(recs.items()):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r.get('tag')}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            C.emit(name, 0.0, f"skipped:{r['reason']}")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            C.emit(name, 0.0, "ERROR")
+            continue
+        n_ok += 1
+        dom_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        C.emit(name, dom_us,
+               f"dom={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+               f"memory_ms={r['memory_s']*1e3:.2f};"
+               f"collective_ms={r['collective_s']*1e3:.2f};"
+               f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)}")
+    C.emit("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip};err={n_err}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

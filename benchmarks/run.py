@@ -1,0 +1,42 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig2_global_frontier",   # Fig. 2  fed vs local (global test)
+    "benchmarks.fig3_local_tests",       # Fig. 3/10/11  local tests
+    "benchmarks.fig9_centralized",       # Fig. 9  fed vs centralized
+    "benchmarks.fig4_new_models",        # Fig. 4  model onboarding
+    "benchmarks.fig12_new_clients",      # Fig. 12 client onboarding
+    "benchmarks.fig5_personalization",   # Fig. 5  adaptive personalization
+    "benchmarks.tab1_encoders",          # Tab. 1  encoder ablation
+    "benchmarks.appF_proxrouter",        # App. F  second benchmark
+    "benchmarks.thm51_convergence",      # Thm 5.1 convergence trend
+    "benchmarks.thm53_suboptimality",    # Thm 5.3 Õ(1/√D) subopt trend
+    "benchmarks.kernels_bench",          # kernel hot-path timings
+    "benchmarks.roofline",               # §Roofline table from the dry-run
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    for mod_name in MODULES:
+        if only and not any(o in mod_name for o in only):
+            continue
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0.0,EXCEPTION")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

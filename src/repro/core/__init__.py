@@ -1,0 +1,18 @@
+"""The paper's contribution: federated LLM-router training.
+
+  * policy            — utility U_λ, frontier sweep, AUC (§3, §6)
+  * mlp_router        — parametric router (§4.1)
+  * kmeans / kmeans_router — nonparametric router (§4.2, Alg. 2)
+  * federated         — FedAvg simulation (Alg. 1) + local/centralized ERM
+  * personalization   — adaptive federated/local mixture (§6.4)
+  * expansion         — model & client onboarding (§6.3, App. D.3)
+"""
+from repro.core import (  # noqa: F401
+    expansion,
+    federated,
+    kmeans,
+    kmeans_router,
+    mlp_router,
+    personalization,
+    policy,
+)

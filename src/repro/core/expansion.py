@@ -1,0 +1,66 @@
+"""Pool evolution (paper §6.3 + App. D.3).
+
+MLP-Router:
+  * model onboarding — append fresh head columns and train ONLY those
+    columns (trunk + existing heads frozen) on a small calibration subset.
+  * client onboarding — continued FedAvg restricted to the new clients with
+    a distillation regularizer toward the frozen pre-join router.
+
+K-Means-Router equivalents are training-free and live in kmeans_router.py
+(add_model_stats / merge_client_stats).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, RouterConfig
+from repro.core import federated as F
+from repro.core import mlp_router as R
+
+
+def add_models(params: dict, key, n_new: int) -> dict:
+    for _ in range(n_new):
+        key, sub = jax.random.split(key)
+        params = R.add_model_head(params, sub)
+    return params
+
+
+def new_head_freeze_mask(params: dict, n_new: int) -> dict:
+    """Gradient mask: 1 only on the last n_new head columns."""
+    def zeros_like(t):
+        return jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), t)
+
+    mask = zeros_like(params)
+    M = params["heads"]["acc_b"].shape[0]
+    col = (jnp.arange(M) >= M - n_new).astype(jnp.float32)
+    mask["heads"] = {
+        "acc_w": jnp.broadcast_to(col, params["heads"]["acc_w"].shape),
+        "acc_b": col,
+        "cost_w": jnp.broadcast_to(col, params["heads"]["cost_w"].shape),
+        "cost_b": col,
+    }
+    return mask
+
+
+def onboard_models_mlp(key, params, calib_data, rcfg: RouterConfig,
+                       fcfg: FedConfig, n_new: int, *, steps: int = 300):
+    """§6.3: train only the new columns on the calibration subset.
+    calib_data: flat {"x","m","acc","cost","w"} with m indexing the
+    EXPANDED pool (new models have indices ≥ M_old)."""
+    key, k_add = jax.random.split(key)
+    params = add_models(params, k_add, n_new)
+    freeze = new_head_freeze_mask(params, n_new)
+    params, losses = F.sgd_train(key, calib_data, rcfg, fcfg, steps=steps,
+                                 init=params, freeze=freeze)
+    return params, losses
+
+
+def onboard_clients_mlp(key, params, data_new, rcfg: RouterConfig,
+                        fcfg: FedConfig, *, rounds: int = 15,
+                        beta: float = 1.0):
+    """App. D.3: continued training using only newly joined clients, with
+    a distillation penalty toward the frozen pre-join parameters."""
+    theta0 = jax.tree.map(lambda a: a, params)  # frozen copy
+    return F.fedavg(key, data_new, rcfg, fcfg, rounds=rounds, init=params,
+                    distill=(theta0, beta))

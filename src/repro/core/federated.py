@@ -1,0 +1,195 @@
+"""Federated MLP-Router training — paper Algorithm 1 (+ Appendix C.1).
+
+Clients are simulated as a stacked, padded pytree so one ``vmap`` runs every
+client's local epoch in parallel; on a TPU mesh the same function is
+``shard_map``-ped over the "data" axis (clients ↔ devices) and the FedAvg
+aggregation becomes a weighted ``psum`` — see launch/fed_train.py.
+
+Client dataset layout (N clients, padded to D_max rows):
+  {"x": (N, D, d_emb), "m": (N, D) int32, "acc": (N, D), "cost": (N, D),
+   "w": (N, D) ∈ {0,1} valid-row mask}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, RouterConfig
+from repro.core import mlp_router as R
+from repro.train.optim import SGD, AdamW
+
+
+def dataset_sizes(data) -> jnp.ndarray:
+    return jnp.sum(data["w"], axis=-1)  # (N,)
+
+
+def _make_opt(fcfg: FedConfig, optimizer: str):
+    if optimizer == "adamw":
+        return AdamW(lr=fcfg.lr, weight_decay=fcfg.weight_decay,
+                     clip_norm=fcfg.clip_norm)
+    if optimizer == "sgd":
+        return SGD(lr=fcfg.lr, clip_norm=None)
+    raise ValueError(optimizer)
+
+
+def _distill_loss(params, theta0, x, w):
+    """App. D.3 regularizer: match the frozen base router's predictions."""
+    A, C = R.apply_mlp_router(params, x)
+    A0, C0 = R.apply_mlp_router(theta0, x)
+    per = jnp.mean((A - A0) ** 2 + (C - C0) ** 2, axis=-1)  # mean over models
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def client_update(params, data_i, key, rcfg: RouterConfig, fcfg: FedConfig,
+                  opt, max_steps: int, *, full_batch: bool = False,
+                  freeze=None, distill: Optional[tuple] = None):
+    """τ local steps (≈1 epoch: ⌈D_i/batch⌉ active steps) on one client."""
+    D_i = jnp.sum(data_i["w"]).astype(jnp.int32)
+    n_steps_i = jnp.ceil(D_i / fcfg.batch_size).astype(jnp.int32)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, batch, rng):
+        loss = R.router_loss(p, batch, rcfg, rng=rng)
+        if distill is not None:
+            theta0, beta = distill
+            loss = loss + beta * _distill_loss(p, theta0, batch["x"],
+                                               batch.get("w",
+                                                         jnp.ones(batch["x"].shape[0])))
+        return loss
+
+    def step(carry, s):
+        params, opt_state, key = carry
+        key, k_idx, k_drop = jax.random.split(key, 3)
+        if full_batch:
+            batch = data_i
+            rng = None
+        else:
+            idx = jax.random.randint(k_idx, (fcfg.batch_size,), 0,
+                                     jnp.maximum(D_i, 1))
+            batch = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data_i)
+            rng = k_drop
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+        if freeze is not None:
+            grads = jax.tree.map(lambda g, f: g * f, grads, freeze)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        if freeze is not None:  # gate the whole delta: weight decay too
+            new_params = jax.tree.map(
+                lambda n, o, f: n * f + o * (1 - f), new_params, params,
+                freeze)
+        active = s < n_steps_i
+        sel = lambda a, b: jax.tree.map(
+            lambda u, v: jnp.where(active, u, v), a, b)
+        return (sel(new_params, params), sel(new_opt, opt_state), key), loss
+
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, opt_state, key), jnp.arange(max_steps))
+    return params, jnp.mean(losses)
+
+
+def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
+                 opt, max_steps: int, *, full_batch=False, freeze=None,
+                 distill=None, client_mask=None, dp_sigma: float = 0.0):
+    """One communication round: local updates on active clients + weighted
+    aggregation (Alg. 1 lines 3–11). dp_sigma > 0 adds server-side Gaussian
+    noise to the aggregate (central-DP flavour of the paper's privacy
+    motivation; composes with secure aggregation, which is orthogonal)."""
+    N = data["x"].shape[0]
+    key, k_sel, k_cli, k_dp = jax.random.split(key, 4)
+    n_active = max(1, int(round(fcfg.participation * N)))
+    perm = jax.random.permutation(k_sel, N)
+    active = jnp.zeros((N,)).at[perm[:n_active]].set(1.0)
+    if client_mask is not None:  # restrict the eligible pool (App. D.3)
+        active = active * client_mask
+        active = jnp.where(jnp.sum(active) > 0, active, client_mask)
+
+    upd = functools.partial(client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
+                            max_steps=max_steps, full_batch=full_batch,
+                            freeze=freeze, distill=distill)
+    client_params, client_loss = jax.vmap(upd, in_axes=(None, 0, 0))(
+        params, data, jax.random.split(k_cli, N))
+
+    wts = dataset_sizes(data) * active
+    wts = wts / jnp.maximum(jnp.sum(wts), 1e-12)
+    new_params = jax.tree.map(
+        lambda stacked: jnp.tensordot(wts, stacked.astype(jnp.float32),
+                                      axes=1).astype(stacked.dtype),
+        client_params)
+    if dp_sigma > 0.0:
+        leaves, treedef = jax.tree.flatten(new_params)
+        keys = jax.random.split(k_dp, len(leaves))
+        leaves = [l + dp_sigma * jax.random.normal(k, l.shape, l.dtype)
+                  for l, k in zip(leaves, keys)]
+        new_params = jax.tree.unflatten(treedef, leaves)
+    avg_loss = jnp.sum(client_loss * wts)
+    return new_params, avg_loss
+
+
+def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
+           rounds: Optional[int] = None, optimizer: str = "adamw",
+           init=None, full_batch: bool = False, freeze=None, distill=None,
+           client_mask=None, dp_sigma: float = 0.0,
+           eval_fn: Optional[Callable] = None):
+    """Run T rounds of Algorithm 1. Returns (params, history dict)."""
+    rounds = rounds if rounds is not None else fcfg.rounds
+    opt = _make_opt(fcfg, optimizer)
+    D_max = data["x"].shape[1]
+    max_steps = 1 if full_batch else max(
+        1, int(np.ceil(D_max / fcfg.batch_size))) * fcfg.local_epochs
+    key, k_init = jax.random.split(key)
+    params = init if init is not None else R.init_mlp_router(key=k_init,
+                                                             cfg=rcfg)
+    round_fn = jax.jit(functools.partial(
+        fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=opt, max_steps=max_steps,
+        full_batch=full_batch, freeze=freeze, distill=distill,
+        client_mask=client_mask, dp_sigma=dp_sigma))
+    hist = {"loss": [], "eval": []}
+    for t in range(rounds):
+        key, k_r = jax.random.split(key)
+        params, loss = round_fn(params, data, k_r)
+        hist["loss"].append(float(loss))
+        if eval_fn is not None:
+            hist["eval"].append(eval_fn(params))
+    return params, hist
+
+
+# ---------------------------------------------------------------------------
+# Non-federated baselines (client-local / centralized ERM)
+# ---------------------------------------------------------------------------
+
+
+def sgd_train(key, data_i, rcfg: RouterConfig, fcfg: FedConfig, *,
+              steps: int, optimizer: str = "adamw", init=None, freeze=None):
+    """Plain minibatch training on a single (flat) dataset
+    {"x": (D,d), "m", "acc", "cost", "w"} — the no-FL baseline."""
+    opt = _make_opt(fcfg, optimizer)
+    key, k_init = jax.random.split(key)
+    params = init if init is not None else R.init_mlp_router(key=k_init,
+                                                             cfg=rcfg)
+    D_i = jnp.sum(data_i["w"]).astype(jnp.int32)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(carry, _):
+        params, opt_state, key = carry
+        key, k_idx, k_drop = jax.random.split(key, 3)
+        idx = jax.random.randint(k_idx, (fcfg.batch_size,), 0,
+                                 jnp.maximum(D_i, 1))
+        batch = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data_i)
+        loss, grads = jax.value_and_grad(
+            lambda p: R.router_loss(p, batch, rcfg, rng=k_drop))(params)
+        if freeze is not None:
+            grads = jax.tree.map(lambda g, f: g * f, grads, freeze)
+        new_params, opt_state = opt.update(grads, opt_state, params)
+        if freeze is not None:  # gate the whole delta: weight decay too
+            new_params = jax.tree.map(
+                lambda n, o, f: n * f + o * (1 - f), new_params, params,
+                freeze)
+        return (new_params, opt_state, key), loss
+
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, opt_state, key), None, length=steps)
+    return params, losses

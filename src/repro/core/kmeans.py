@@ -1,0 +1,76 @@
+"""Lloyd's K-means (paper Alg. 2 building block) in JAX.
+
+Supports per-point weights (server-side weighted K-means over client
+centroids) and validity masks (padded per-client datasets under vmap).
+Assignment uses the shared distance/argmin op (Pallas kernel on TPU,
+jnp oracle elsewhere) from ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _plusplus_init(key, X, w, K):
+    """k-means++ style seeding (weighted)."""
+    n = X.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.choice(k0, n, p=w / jnp.sum(w))
+    cents = jnp.zeros((K, X.shape[1]), X.dtype).at[0].set(X[first])
+
+    def body(i, carry):
+        cents, key = carry
+        d2 = jnp.min(
+            jnp.sum((X[:, None, :] - cents[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(K)[None, :] < i, 0.0, jnp.inf), axis=1)
+        p = d2 * w
+        p = jnp.where(jnp.isfinite(p), p, 0.0)
+        p = p / jnp.maximum(jnp.sum(p), 1e-12)
+        key, sub = jax.random.split(key)
+        nxt = jax.random.choice(sub, n, p=p)
+        return cents.at[i].set(X[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, K, body, (cents, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("K", "iters"))
+def _lloyd_once(key, X, w, K: int, iters: int):
+    cents = _plusplus_init(key, X, w, K)
+
+    def step(cents, _):
+        assign = kops.kmeans_assign(X, cents)               # (n,)
+        onehot = jax.nn.one_hot(assign, K, dtype=X.dtype)   # (n, K)
+        wv = onehot * w[:, None]
+        sums = wv.T @ X                                     # (K, d)
+        cnts = jnp.sum(wv, axis=0)                          # (K,)
+        new = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1e-12)[:, None],
+                        cents)  # keep empty clusters in place
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    assign = kops.kmeans_assign(X, cents)
+    d2 = jnp.sum((X - cents[assign]) ** 2, axis=-1)
+    inertia = jnp.sum(d2 * w)
+    return cents, inertia
+
+
+def kmeans(key, X: jnp.ndarray, K: int, *, iters: int = 30, n_init: int = 3,
+           weights=None, mask=None):
+    """Weighted Lloyd K-means with n_init restarts.
+
+    X: (n, d); weights: (n,) or None; mask: (n,) bool — masked-out points get
+    zero weight (padded rows). Returns (centroids (K,d), inertia).
+    """
+    n = X.shape[0]
+    w = jnp.ones((n,)) if weights is None else jnp.asarray(weights, jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    keys = jax.random.split(key, n_init)
+    cents, inertias = jax.vmap(lambda k: _lloyd_once(k, X, w, K, iters))(keys)
+    best = jnp.argmin(inertias)
+    return cents[best], inertias[best]

@@ -1,0 +1,150 @@
+"""Nonparametric K-Means-Router — paper Algorithm 2.
+
+One-shot federated clustering: (i) each client runs local K-means and
+uploads (centroid, size) pairs; (ii) the server runs size-weighted K-means
+over the uploaded centroids; (iii) clients compute per-(cluster, model)
+accuracy/cost sums + counts against the global centers; (iv) the server
+aggregates count-weighted statistics. Inference: nearest global center →
+cluster-level utility argmax.
+
+A router is a dict θ = {"centroids": (K,d), "A": (K,M), "C": (K,M),
+"n": (K,M)} — exactly the parameterization in Alg. 2 line 15. (k,m) cells
+with no samples fall back to that model's global (count-weighted) mean; a
+model never observed anywhere gets the pessimistic (acc 0, cost c_max).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+from repro.core.kmeans import kmeans
+from repro.kernels import ops as kops
+
+
+def _cluster_stats(centroids, data_i, K: int, M: int):
+    """Sums/counts of acc & cost per (cluster, model) for one client
+    (Alg. 2 lines 9–12 — we ship sums+counts ≡ means+counts)."""
+    assign = kops.kmeans_assign(data_i["x"], centroids)        # (D,)
+    idx = assign * M + data_i["m"]                              # (D,)
+    w = data_i["w"]
+    seg = functools.partial(jax.ops.segment_sum, num_segments=K * M,
+                            indices_are_sorted=False)
+    n = seg(w, idx).reshape(K, M)
+    a = seg(w * data_i["acc"], idx).reshape(K, M)
+    c = seg(w * data_i["cost"], idx).reshape(K, M)
+    return a, c, n
+
+
+def _finalize(a_sum, c_sum, n, c_max: float):
+    """Aggregate sums → estimators with the empty-cell fallback."""
+    has = n > 0
+    # global per-model backoff (count-weighted over clusters)
+    tot_n = jnp.sum(n, axis=0)                                  # (M,)
+    ga = jnp.where(tot_n > 0, jnp.sum(a_sum, 0) / jnp.maximum(tot_n, 1e-12), 0.0)
+    gc = jnp.where(tot_n > 0, jnp.sum(c_sum, 0) / jnp.maximum(tot_n, 1e-12),
+                   c_max)
+    A = jnp.where(has, a_sum / jnp.maximum(n, 1e-12), ga[None, :])
+    C = jnp.where(has, c_sum / jnp.maximum(n, 1e-12), gc[None, :])
+    return A, C
+
+
+def fed_kmeans_router(key, data, rcfg: RouterConfig, *, num_models=None,
+                      client_mask=None) -> dict:
+    """Algorithm 2. data: stacked padded client arrays (see federated.py)."""
+    N, D, d = data["x"].shape
+    M = num_models if num_models is not None else rcfg.num_models
+    kl, kg = jax.random.split(key)
+
+    # (i) local K-means per client
+    def local(key_i, data_i):
+        cents, _ = kmeans(key_i, data_i["x"], rcfg.k_local,
+                          iters=rcfg.kmeans_iters, n_init=rcfg.n_init,
+                          mask=data_i["w"] > 0)
+        sizes = jnp.bincount(kops.kmeans_assign(data_i["x"], cents),
+                             weights=data_i["w"], length=rcfg.k_local)
+        return cents, sizes
+
+    cents, sizes = jax.vmap(local)(jax.random.split(kl, N), data)
+    if client_mask is not None:
+        sizes = sizes * client_mask[:, None]
+
+    # (ii) server: size-weighted K-means over uploaded centroids
+    flat_c = cents.reshape(N * rcfg.k_local, d)
+    flat_w = sizes.reshape(N * rcfg.k_local)
+    centroids, _ = kmeans(kg, flat_c, rcfg.k_global,
+                          iters=rcfg.kmeans_iters, n_init=rcfg.n_init,
+                          weights=flat_w)
+
+    # (iii) clients → per-(cluster, model) stats; (iv) weighted aggregation
+    a, c, n = jax.vmap(lambda di: _cluster_stats(centroids, di,
+                                                 rcfg.k_global, M))(data)
+    if client_mask is not None:
+        m3 = client_mask[:, None, None]
+        a, c, n = a * m3, c * m3, n * m3
+    a, c, n = jnp.sum(a, 0), jnp.sum(c, 0), jnp.sum(n, 0)
+    A, C = _finalize(a, c, n, rcfg.c_max)
+    return {"centroids": centroids, "A": A, "C": C, "n": n}
+
+
+def local_kmeans_router(key, data_i, rcfg: RouterConfig, *,
+                        num_models=None, k=None) -> dict:
+    """Client-local (no-FL) baseline: own K-means + own statistics."""
+    M = num_models if num_models is not None else rcfg.num_models
+    K = k if k is not None else rcfg.k_local
+    centroids, _ = kmeans(key, data_i["x"], K, iters=rcfg.kmeans_iters,
+                          n_init=rcfg.n_init, mask=data_i["w"] > 0)
+    a, c, n = _cluster_stats(centroids, data_i, K, M)
+    A, C = _finalize(a, c, n, rcfg.c_max)
+    return {"centroids": centroids, "A": A, "C": C, "n": n}
+
+
+def predict(router: dict, x: jnp.ndarray):
+    """x: (Q, d) → (A (Q,M), C (Q,M)) cluster-level estimates."""
+    k = kops.kmeans_assign(x, router["centroids"])
+    return router["A"][k], router["C"][k]
+
+
+# ---------------------------------------------------------------------------
+# §6.3 model onboarding / App. D.3 client onboarding (training-free)
+# ---------------------------------------------------------------------------
+
+
+def add_model_stats(router: dict, calib, c_max: float = 1.0) -> dict:
+    """Onboard one new model from calibration evaluations
+    calib = {"x": (D,d), "acc": (D,), "cost": (D,), "w": (D,)}."""
+    K = router["centroids"].shape[0]
+    assign = kops.kmeans_assign(calib["x"], router["centroids"])
+    seg = functools.partial(jax.ops.segment_sum, num_segments=K)
+    n = seg(calib["w"], assign)
+    a = seg(calib["w"] * calib["acc"], assign)
+    c = seg(calib["w"] * calib["cost"], assign)
+    tot = jnp.maximum(jnp.sum(n), 1e-12)
+    ga, gc = jnp.sum(a) / tot, jnp.sum(c) / tot
+    A_new = jnp.where(n > 0, a / jnp.maximum(n, 1e-12), ga)
+    C_new = jnp.where(n > 0, c / jnp.maximum(n, 1e-12), gc)
+    return {
+        "centroids": router["centroids"],
+        "A": jnp.concatenate([router["A"], A_new[:, None]], axis=1),
+        "C": jnp.concatenate([router["C"], C_new[:, None]], axis=1),
+        "n": jnp.concatenate([router["n"], n[:, None]], axis=1),
+    }
+
+
+def merge_client_stats(router: dict, data_new, rcfg: RouterConfig,
+                       num_models=None) -> dict:
+    """New clients join (App. D.3): weighted update of cluster statistics
+    against the *existing* centers — no participation from old clients."""
+    M = num_models if num_models is not None else rcfg.num_models
+    K = router["centroids"].shape[0]
+    a, c, n = jax.vmap(lambda di: _cluster_stats(router["centroids"], di,
+                                                 K, M))(data_new)
+    a, c, n = jnp.sum(a, 0), jnp.sum(c, 0), jnp.sum(n, 0)
+    # recover old sums from means × counts, then combine
+    a_tot = router["A"] * router["n"] + a
+    c_tot = router["C"] * router["n"] + c
+    n_tot = router["n"] + n
+    A, C = _finalize(a_tot, c_tot, n_tot, rcfg.c_max)
+    return {"centroids": router["centroids"], "A": A, "C": C, "n": n_tot}

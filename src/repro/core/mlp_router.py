@@ -1,0 +1,98 @@
+"""Parametric MLP-Router (paper §4.1, Appendix C.1).
+
+Shared trunk: two hidden layers (512, 512), each Linear → LayerNorm → GELU →
+Dropout(0.1). Per-model heads: one accuracy logit (sigmoid at inference) and
+one normalized cost scalar per model, kept as (d_h, M) matrices so onboarding
+a model appends a column (§6.3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+
+
+def init_mlp_router(key, cfg: RouterConfig, num_models: Optional[int] = None) -> dict:
+    M = num_models if num_models is not None else cfg.num_models
+    dims = (cfg.d_emb,) + tuple(cfg.hidden)
+    keys = jax.random.split(key, len(cfg.hidden) + 2)
+    trunk = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        trunk.append({
+            "w": jax.random.normal(keys[i], (din, dout)) * (din ** -0.5),
+            "b": jnp.zeros((dout,)),
+            "ln_s": jnp.ones((dout,)),
+            "ln_b": jnp.zeros((dout,)),
+        })
+    dh = dims[-1]
+    ka, kc = jax.random.split(keys[-1])
+    heads = {
+        "acc_w": jax.random.normal(ka, (dh, M)) * (dh ** -0.5),
+        "acc_b": jnp.zeros((M,)),
+        "cost_w": jax.random.normal(kc, (dh, M)) * (dh ** -0.5),
+        "cost_b": jnp.zeros((M,)),
+    }
+    return {"trunk": trunk, "heads": heads}
+
+
+def trunk_apply(params: dict, x: jnp.ndarray, *, dropout: float = 0.0,
+                rng=None) -> jnp.ndarray:
+    h = x
+    for lyr in params["trunk"]:
+        h = h @ lyr["w"] + lyr["b"]
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.var(h, axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + 1e-5) * lyr["ln_s"] + lyr["ln_b"]
+        h = jax.nn.gelu(h)
+        if dropout > 0.0 and rng is not None:
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1.0 - dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h
+
+
+def apply_mlp_router(params: dict, x: jnp.ndarray, *, dropout: float = 0.0,
+                     rng=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, d_emb) → (A (B, M) in [0,1], C (B, M))."""
+    h = trunk_apply(params, x, dropout=dropout, rng=rng)
+    hd = params["heads"]
+    A = jax.nn.sigmoid(h @ hd["acc_w"] + hd["acc_b"])
+    C = h @ hd["cost_w"] + hd["cost_b"]
+    return A, C
+
+
+def router_loss(params: dict, batch: dict, cfg: RouterConfig, *,
+                rng=None) -> jnp.ndarray:
+    """Paper Eq. 3: MSE on the single logged model per sample.
+
+    batch: {"x": (B,d), "m": (B,), "acc": (B,), "cost": (B,),
+            optional "w": (B,) sample weights (0 for padding)}.
+    """
+    A, C = apply_mlp_router(params, batch["x"], dropout=cfg.dropout, rng=rng)
+    m = batch["m"][:, None]
+    a_hat = jnp.take_along_axis(A, m, axis=1)[:, 0]
+    c_hat = jnp.take_along_axis(C, m, axis=1)[:, 0]
+    err = (a_hat - batch["acc"]) ** 2 + (c_hat - batch["cost"]) ** 2
+    w = batch.get("w")
+    if w is None:
+        return jnp.mean(err)
+    return jnp.sum(err * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def add_model_head(params: dict, key) -> dict:
+    """§6.3 model onboarding: append a fresh column to each head."""
+    hd = params["heads"]
+    dh = hd["acc_w"].shape[0]
+    ka, kc = jax.random.split(key)
+    new = {
+        "acc_w": jnp.concatenate(
+            [hd["acc_w"], jax.random.normal(ka, (dh, 1)) * dh ** -0.5], axis=1),
+        "acc_b": jnp.concatenate([hd["acc_b"], jnp.zeros((1,))]),
+        "cost_w": jnp.concatenate(
+            [hd["cost_w"], jax.random.normal(kc, (dh, 1)) * dh ** -0.5], axis=1),
+        "cost_b": jnp.concatenate([hd["cost_b"], jnp.zeros((1,))]),
+    }
+    return {"trunk": params["trunk"], "heads": new}

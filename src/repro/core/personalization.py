@@ -1,0 +1,67 @@
+"""Adaptive personalization (paper §6.4).
+
+Each client holds the federated estimators and its locally trained
+estimators; per model m it computes mean-absolute calibration errors on its
+own training samples (no extra model calls) and mixes the two routers with
+weights inversely proportional to those errors:
+
+  w_a^{(i,m)} = e(A^fed_m) / (e(A^fed_m) + e(A^loc_m))        (local weight)
+  A_mix = w_a · A^loc + (1 − w_a) · A^fed          (same for cost with w_c)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def calibration_errors(predict_fn, data_i, num_models: int):
+    """MAE of a router's acc/cost predictions on one client's own logged
+    samples, per model. Models never logged locally get error = +inf (the
+    mixture then falls back entirely to the other estimator).
+
+    predict_fn(x) → (A (D,M), C (D,M)).
+    Returns (e_acc (M,), e_cost (M,)).
+    """
+    A, C = predict_fn(data_i["x"])
+    m = data_i["m"][:, None]
+    a_hat = jnp.take_along_axis(A, m, axis=1)[:, 0]
+    c_hat = jnp.take_along_axis(C, m, axis=1)[:, 0]
+    ae = jnp.abs(a_hat - data_i["acc"]) * data_i["w"]
+    ce = jnp.abs(c_hat - data_i["cost"]) * data_i["w"]
+    onehot = (jnp.arange(num_models)[None, :] == data_i["m"][:, None])
+    onehot = onehot * data_i["w"][:, None]
+    n_m = jnp.sum(onehot, axis=0)                       # (M,)
+    e_acc = jnp.where(n_m > 0, (ae[:, None] * onehot).sum(0) /
+                      jnp.maximum(n_m, 1e-12), jnp.inf)
+    e_cost = jnp.where(n_m > 0, (ce[:, None] * onehot).sum(0) /
+                       jnp.maximum(n_m, 1e-12), jnp.inf)
+    return e_acc, e_cost
+
+
+def mixture_weights(e_fed, e_loc):
+    """Local-estimator weight per model; safe at 0/∞ edge cases."""
+    both_inf = jnp.isinf(e_fed) & jnp.isinf(e_loc)
+    w = jnp.where(jnp.isinf(e_loc), 0.0,
+                  jnp.where(jnp.isinf(e_fed), 1.0,
+                            e_fed / jnp.maximum(e_fed + e_loc, 1e-12)))
+    return jnp.where(both_inf, 0.0, w)
+
+
+def personalized_predict(fed_fn, loc_fn, w_a, w_c):
+    """Build the mixed predictor (closure over per-model weights)."""
+    def predict(x):
+        Af, Cf = fed_fn(x)
+        Al, Cl = loc_fn(x)
+        A = w_a[None, :] * Al + (1.0 - w_a)[None, :] * Af
+        C = w_c[None, :] * Cl + (1.0 - w_c)[None, :] * Cf
+        return A, C
+    return predict
+
+
+def make_personalized(fed_fn, loc_fn, data_i, num_models: int):
+    """End-to-end §6.4: calibrate both routers on the client's training
+    samples, return the mixed predictor."""
+    ef_a, ef_c = calibration_errors(fed_fn, data_i, num_models)
+    el_a, el_c = calibration_errors(loc_fn, data_i, num_models)
+    w_a = mixture_weights(ef_a, el_a)
+    w_c = mixture_weights(ef_c, el_c)
+    return personalized_predict(fed_fn, loc_fn, w_a, w_c), (w_a, w_c)

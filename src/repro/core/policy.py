@@ -1,0 +1,72 @@
+"""Routing policy: utility U_λ(x,m) = A(x,m) − λ·C(x,m)  (paper Eq. 1/4).
+
+Also the evaluation protocol of §6: accuracy–cost frontiers swept over a log
+grid of λ and the normalized area-under-curve (AUC) summary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def utility(A: jnp.ndarray, C: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """A, C: (..., M) estimated accuracy / cost → utility (..., M)."""
+    return A - lam * C
+
+
+def route(A: jnp.ndarray, C: jnp.ndarray, lam) -> jnp.ndarray:
+    """argmax_m U_λ — returns chosen model indices (...,)."""
+    return jnp.argmax(utility(A, C, lam), axis=-1)
+
+
+def lambda_grid(num: int = 100, lo: float = 1e-2, hi: float = 1e7) -> np.ndarray:
+    """Paper Appendix C: log grid λ ∈ [1e-2, 1e7], 100 points."""
+    return np.logspace(np.log10(lo), np.log10(hi), num)
+
+
+def frontier(A_est: jnp.ndarray, C_est: jnp.ndarray,
+             acc_true: jnp.ndarray, cost_true: jnp.ndarray,
+             lams=None) -> tuple[np.ndarray, np.ndarray]:
+    """Sweep λ; route with *estimates*, score with *true* tables.
+
+    A_est, C_est, acc_true, cost_true: (Q, M). Returns (costs, accs) arrays
+    over the λ grid (mean over test queries).
+    """
+    lams = lambda_grid() if lams is None else lams
+    lams_j = jnp.asarray(np.asarray(lams))
+
+    def one(lam):
+        m = route(A_est, C_est, lam)  # (Q,)
+        acc = jnp.take_along_axis(acc_true, m[:, None], axis=1)[:, 0]
+        cost = jnp.take_along_axis(cost_true, m[:, None], axis=1)[:, 0]
+        return jnp.mean(cost), jnp.mean(acc)
+
+    costs, accs = jax.vmap(one)(lams_j)
+    return np.asarray(costs), np.asarray(accs)
+
+
+def frontier_auc(costs: np.ndarray, accs: np.ndarray) -> float:
+    """Normalized AUC: integrate the *upper envelope* of accuracy as a
+    function of cost, divided by the observed cost range (paper §6)."""
+    costs = np.asarray(costs, dtype=np.float64)
+    accs = np.asarray(accs, dtype=np.float64)
+    order = np.argsort(costs)
+    c, a = costs[order], accs[order]
+    # Upper envelope: running max (a rational operator never does worse by
+    # spending more — mirrors how the paper's monotone frontiers look).
+    a = np.maximum.accumulate(a)
+    # collapse duplicate costs to their best accuracy
+    uc, idx = np.unique(c, return_index=True)
+    ua = np.maximum.reduceat(a, idx)
+    if len(uc) < 2:
+        return float(ua[-1])
+    area = np.trapezoid(ua, uc)
+    return float(area / (uc[-1] - uc[0]))
+
+
+def eval_router(predict_fn, x_test, acc_true, cost_true, lams=None):
+    """predict_fn(x) → (A_est, C_est) each (Q, M). Returns (costs, accs, auc)."""
+    A_est, C_est = predict_fn(x_test)
+    costs, accs = frontier(A_est, C_est, acc_true, cost_true, lams)
+    return costs, accs, frontier_auc(costs, accs)

@@ -1,0 +1,51 @@
+"""Secure aggregation simulation (Bonawitz et al. 2016, cited in §2/App. A).
+
+Pairwise additive masking: every client pair (i, j) derives a shared mask
+from a common PRNG seed; client i ADDS the pair mask when i < j and
+SUBTRACTS it when i > j, so all masks cancel exactly in the server's sum —
+the server learns only Σᵢ wᵢ·θᵢ, never any individual θᵢ. This composes
+with the FedAvg aggregation (Alg. 1 line 11) and with central-DP noise
+(``fedavg(dp_sigma=…)``); dropout recovery/key agreement are out of scope
+for the simulation (see the paper for the full protocol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pair_key(round_key, i: int, j: int):
+    """Shared key for the unordered pair {i, j} (both clients derive it)."""
+    lo, hi = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(jax.random.fold_in(round_key, lo), hi)
+
+
+def _mask_like(key, tree, scale: float):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    masks = [scale * jax.random.normal(k, l.shape, jnp.float32)
+             for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, masks)
+
+
+def mask_update(round_key, client_id: int, n_clients: int, update,
+                weight: float, *, scale: float = 10.0):
+    """Client-side: weight the update and add the pairwise masks.
+    Returns the masked contribution wᵢ·θᵢ + Σⱼ ±mask_{ij}."""
+    out = jax.tree.map(lambda a: weight * a.astype(jnp.float32), update)
+    for j in range(n_clients):
+        if j == client_id:
+            continue
+        m = _mask_like(_pair_key(round_key, client_id, j), update, scale)
+        sign = 1.0 if client_id < j else -1.0
+        out = jax.tree.map(lambda a, mm: a + sign * mm, out, m)
+    return out
+
+
+def secure_aggregate(masked_contributions, total_weight: float):
+    """Server-side: sum the masked contributions (masks cancel) and
+    normalize. The server never handles an unmasked individual update."""
+    total = masked_contributions[0]
+    for c in masked_contributions[1:]:
+        total = jax.tree.map(jnp.add, total, c)
+    return jax.tree.map(lambda a: a / max(total_weight, 1e-12), total)

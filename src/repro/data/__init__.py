@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_eval_corpus  # noqa: F401
+from repro.data.partition import federated_split   # noqa: F401

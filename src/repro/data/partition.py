@@ -1,0 +1,120 @@
+"""Federated partition of the evaluation corpus (paper §6 + App. B).
+
+  * query heterogeneity — Dirichlet(α) over task labels per client
+    (Yurochkin et al. 2019), α = 0.6 main / 0.03 extreme;
+  * model heterogeneity — a client-specific Dirichlet(0.45) distribution
+    over the model pool; each training query logs exactly ONE model drawn
+    from it (App. B.2);
+  * per-client 0.75/0.25 train/test split; the global test set is the union
+    of client test splits (App. C).
+
+Outputs stacked, padded arrays ready for vmap/shard_map (federated.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig
+from repro.data.synthetic import observe
+
+
+def federated_split(key, corpus: dict, fcfg: FedConfig, *,
+                    model_subset=None) -> dict:
+    """Returns {"train": stacked padded client data, "test": per-client test
+    dicts (x, acc_table, cost_table), "test_global": merged test dict}."""
+    N = fcfg.num_clients
+    Q = corpus["x"].shape[0]
+    M = corpus["n_models"]
+    T = corpus["n_tasks"]
+    rng = np.random.default_rng(fcfg.seed)
+    key, k_obs = jax.random.split(key)
+
+    task = np.asarray(corpus["task"])
+    # Dirichlet over clients per task
+    client_of = np.zeros(Q, dtype=np.int64)
+    for t in range(T):
+        idx = np.where(task == t)[0]
+        p = rng.dirichlet(np.full(N, fcfg.dirichlet_alpha))
+        client_of[idx] = rng.choice(N, size=len(idx), p=p)
+
+    # per-client model-logging distribution (App. B.2). ProxRouter-Data
+    # uses UNIFORM logging (model_alpha = inf → uniform rows).
+    if np.isinf(fcfg.model_alpha):
+        logging_p = np.full((N, M), 1.0 / M)
+    else:
+        logging_p = rng.dirichlet(np.full(M, fcfg.model_alpha), size=N)
+    if model_subset is not None:  # withheld-model experiments (§6.3)
+        mask = np.zeros(M)
+        mask[np.asarray(model_subset)] = 1.0
+        logging_p = logging_p * mask[None, :]
+        logging_p /= logging_p.sum(axis=1, keepdims=True)
+
+    train_idx, test_idx = [], []
+    model_of = np.zeros(Q, dtype=np.int64)
+    for i in range(N):
+        idx = np.where(client_of == i)[0]
+        rng.shuffle(idx)
+        n_tr = int(len(idx) * fcfg.train_frac)
+        tr, te = idx[:n_tr], idx[n_tr:]
+        train_idx.append(tr)
+        test_idx.append(te)
+        model_of[tr] = rng.choice(M, size=len(tr), p=logging_p[i])
+
+    # observed (acc, cost) for each training sample's single logged model
+    all_tr = np.concatenate(train_idx) if train_idx else np.zeros(0, np.int64)
+    acc_obs, cost_obs = observe(k_obs, corpus, jnp.asarray(all_tr),
+                                jnp.asarray(model_of[all_tr]))
+    acc_obs = np.asarray(acc_obs)
+    cost_obs = np.asarray(cost_obs)
+    obs_of = {int(q): (acc_obs[j], cost_obs[j]) for j, q in enumerate(all_tr)}
+
+    D_max = max(1, max(len(t) for t in train_idx))
+    d = corpus["x"].shape[1]
+    x_np = np.asarray(corpus["x"])
+    train = {
+        "x": np.zeros((N, D_max, d), np.float32),
+        "m": np.zeros((N, D_max), np.int32),
+        "acc": np.zeros((N, D_max), np.float32),
+        "cost": np.zeros((N, D_max), np.float32),
+        "w": np.zeros((N, D_max), np.float32),
+    }
+    for i, tr in enumerate(train_idx):
+        n = len(tr)
+        train["x"][i, :n] = x_np[tr]
+        train["m"][i, :n] = model_of[tr]
+        train["acc"][i, :n] = [obs_of[int(q)][0] for q in tr]
+        train["cost"][i, :n] = [obs_of[int(q)][1] for q in tr]
+        train["w"][i, :n] = 1.0
+
+    acc_t = np.asarray(corpus["acc_table"])
+    cost_t = np.asarray(corpus["cost_table"])
+    tests = []
+    for te in test_idx:
+        tests.append({"x": jnp.asarray(x_np[te]),
+                      "acc_table": jnp.asarray(acc_t[te]),
+                      "cost_table": jnp.asarray(cost_t[te])})
+    all_te = np.concatenate(test_idx)
+    test_global = {"x": jnp.asarray(x_np[all_te]),
+                   "acc_table": jnp.asarray(acc_t[all_te]),
+                   "cost_table": jnp.asarray(cost_t[all_te])}
+
+    return {
+        "train": jax.tree.map(jnp.asarray, train),
+        "test": tests,
+        "test_global": test_global,
+        "train_idx": train_idx,
+        "logging_p": logging_p,
+    }
+
+
+def flatten_clients(train: dict) -> dict:
+    """Stacked (N, D, ...) client data → pooled flat dataset (centralized
+    baseline, App. D.1). Padding rows keep w = 0."""
+    return jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), train)
+
+
+def client_slice(train: dict, i: int) -> dict:
+    return jax.tree.map(lambda a: a[i], train)

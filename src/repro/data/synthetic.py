@@ -1,0 +1,74 @@
+"""Synthetic RouterBench-like query–model evaluation corpus.
+
+The real RouterBench/ProxRouter parquet dumps and the pretrained sentence
+encoders are unavailable offline (the repro≤2 data gate), so we generate a
+corpus with the same *statistical anatomy* the paper relies on:
+
+  * T task clusters in embedding space (RouterBench = 8 public datasets) —
+    queries are noisy samples around task centroids (what a sentence encoder
+    produces for semantically grouped prompts);
+  * M models with cost-correlated base quality plus per-task affinities —
+    so no model dominates at every price point and the accuracy–cost
+    frontier is non-trivial (RouterBench = 11 LLMs);
+  * observed accuracy is a Bernoulli draw of the latent per-(query, model)
+    success probability; observed cost is the latent cost + noise — matching
+    the paper's noisy-evaluation model (§3).
+
+Ground-truth acc/cost *tables* for every (query, model) pair are kept for
+test-time frontier scoring (the synthetic analogue of RouterBench's
+exhaustive evaluation grid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+
+
+def make_eval_corpus(key, *, n_queries: int = 8000, n_tasks: int = 8,
+                     n_models: int = 11, d_emb: int = 64,
+                     cluster_noise: float = 0.45, sharpness: float = 3.0,
+                     affinity: float = 0.35) -> dict:
+    keys = jax.random.split(key, 8)
+
+    # task geometry: well-separated centroids on the unit sphere × radius
+    mu = jax.random.normal(keys[0], (n_tasks, d_emb))
+    mu = 2.5 * mu / jnp.linalg.norm(mu, axis=1, keepdims=True)
+    task = jax.random.randint(keys[1], (n_queries,), 0, n_tasks)
+    x = mu[task] + cluster_noise * jax.random.normal(keys[2],
+                                                     (n_queries, d_emb))
+
+    # model economics: log-spaced price, quality correlated with price
+    cost_base = jnp.logspace(jnp.log10(0.02), jnp.log10(1.0), n_models)
+    quality = 0.15 + 0.55 * cost_base ** 0.3 + 0.08 * jax.random.normal(
+        keys[3], (n_models,))
+    task_affinity = affinity * jax.random.normal(keys[4],
+                                                 (n_models, n_tasks))
+
+    difficulty = 0.25 * jax.random.normal(keys[5], (n_queries,))
+    logits = sharpness * (quality[None, :] + task_affinity[:, task].T
+                          - 0.55 - difficulty[:, None])
+    acc_table = jax.nn.sigmoid(logits)                       # (Q, M)
+
+    length_factor = 0.8 + 0.4 * jax.random.uniform(keys[6], (n_queries,))
+    cost_table = jnp.clip(cost_base[None, :] * length_factor[:, None], 0, 1.0)
+
+    return {
+        "x": x, "task": task,
+        "acc_table": acc_table, "cost_table": cost_table,
+        "model_cost": cost_base, "model_quality": quality,
+        "n_tasks": n_tasks, "n_models": n_models,
+    }
+
+
+def observe(key, corpus: dict, q_idx: jnp.ndarray, m_idx: jnp.ndarray,
+            cost_noise: float = 0.02):
+    """Sample the (acc, cost) a client actually logs for (query, model)."""
+    ka, kc = jax.random.split(key)
+    p = corpus["acc_table"][q_idx, m_idx]
+    acc = jax.random.bernoulli(ka, p).astype(jnp.float32)
+    cost = corpus["cost_table"][q_idx, m_idx]
+    cost = jnp.clip(cost + cost_noise * jax.random.normal(kc, cost.shape),
+                    0.0, 1.0)
+    return acc, cost

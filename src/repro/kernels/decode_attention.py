@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: flash-decoding attention (one query token vs KV cache).
+
+The §Perf H3 hot-spot: batched decode reads the whole (B,Hkv,S,hd) cache
+every step. This kernel streams the cache through VMEM in seq blocks with
+online-softmax accumulation — the cache never materializes in f32 and never
+needs a layout transpose (head-major storage, matching
+models/attention.init_kv_cache). Grid (B, Hkv, nS); the innermost seq
+dimension accumulates (m, l, acc) in VMEM scratch. A validity bound masks
+unwritten cache slots (positions ≥ n_valid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            bs: int, ns: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (g, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < nv_ref[0, 0], s, NEG_INF)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ik == ns - 1)
+    def _final():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, n_valid, *,
+                            block_s: int = 512, interpret: bool = True):
+    """q: (B, Hkv, g, hd); caches: (B, Hkv, S, hd) head-major;
+    n_valid: scalar int32 — number of filled cache slots.
+    Returns (B, Hkv, g, hd)."""
+    B, Hkv, g, hd = q.shape
+    S = k_cache.shape[2]
+    bs = min(block_s, S)
+    assert S % bs == 0
+    ns = S // bs
+    nv = jnp.full((1, 1), n_valid, jnp.int32)
+
+    kern = functools.partial(_kernel, bs=bs, ns=ns, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(nv, q, k_cache, v_cache)
+    return out

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: K-means nearest-centroid assignment.
+
+The K-means router's hot loop (paper Alg. 2 lines 3/9) is a pairwise-distance
+argmin. TPU mapping: query rows are tiled into VMEM blocks; the centroid
+table (K ≤ a few hundred) stays VMEM-resident; −2·x·μᵀ runs on the MXU and
+the rank-1 ‖μ‖² correction + argmin run on the VPU. ‖x‖² is dropped
+(argmin-invariant), so the kernel is one matmul + a lane reduction.
+
+Block shapes are padded by the ops wrapper to (8, 128) multiples; padded
+centroids carry +inf bias so they are never selected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, bias_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)          # (BN, D)
+    c = c_ref[...].astype(jnp.float32)          # (K, D)
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BN, K) — MXU
+    c2 = jnp.sum(c * c, axis=1)                 # (K,)
+    dist = c2[None, :] - 2.0 * xc + bias_ref[...]  # (BN, K)
+    out_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(x: jnp.ndarray, cents: jnp.ndarray, *,
+                         block_n: int = 256, interpret: bool = True):
+    """x: (n, d), cents: (K, d) → (n,) int32."""
+    n, d = x.shape
+    K = cents.shape[0]
+
+    def rup(v, m):
+        return (v + m - 1) // m * m
+
+    n_p, d_p, k_p = rup(n, block_n), rup(d, 128), rup(max(K, 8), 128)
+    x_p = jnp.zeros((n_p, d_p), x.dtype).at[:n, :d].set(x)
+    c_p = jnp.zeros((k_p, d_p), cents.dtype).at[:K, :d].set(cents)
+    bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]  # (1, k_p)
+
+    grid = (n_p // block_n,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_p), lambda i: (i, 0)),
+            pl.BlockSpec((k_p, d_p), lambda i: (0, 0)),
+            pl.BlockSpec((1, k_p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        interpret=interpret,
+    )(x_p, c_p, bias)
+    return out[:n]

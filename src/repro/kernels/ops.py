@@ -1,0 +1,61 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; everywhere else (this CPU
+container) the pure-jnp oracles from ``ref.py`` are the default and the
+kernels execute under ``interpret=True`` only in tests. Select with
+``impl="ref" | "pallas"`` or the ``REPRO_KERNELS`` env var.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.router_utility import router_utility_pallas
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_KERNELS")
+    if env in ("ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kmeans_assign(x, cents, *, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return kmeans_assign_pallas(x, cents, interpret=_interpret())
+    return ref.kmeans_assign_ref(x, cents)
+
+
+def router_utility(h, acc_w, acc_b, cost_w, cost_b, lam, *,
+                   impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return router_utility_pallas(h, acc_w, acc_b, cost_w, cost_b, lam,
+                                     interpret=_interpret())
+    return ref.router_utility_ref(h, acc_w, acc_b, cost_w, cost_b, lam)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=_interpret())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return decode_attention_pallas(q, k_cache, v_cache, n_valid,
+                                       interpret=_interpret())
+    return ref.decode_attention_ref(q, k_cache, v_cache, n_valid)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against in tests, and the default implementation on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jnp.ndarray, cents: jnp.ndarray) -> jnp.ndarray:
+    """x: (n, d), cents: (K, d) → (n,) int32 nearest-centroid index.
+
+    Distance via the expansion ‖x−μ‖² = ‖x‖² − 2xμᵀ + ‖μ‖²; the ‖x‖² term is
+    constant per row and dropped (argmin-invariant).
+    """
+    xc = x.astype(jnp.float32) @ cents.astype(jnp.float32).T        # (n, K)
+    c2 = jnp.sum(cents.astype(jnp.float32) ** 2, axis=-1)           # (K,)
+    return jnp.argmin(c2[None, :] - 2.0 * xc, axis=-1).astype(jnp.int32)
+
+
+def router_utility_ref(h: jnp.ndarray, acc_w, acc_b, cost_w, cost_b,
+                       lam) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused routing decision on trunk features.
+
+    h: (n, dh) trunk hidden; heads (dh, M)/(M,).
+    Returns (choice (n,) int32, best utility (n,) f32).
+    """
+    hf = h.astype(jnp.float32)
+    A = jax.nn.sigmoid(hf @ acc_w.astype(jnp.float32) + acc_b)
+    C = hf @ cost_w.astype(jnp.float32) + cost_b
+    U = A - lam * C
+    return jnp.argmax(U, axis=-1).astype(jnp.int32), jnp.max(U, axis=-1)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B, S, H, hd) (same head count — GQA repeat done by caller).
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        m = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(m[None, None], scores, jnp.float32(-1e30))
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, n_valid):
+    """q: (B,Hkv,g,hd); caches (B,Hkv,S,hd) head-major; n_valid scalar.
+    Returns (B,Hkv,g,hd)."""
+    S = k_cache.shape[2]
+    hd = q.shape[-1]
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(S)[None, None, None, :] < n_valid
+    s = jnp.where(valid, s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

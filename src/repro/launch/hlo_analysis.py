@@ -1,0 +1,256 @@
+"""Roofline terms derived from the compiled dry-run artifact.
+
+``compiled.cost_analysis()`` on XLA:CPU counts while-loop bodies ONCE —
+useless for scan-over-layers models (verified empirically: a 28-layer scan
+reports ~1/28 of the matmul FLOPs). We therefore parse the post-SPMD,
+post-optimization HLO text ourselves and propagate costs through the call
+graph with loop-trip multipliers:
+
+  * FLOPs       — every ``dot`` op: 2 · |out| · Π(lhs contracting dims)
+                  (MXU work; elementwise FLOPs are ignored, as in MFU math);
+  * HBM bytes   — per top-level op: |output| + Σ|operands| (fusion interiors
+                  excluded — a fusion's HBM traffic is its operands/outputs;
+                  free ops: parameter/constant/GTE/tuple/bitcast);
+  * collectives — all-gather / all-reduce / reduce-scatter / all-to-all /
+                  collective-permute output shard bytes, by kind.
+
+Shapes in post-SPMD HLO are per-device ⇒ all sums are per-chip. While-loop
+trip counts are parsed from the max integer constant in the loop's condition
+computation (exact for lax.scan-generated loops).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "tuple-select"}
+# Pure elementwise ops fuse into neighbours on TPU — the XLA:CPU HLO we parse
+# keeps them unfused, so counting their traffic would badly overestimate a
+# TPU memory term. They are skipped (their inputs/outputs are counted at the
+# producing/consuming structural op).
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "negate",
+    "convert", "select", "compare", "and", "or", "not", "xor", "power",
+    "rsqrt", "sqrt", "cbrt", "tanh", "floor", "ceil", "sign", "clamp",
+    "broadcast", "reshape", "map", "erf", "logistic", "atan2", "is-finite",
+    "reduce-precision", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "rem",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\(?[^){=]*\)?[^{=(]*)\s"
+                     r"*([a-z][\w\-]*)\(")
+_SYM_RE = re.compile(r"%([\w.\-]+)\s*=\s*([a-z0-9]+\[[\d,]*\])")
+_PARAM_SYM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])")
+_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"=\s*[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPCODE_RE = re.compile(r"=\s*(\([^=]*?\)|[a-z0-9]+\[[\d,]*\]\S*|\S+)\s+"
+                        r"([a-z][\w\-]*)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+class HloCosts:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, list] = {}
+        self.entry = None
+        name, buf = None, []
+        for ln in hlo.splitlines():
+            m = _HEAD_RE.match(ln)
+            if m:
+                if name is not None:
+                    self.comps[name] = buf
+                name, buf = m.group(2), [ln]
+                if m.group(1):
+                    self.entry = name
+            elif name is not None:
+                buf.append(ln)
+        if name is not None:
+            self.comps[name] = buf
+
+        # global symbol table name → shape string
+        self.symtab: Dict[str, str] = {}
+        for m in _SYM_RE.finditer(hlo):
+            self.symtab.setdefault(m.group(1), m.group(2))
+        for m in _PARAM_SYM_RE.finditer(hlo):
+            self.symtab.setdefault(m.group(1), m.group(2))
+
+        self._direct = {}
+        self._edges = {}
+        self._trip = {}
+        for cname, lines in self.comps.items():
+            self._analyze(cname, lines)
+        self._memo = {}
+
+    # ------------------------------------------------------------------
+    def _analyze(self, cname: str, lines):
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(float)
+        edges = defaultdict(float)  # callee → multiplicity (trip-adjusted)
+        body = "\n".join(lines)
+
+        for m in _WHILE_RE.finditer(body):
+            cond, loop = m.group(1), m.group(2)
+            consts = [int(c) for c in _CONST_INT_RE.findall(
+                "\n".join(self.comps.get(cond, [])))]
+            trip = max(consts) if consts else 1
+            self._trip[loop] = trip
+            edges[loop] += trip
+            edges[cond] += trip
+
+        for ln in lines[1:]:
+            mo = _OPCODE_RE.search(ln)
+            if not mo:
+                continue
+            out_shape, op = mo.group(1), mo.group(2)
+            close = ln.find(")", mo.end())
+            operand_str = ln[mo.end():close if close != -1 else len(ln)]
+            operands = _OPERAND_RE.findall(operand_str)
+
+            if op in ("fusion", "call"):
+                for cm in _CALL_RE.finditer(ln):
+                    if cm.group(1) in self.comps:
+                        edges[cm.group(1)] += 1
+            if op == "conditional":
+                bm = _BRANCH_RE.search(ln)
+                if bm:
+                    for c in _OPERAND_RE.findall(bm.group(1)):
+                        edges[c] += 1
+
+            if op == "dot":
+                out_dims = _shape_dims(out_shape) or []
+                n_out = 1
+                for d in out_dims:
+                    n_out *= d
+                cd = _LHS_CDIMS_RE.search(ln)
+                k = 1
+                if cd and operands:
+                    lhs_shape = self.symtab.get(operands[0])
+                    ldims = _shape_dims(lhs_shape) if lhs_shape else None
+                    if ldims is not None and cd.group(1):
+                        for i in cd.group(1).split(","):
+                            if int(i) < len(ldims):
+                                k *= ldims[int(i)]
+                flops += 2.0 * n_out * k
+
+            for cop in COLLECTIVE_OPS:
+                if op == cop or op == cop + "-start":
+                    coll[cop] += _shape_bytes(out_shape)
+
+            if op in _FREE_OPS or op in _ELEMENTWISE or \
+                    op in ("while", "conditional") or op.endswith("-done"):
+                continue
+            out_b = _shape_bytes(out_shape)
+            if op == "dynamic-update-slice":
+                # in-place on TPU: traffic = read+write of the update slice
+                upd = self.symtab.get(operands[1]) if len(operands) > 1 else None
+                bytes_ += 2 * _shape_bytes(upd) if upd else out_b
+                continue
+            if op == "dynamic-slice" or op == "gather":
+                bytes_ += 2 * out_b
+                continue
+            if op == "fusion":
+                callee = None
+                cm = _CALL_RE.search(ln)
+                if cm:
+                    callee = cm.group(1)
+                body_txt = "\n".join(self.comps.get(callee, []))
+                if "dynamic-update-slice(" in body_txt:
+                    # in-place update fusion: skip pass-through buffer
+                    # operands (those as large as the output)
+                    b = 0
+                    for opn in operands:
+                        s = self.symtab.get(opn)
+                        if s and _shape_bytes(s) < out_b:
+                            b += _shape_bytes(s)
+                    bytes_ += 2 * b
+                    continue
+            b = out_b
+            for opn in operands:
+                s = self.symtab.get(opn)
+                if s:
+                    b += _shape_bytes(s)
+            bytes_ += b
+
+        self._direct[cname] = (flops, bytes_, dict(coll))
+        self._edges[cname] = dict(edges)
+
+    # ------------------------------------------------------------------
+    def _cost_of(self, cname: str):
+        if cname in self._memo:
+            return self._memo[cname]
+        self._memo[cname] = (0.0, 0.0, {})  # cycle guard
+        f, b, c = self._direct.get(cname, (0.0, 0.0, {}))
+        c = dict(c)
+        for callee, mult in self._edges.get(cname, {}).items():
+            if callee == cname:
+                continue
+            cf, cb, cc = self._cost_of(callee)
+            f += cf * mult
+            b += cb * mult
+            for k, v in cc.items():
+                c[k] = c.get(k, 0.0) + v * mult
+        self._memo[cname] = (f, b, c)
+        return self._memo[cname]
+
+    def totals(self) -> dict:
+        entry = self.entry or (list(self.comps)[-1] if self.comps else None)
+        if entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        f, b, c = self._cost_of(entry)
+        return {"flops": f, "bytes": b, "collectives": c,
+                "collective_bytes": sum(c.values())}
+
+
+def roofline_terms(hlo: str, *, n_chips: int, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> dict:
+    """Three roofline terms (seconds) from per-chip parsed costs."""
+    t = HloCosts(hlo).totals()
+    compute_s = t["flops"] / peak_flops
+    memory_s = t["bytes"] / hbm_bw
+    coll_s = t["collective_bytes"] / ici_bw
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dom,
+            "hlo_flops_per_chip": t["flops"],
+            "hlo_bytes_per_chip": t["bytes"],
+            "collective_bytes_per_chip": t["collective_bytes"],
+            "collectives": t["collectives"]}

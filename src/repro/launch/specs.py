@@ -1,0 +1,181 @@
+"""Parameter / input PartitionSpecs for the production meshes.
+
+Layout policy (DESIGN.md §5):
+  * batch            → ("pod", "data")          (training & batched decode)
+  * tensor-parallel  → "model"  on head/ffn/expert/vocab dims
+  * FSDP             → "data"   on the non-TP dim of large matrices
+  * batch=1 decode   → KV-cache seq → "data"    (flash-decoding layout)
+Dims that an axis does not divide are left replicated (GSPMD would pad, but
+we prefer explicit, predictable layouts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig
+from repro.models import model as mdl
+
+IN_NAMES = {"wq", "wk", "wv", "wg", "wu", "wi", "in_proj"}
+OUT_NAMES = {"wo", "wd", "out_proj"}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def _fit(mesh: Mesh, spec_dims, shape):
+    """Drop axes that don't divide their dim."""
+    out = []
+    for dim, axis in zip(shape, spec_dims):
+        out.append(axis if (axis is None or dim % _axis_size(mesh, axis) == 0)
+                   else None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_specs(mesh: Mesh, cfg: ModelConfig, params_shape, *,
+                fsdp: bool = True):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    fa = "data" if fsdp else None
+
+    def leaf(path, x):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        shape = x.shape
+        nd = len(shape)
+        dims = [None] * nd
+        # MoE expert weights are the only 4-D leaves: (L, E, d_in, d_out)
+        if nd == 4:
+            dims[1] = "model"           # experts
+            if name in IN_NAMES:
+                dims[2] = fa            # d_model (FSDP)
+            else:
+                dims[3] = fa
+        elif name in IN_NAMES and nd >= 2:
+            dims[-2], dims[-1] = fa, "model"
+        elif name in OUT_NAMES and nd >= 2:
+            dims[-2], dims[-1] = "model", fa
+        elif name == "tok":
+            dims[0] = "model"           # vocab
+        elif name == "unembed":
+            dims[-2], dims[-1] = fa, "model"
+        elif name == "conv_w":
+            dims[-1] = "model"
+        elif name == "router":
+            pass                        # tiny — replicate
+        return NamedSharding(mesh, _fit(mesh, dims, shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def activation_rules(mesh: Mesh, shape: InputShape,
+                     kv_seq_axis: str | None = None,
+                     act_shard: bool = False) -> dict:
+    """Logical-axis → mesh-axis rules fed to repro.sharding.use_rules.
+
+    kv_seq_axis overrides the decode-cache seq sharding (§Perf lever:
+    "model" shards the KV cache 16× instead of replicating it across the
+    tensor-parallel columns)."""
+    ba = batch_axes(mesh)
+    b1 = shape.global_batch == 1
+    return {
+        "batch": None if b1 else ba,
+        "tokens": None if b1 else ba,       # flattened (B·S) MoE token dim
+        "seq": None,
+        "heads": "model",
+        "heads4d": "model",                 # 4-D head dim (uneven allowed)
+        # residual-stream d_model sharding between layers (§Perf lever:
+        # cuts scan-carry remat residuals by the TP width)
+        "embed": "model" if act_shard else None,
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        # decode: default "data" only for batch=1 long-context
+        "kv_seq": kv_seq_axis if kv_seq_axis else ("data" if b1 else None),
+    }
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, cache_shape, *,
+                global_batch: int, kv_seq_axis: str | None = None):
+    """Decode-cache PartitionSpecs. Leaves: k/v (L,B,Hkv,S,hd) head-major,
+    conv (L,B,K,C), state (L,B,H,hd,st)."""
+    ba = batch_axes(mesh)
+    b1 = global_batch == 1
+    seq_ax = kv_seq_axis if kv_seq_axis else ("data" if b1 else None)
+
+    def leaf(path, x):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        shape = x.shape
+        if name in ("k", "v"):
+            dims = [None, None if b1 else ba, None, seq_ax, None]
+        elif name == "conv":
+            dims = [None, None if b1 else ba, None, "model"]
+        elif name == "state":
+            dims = [None, None if b1 else ba, "model", None, None]
+        else:
+            dims = [None] * len(shape)
+        return NamedSharding(mesh, _fit(mesh, dims, shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# Input ShapeDtypeStructs per (arch × input shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                kv_seq_axis: str | None = None):
+    """ShapeDtypeStruct stand-ins + NamedShardings for every model input of
+    the lowered step (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    ba = batch_axes(mesh)
+    b_axis = ba if B % _axis_size(mesh, ba) == 0 else None
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend is not None:  # stubbed modality frontend
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            spec = {"embeds": NamedSharding(mesh, P(b_axis, None, None)),
+                    "labels": NamedSharding(mesh, P(b_axis, None))}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            sh = NamedSharding(mesh, P(b_axis, None))
+            spec = {"tokens": sh, "labels": sh}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+            spec.pop("labels")
+        return batch, spec
+
+    # decode: one new token against a seq_len cache
+    cache_shape = jax.eval_shape(
+        functools.partial(mdl.init_decode_cache, cfg, B, S))
+    cspec = cache_specs(mesh, cfg, cache_shape, global_batch=B,
+                        kv_seq_axis=kv_seq_axis)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = NamedSharding(mesh, P(b_axis, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ({"cache": cache_shape, "tokens": tok, "pos": pos},
+            {"cache": cspec, "tokens": tok_spec,
+             "pos": NamedSharding(mesh, P())})

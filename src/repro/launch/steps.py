@@ -1,0 +1,59 @@
+"""Step builders lowered by the drivers and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import model as mdl
+from repro.train.optim import AdamW
+
+
+def make_train_step(cfg: ModelConfig, *, moe_mode: str = "dense",
+                    q_chunk: int = 512, lr: float = 3e-4,
+                    attn_layout: str = "grouped"):
+    """(params, opt_state, batch) → (params, opt_state, loss) —
+    loss + grads + AdamW update, the full training memory footprint."""
+    opt = AdamW(lr=lr, weight_decay=0.1, clip_norm=1.0)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(mdl.loss_fn)(
+            params, cfg, batch, moe_mode=moe_mode, q_chunk=q_chunk,
+            attn_layout=attn_layout)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, *, moe_mode: str = "dense",
+                      q_chunk: int = 512, attn_layout: str = "grouped"):
+    """(params, batch) → (last-token logits[, decode cache]) — serving
+    prefill. Encoder-only archs score the batch (no cache)."""
+    want_cache = cfg.supports_decode
+
+    def prefill_step(params, batch):
+        out = mdl.forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), moe_mode=moe_mode,
+                          q_chunk=q_chunk, logits_last_only=True,
+                          return_cache=want_cache, attn_layout=attn_layout)
+        if want_cache:
+            logits, _, cache = out
+            return logits, cache
+        logits, _ = out
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, rolling: bool = False,
+                     moe_mode: str = "dense"):
+    """(params, cache, tokens, pos) → (logits, new cache) — one token."""
+
+    def serve_step(params, cache, tokens, pos):
+        return mdl.decode_step(params, cache, cfg, tokens=tokens, pos=pos,
+                               rolling=rolling, moe_mode=moe_mode)
+
+    return serve_step

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    init_params,
+    forward,
+    loss_fn,
+    init_decode_cache,
+    decode_step,
+    param_count,
+    active_param_count,
+)

@@ -1,0 +1,201 @@
+"""Attention layer: MHA/GQA with RoPE, qk-norm, optional QKV bias.
+
+Paths:
+  * ``attn_forward``     — train / prefill attention, computed in query
+    chunks (``lax.scan`` over blocks, mask generated on the fly) so the
+    S×S score matrix is never materialized — pure-JAX flash-style memory
+    behaviour; the Pallas kernel in ``repro.kernels.flash_attention`` is the
+    TPU hot-spot version of the same schedule.
+  * ``attn_decode_step`` — one-token decode against a KV cache; supports a
+    rolling (sliding-window) cache for long contexts.
+
+Logical sharding: batch → ("pod","data"), flat head dim → "model",
+batch=1 decode-cache seq → "data" (see launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def init_attn(key, cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = L.dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": L._normal(k1, (d, hq * hd), s, dt),
+        "wk": L._normal(k2, (d, hkv * hd), s, dt),
+        "wv": L._normal(k3, (d, hkv * hd), s, dt),
+        "wo": L._normal(k4, (hq * hd, d), (hq * hd) ** -0.5, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dt)
+        p["k_norm"] = L.init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = constrain(x @ p["wq"], ("batch", "seq", "heads"))
+    k = constrain(x @ p["wk"], ("batch", "seq", "kv_heads"))
+    v = constrain(x @ p["wv"], ("batch", "seq", "kv_heads"))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                      q_chunk: int = 512, layout: str = "grouped"):
+    """Query-chunked attention; no (S,S) materialization.
+
+    q: (B,S,Hq,hd); k,v: (B,Sk,Hkv,hd). Returns (B,S,Hq*hd).
+
+    layout="grouped" keeps KV unexpanded (B,Sk,Hkv,g,…) — minimal memory,
+    but the (Hkv, g) split is unshardable when Hq doesn't divide the TP
+    axis. layout="flat" repeats KV to Hq heads and shards the head dim
+    *unevenly* ("heads!") over the TP axis — the §Perf fix for archs like
+    yi-34b (56 heads on a 16-way axis): scores stay head-local, so the
+    per-chunk score all-reduce disappears.
+    """
+    B, S, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc //= 2
+    nq = S // qc
+    scale = hd ** -0.5
+    kpos = jnp.arange(Sk)
+
+    if layout == "flat":
+        k = constrain(jnp.repeat(k, g, axis=2),
+                      ("batch", "seq", "heads4d!", None))
+        v = constrain(jnp.repeat(v, g, axis=2),
+                      ("batch", "seq", "heads4d!", None))
+        q = constrain(q, ("batch", "seq", "heads4d!", None))
+        qg = jnp.moveaxis(q.reshape(B, nq, qc, Hq, hd), 1, 0)
+
+        def body(_, inp):
+            q_blk, idx = inp
+            qpos = idx * qc + jnp.arange(qc)
+            scores = jnp.einsum("bqhd,bkhd->bhqk",
+                                q_blk.astype(jnp.float32),
+                                k.astype(jnp.float32)) * scale
+            scores = constrain(scores, ("batch", "heads4d!", None, None))
+            if causal:
+                m = kpos[None, :] <= qpos[:, None]
+                if window is not None:
+                    m &= (qpos[:, None] - kpos[None, :]) < window
+                scores = jnp.where(m[None, None], scores, jnp.float32(-1e30))
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+            return None, out.reshape(B, qc, Hq * hd)
+
+        _, outs = jax.lax.scan(body, None, (qg, jnp.arange(nq)))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq * hd)
+
+    qg = q.reshape(B, nq, qc, Hkv, g, hd)
+    qg = jnp.moveaxis(qg, 1, 0)  # (nq, B, qc, Hkv, g, hd)
+
+    def body(_, inp):
+        q_blk, idx = inp
+        qpos = idx * qc + jnp.arange(qc)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if causal:
+            m = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= (qpos[:, None] - kpos[None, :]) < window
+            scores = jnp.where(m[None, None, None], scores, jnp.float32(-1e30))
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+        return None, out.reshape(B, qc, Hq * hd)
+
+    _, outs = jax.lax.scan(body, None, (qg, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq * hd)
+
+
+def attn_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray, *, window: Optional[int] = None,
+                 q_chunk: int = 512, return_kv: bool = False,
+                 layout: str = "grouped"):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    win = window if window is not None else (
+        cfg.sliding_window if cfg.sliding_window_always else None)
+    out = chunked_attention(q, k, v, causal=cfg.causal, window=win,
+                            q_chunk=q_chunk, layout=layout)
+    out = constrain(out, ("batch", "seq", "heads"))
+    out = out @ p["wo"]
+    if return_kv:  # prefill: post-RoPE k/v become the decode cache
+        return out, {"k": jnp.moveaxis(k, 1, 2), "v": jnp.moveaxis(v, 1, 2)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Cache layout (B, Hkv, S, hd) — head-major so the decode dot consumes
+    it without a per-step full-cache layout transpose (§Perf H3 iter 3)."""
+    dt = dtype or L.dtype_of(cfg)
+    shape = (batch, cfg.n_kv_heads, cache_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attn_decode_step(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                     cfg: ModelConfig, *, rolling: bool) -> tuple:
+    """x: (B, 1, d). pos: scalar int32 absolute position → (out, new_cache).
+
+    rolling=True → cache length W is a sliding window written at ``pos % W``;
+    RoPE is applied before caching, so slot order is irrelevant.
+    """
+    B = x.shape[0]
+    W = cache["k"].shape[2]
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    slot = (pos % W if rolling else pos).astype(jnp.int32)
+    k_new = jnp.moveaxis(k_new, 1, 2)  # (B, Hkv, 1, hd)
+    v_new = jnp.moveaxis(v_new, 1, 2)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, 0, slot, 0))
+    k_cache = constrain(k_cache, ("batch", None, "kv_seq", None))
+    v_cache = constrain(v_cache, ("batch", None, "kv_seq", None))
+    # Validity: before the window wraps, only slots [0, pos] are filled.
+    n_valid = jnp.minimum(pos + 1, W)
+    valid = jnp.arange(W)[None, :] < n_valid                    # (1, W)
+
+    Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
+    qg = q.reshape(B, Hkv, g, hd)
+    # Dot in the cache dtype with f32 accumulation: upcasting the cache
+    # (k.astype(f32)) makes XLA materialize an f32 copy of the whole cache
+    # every step — measured 60% of decode HBM traffic (§Perf H3 iter 2).
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    scores = jnp.where(valid[:, None, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32).astype(v_cache.dtype)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}

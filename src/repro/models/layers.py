@@ -1,0 +1,129 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take a PRNGKey.
+  * activations run in ``cfg.dtype``; norms/softmax accumulate in f32.
+  * weight layout: x @ W with W of shape (in, out).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    # (head_dim/2,) inverse frequencies, f32.
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for decoder archs, GELU for the encoder-only audio arch)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    if cfg.encoder_only:  # GELU MLP (hubert / w2v2 style)
+        return {
+            "wi": _normal(k1, (d, f), s_in, dt),
+            "bi": jnp.zeros((f,), dt),
+            "wo": _normal(k2, (f, d), s_out, dt),
+            "bo": jnp.zeros((d,), dt),
+        }
+    return {  # SwiGLU
+        "wg": _normal(k1, (d, f), s_in, dt),
+        "wu": _normal(k2, (d, f), s_in, dt),
+        "wd": _normal(k3, (f, d), s_out, dt),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if "wi" in p:  # GELU
+        h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+        return h @ p["wo"] + p["bo"]
+    g = jax.nn.silu(x @ p["wg"])
+    return (g * (x @ p["wu"])) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _normal(k1, (cfg.vocab, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(k2, (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dt)
+    return p
+
+
+def embed(p: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    return x @ w

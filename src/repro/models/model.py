@@ -1,0 +1,268 @@
+"""Composable model definition: dense / MoE / SSM / hybrid / encoder-only.
+
+A model is a stack of identical *scan units*; ``block_pattern`` describes the
+layers inside one unit (for most archs a unit is one layer; for hybrids it is
+one attention + (P−1) Mamba layers so the stack stays scan-homogeneous).
+``jax.lax.scan`` + ``jax.checkpoint`` over stacked unit params keeps compile
+time depth-independent and activation memory O(1 unit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Block pattern
+# ---------------------------------------------------------------------------
+
+
+def block_pattern(cfg: ModelConfig) -> Tuple[int, List[Tuple[str, Optional[str]]]]:
+    """Returns (n_units, [(mixer, ffn), ...] for one unit)."""
+    if cfg.arch_type == "ssm":
+        return cfg.n_layers, [("mamba", None)]
+    if cfg.arch_type == "hybrid":
+        P = cfg.hybrid_attn_period
+        assert cfg.n_layers % P == 0
+        pat = []
+        for i in range(P):
+            mixer = "attn" if i == 0 else "mamba"
+            ffn = "moe" if (cfg.moe and i % cfg.moe_period == cfg.moe_period - 1) else "mlp"
+            pat.append((mixer, ffn))
+        return cfg.n_layers // P, pat
+    ffn = "moe" if cfg.moe else "mlp"
+    return cfg.n_layers, [("attn", ffn)]
+
+
+def _init_norm(cfg: ModelConfig, d: int):
+    dt = L.dtype_of(cfg)
+    return L.init_layernorm(d, dt) if cfg.encoder_only else L.init_rmsnorm(d, dt)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return (L.layernorm if cfg.encoder_only else L.rmsnorm)(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_unit(key, cfg: ModelConfig) -> dict:
+    _, pat = block_pattern(cfg)
+    keys = jax.random.split(key, 2 * len(pat))
+    unit = {}
+    for i, (mixer, ffn) in enumerate(pat):
+        lk, fk = keys[2 * i], keys[2 * i + 1]
+        lp = {"norm1": _init_norm(cfg, cfg.d_model)}
+        lp["mixer"] = (A.init_attn(lk, cfg) if mixer == "attn"
+                       else S.init_mamba(lk, cfg))
+        if ffn is not None:
+            lp["norm2"] = _init_norm(cfg, cfg.d_model)
+            lp["ffn"] = (M.init_moe(fk, cfg) if ffn == "moe"
+                         else L.init_mlp(fk, cfg))
+        unit[f"l{i}"] = lp
+    return unit
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    n_units, _ = block_pattern(cfg)
+    k_emb, k_blocks = jax.random.split(key)
+    dt = L.dtype_of(cfg)
+    params = {"final_norm": _init_norm(cfg, cfg.d_model)}
+    ke1, ke2 = jax.random.split(k_emb)
+    emb = {}
+    # Token table: text archs always; VLMs too (decode generates text tokens
+    # — only the vision patches are stubbed). The audio encoder never embeds
+    # tokens (its vocab is a classification codebook).
+    if cfg.frontend is None or cfg.supports_decode:
+        emb["tok"] = L._normal(ke1, (cfg.vocab, cfg.d_model), 0.02, dt)
+    emb["unembed"] = L._normal(ke2, (cfg.d_model, cfg.vocab),
+                               cfg.d_model ** -0.5, dt)
+    params["embed"] = emb
+    params["blocks"] = jax.vmap(lambda k: _init_unit(k, cfg))(
+        jax.random.split(k_blocks, n_units))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
+            moe_mode: str = "dense", q_chunk: int = 512,
+            window: Optional[int] = None, remat: bool = True,
+            logits_last_only: bool = False, return_cache: bool = False,
+            attn_layout: str = "grouped"):
+    """Returns (logits, aux_loss[, cache]).
+
+    logits_last_only — serving prefill: only the final position is
+    unembedded (avoids a (B,S,V) logits tensor).
+    return_cache — also emit the decode cache (per-unit KV / SSM state as
+    scan ys), i.e. this call doubles as ``prefill``.
+    """
+    if embeds is None:
+        embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", "seq", "embed"))
+    B, Sq, _ = x.shape
+    positions = jnp.arange(Sq)[None, :]
+    _, pat = block_pattern(cfg)
+
+    def unit(carry, unit_params):
+        x, aux = carry
+        cache = {}
+        for i, (mixer, ffn) in enumerate(pat):
+            lp = unit_params[f"l{i}"]
+            h = _norm(cfg, lp["norm1"], x)
+            if mixer == "attn":
+                h = A.attn_forward(lp["mixer"], h, cfg, positions,
+                                   window=window, q_chunk=q_chunk,
+                                   return_kv=return_cache,
+                                   layout=attn_layout)
+                if return_cache:
+                    h, cache[f"l{i}"] = h
+            else:
+                h = S.mamba_forward(lp["mixer"], h, cfg,
+                                    return_state=return_cache)
+                if return_cache:
+                    h, cache[f"l{i}"] = h
+            x = x + h
+            if ffn is not None:
+                h = _norm(cfg, lp["norm2"], x)
+                if ffn == "moe":
+                    h, a = M.moe_forward(lp["ffn"], h, cfg, mode=moe_mode)
+                    aux = aux + a
+                else:
+                    h = L.mlp(lp["ffn"], h, cfg)
+                x = x + h
+            x = constrain(x, ("batch", "seq", "embed"))
+        return (x, aux), cache
+
+    fn = jax.checkpoint(unit) if remat else unit
+    (x, aux), cache = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                                   params["blocks"])
+    x = _norm(cfg, params["final_norm"], x)
+    if logits_last_only:
+        x = x[:, -1:, :]
+    logits = x @ params["embed"]["unembed"]
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
+            moe_mode: str = "dense", q_chunk: int = 512,
+            remat: bool = True, attn_layout: str = "grouped"):
+    """batch: {"tokens" or "embeds", "labels", optional "mask"}."""
+    logits, aux = forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        moe_mode=moe_mode, q_chunk=q_chunk, remat=remat,
+        attn_layout=attn_layout)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    return jnp.sum(nll) / denom + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _unit_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    _, pat = block_pattern(cfg)
+    c = {}
+    for i, (mixer, _) in enumerate(pat):
+        c[f"l{i}"] = (A.init_kv_cache(cfg, batch, cache_len, dtype)
+                      if mixer == "attn" else S.init_ssm_cache(cfg, batch, dtype))
+    return c
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> dict:
+    """Stacked (n_units leading dim) decode cache."""
+    n_units, _ = block_pattern(cfg)
+    unit = _unit_cache(cfg, batch, cache_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_units,) + a.shape, a.dtype), unit)
+
+
+def decode_step(params: dict, cache: dict, cfg: ModelConfig, *,
+                tokens=None, embeds=None, pos, rolling: bool = False,
+                moe_mode: str = "dense"):
+    """One-token decode. tokens: (B,1) int or embeds: (B,1,d).
+    Returns (logits (B,1,V), new_cache)."""
+    if embeds is None:
+        embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", None, None))
+    _, pat = block_pattern(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def unit(x, xs):
+        unit_params, unit_cache = xs
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(pat):
+            lp = unit_params[f"l{i}"]
+            h = _norm(cfg, lp["norm1"], x)
+            if mixer == "attn":
+                h, new_cache[f"l{i}"] = A.attn_decode_step(
+                    lp["mixer"], h, unit_cache[f"l{i}"], pos, cfg,
+                    rolling=rolling)
+            else:
+                h, new_cache[f"l{i}"] = S.mamba_decode_step(
+                    lp["mixer"], h, unit_cache[f"l{i}"], cfg)
+            x = x + h
+            if ffn is not None:
+                h = _norm(cfg, lp["norm2"], x)
+                if ffn == "moe":
+                    h, _ = M.moe_forward(lp["ffn"], h, cfg, mode=moe_mode)
+                else:
+                    h = L.mlp(lp["ffn"], h, cfg)
+                x = x + h
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(unit, x, (params["blocks"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"]["unembed"]
+    return constrain(logits, ("batch", None, "vocab")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE experts scaled by top_k/E)."""
+    total = 0
+    frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for leaf in jax.tree.leaves(params):
+        if leaf.ndim == 4:  # stacked expert weights (n_units, E, d, f)
+            total += int(leaf.size * frac)
+        else:
+            total += leaf.size
+    return total

@@ -1,0 +1,193 @@
+"""Mamba2 (state-space duality / SSD) block [arXiv:2405.21060].
+
+TPU adaptation notes (DESIGN.md §3): the SSD chunked form maps naturally onto
+the MXU — intra-chunk terms are small dense matmuls (chunk × chunk decay-masked
+"attention"), inter-chunk recurrence is a ``lax.scan`` over chunk states
+(compiled once). The recurrent state (B,H,hd,state) is the decode cache.
+
+Single B/C group (G=1), broadcast across heads, as in the 370m reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state  # x, B, C all pass the depthwise conv
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = _dims(cfg)
+    dt = L.dtype_of(cfg)
+    proj_dim = 2 * d_inner + 2 * s.d_state + H  # z, x, B, C, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": L._normal(k1, (d, proj_dim), d ** -0.5, dt),
+        "conv_w": L._normal(k2, (s.d_conv, conv_dim), 0.1, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.init_rmsnorm(d_inner, dt),
+        "out_proj": L._normal(k3, (d_inner, d), d_inner ** -0.5, dt),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + d_inner + 2 * s.d_state],
+                           axis=-1)
+    return z, xBC, dt  # dt: (..., H)
+
+
+def _split_xBC(xBC, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, _, _ = _dims(cfg)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + s.d_state], axis=-1)
+    return x, Bm, Cm
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time. xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba_forward(p: dict, x_in: jnp.ndarray, cfg: ModelConfig, *,
+                  return_state: bool = False):
+    """Full-sequence (train / prefill) chunked-SSD forward. x_in: (B,S,d).
+    return_state=True also returns the decode cache ({"conv", "state"})."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    hd, st = s.head_dim, s.d_state
+    B_, S, _ = x_in.shape
+    Q = min(s.chunk, S)
+    while S % Q:  # shrink to a divisor of S (smoke tests use tiny seqs)
+        Q //= 2
+    nc = S // Q
+
+    proj = x_in @ p["in_proj"]
+    z, xBC_raw, dt_raw = _split_proj(proj, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = _split_xBC(xBC, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    xh = xs.reshape(B_, S, H, hd).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)  # (B,S,st) single group
+    Cm = Cm.astype(jnp.float32)
+
+    # chunk
+    def ch(a, extra=()):
+        return a.reshape((B_, nc, Q) + a.shape[2:])
+
+    dt_c = ch(dt)                      # (B,nc,Q,H)
+    adt = dt_c * A                     # (B,nc,Q,H)  (= A·dt, negative)
+    x_c = ch(xh)                       # (B,nc,Q,H,hd)
+    B_c = ch(Bm)                       # (B,nc,Q,st)
+    C_c = ch(Cm)                       # (B,nc,Q,st)
+    xdt = x_c * dt_c[..., None]        # input scaled by dt
+
+    acum = jnp.cumsum(adt, axis=2)                     # (B,nc,Q,H)
+    # intra-chunk decay matrix  Lmat[q,k] = exp(acum_q - acum_k) for q>=k
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+    # scores: (B,nc,Q,Q) per head via C_q · B_k  (single group → no head dim)
+    cb = jnp.einsum("bnqs,bnks->bnqk", C_c, B_c)
+    y_diag = jnp.einsum("bnqk,bnqkh,bnkhd->bnqhd", cb, Lmat, xdt)
+
+    # per-chunk end states and inter-chunk recurrence
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)          # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnqs,bnqh,bnqhd->bnhds", B_c,
+                             decay_to_end, xdt)                 # (B,nc,H,hd,st)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st_n, dec_n = inp  # (B,H,hd,st), (B,H)
+        h_prev = h
+        h = h * dec_n[:, :, None, None] + st_n
+        return h, h_prev
+
+    h0 = jnp.zeros((B_, H, hd, st), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                       # (B,nc,H,hd,st)
+
+    decay_from_start = jnp.exp(acum)                            # (B,nc,Q,H)
+    y_off = jnp.einsum("bnqs,bnqh,bnhds->bnqhd", C_c,
+                       decay_from_start, h_prevs)
+
+    y = (y_diag + y_off).reshape(B_, S, H, hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_inner).astype(x_in.dtype)
+    # gated RMSNorm then output projection
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = y @ p["out_proj"]
+    if return_state:
+        tail = xBC_raw[:, S - (s.d_conv - 1):, :]  # last K−1 raw conv inputs
+        return y, {"conv": tail, "state": h_final}
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) with recurrent state cache
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim),
+                          dtype or L.dtype_of(cfg)),
+        "state": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: dict, x_in: jnp.ndarray, cache: dict,
+                      cfg: ModelConfig) -> tuple:
+    """x_in: (B,1,d). Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    hd, st = s.head_dim, s.d_state
+    B_ = x_in.shape[0]
+
+    proj = x_in[:, 0] @ p["in_proj"]           # (B, proj)
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    # causal conv over (cached history, current)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(x_in.dtype)
+    xs, Bm, Cm = _split_xBC(xBC, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(A * dt)                                             # (B,H)
+    xh = xs.reshape(B_, H, hd).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)                                       # (B,st)
+    Cf = Cm.astype(jnp.float32)
+
+    h = cache["state"] * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt, xh, Bf)
+    y = jnp.einsum("bhds,bs->bhd", h, Cf) + p["D"][None, :, None] * xh
+    y = y.reshape(B_, d_inner).astype(x_in.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = (y @ p["out_proj"])[:, None, :]
+    return y, {"conv": hist[:, 1:, :], "state": h}

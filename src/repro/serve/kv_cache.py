@@ -1,0 +1,19 @@
+"""KV-cache utilities for the serving path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def extend_cache(cache, new_len: int):
+    """Pad the seq dim of attention caches (leaf names k/v, dim 3 of the
+    stacked (L,B,Hkv,S,hd) head-major layout) up to new_len — used to
+    continue decoding from a prefill-produced cache."""
+    def leaf(path, a):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names[-1] in ("k", "v"):
+            pad = new_len - a.shape[3]
+            if pad > 0:
+                a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        return a
+    return jax.tree_util.tree_map_with_path(leaf, cache)

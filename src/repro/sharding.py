@@ -1,0 +1,70 @@
+"""Logical-axis sharding: model code annotates activations with *logical*
+axis names; a rule set maps them to mesh axes at launch time.
+
+Outside any ``use_rules`` context (unit tests, CPU smoke runs) ``constrain``
+is the identity, so the model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+_CURRENT: Optional[tuple] = None  # (mesh, rules: dict[str, Axis])
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def active() -> bool:
+    return _CURRENT is not None
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def resolve_spec(logical: Sequence, shape: Sequence[int]) -> Optional[P]:
+    """Map logical axis names to a PartitionSpec under the active rules,
+    dropping axes whose size does not divide the dimension. A trailing "!"
+    on a logical name opts into uneven (GSPMD-padded) sharding — used e.g.
+    to shard 56 attention heads over a 16-way axis (4 chips idle-padded)."""
+    if _CURRENT is None:
+        return None
+    mesh, rules = _CURRENT
+    out = []
+    for dim, name in zip(shape, logical):
+        uneven = isinstance(name, str) and name.endswith("!")
+        key = name[:-1] if uneven else name
+        axis = rules.get(key) if key is not None else None
+        if axis is not None and not uneven \
+                and dim % _axis_size(mesh, axis) != 0:
+            axis = None  # non-divisible → replicate this dim
+        out.append(axis)
+    return P(*out)
+
+
+def constrain(x: jax.Array, logical: Sequence) -> jax.Array:
+    """Annotate x with the sharding implied by logical axis names."""
+    if _CURRENT is None:
+        return x
+    mesh, _ = _CURRENT
+    spec = resolve_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,67 @@
+"""Pytree checkpointing via msgpack (no orbax offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
+encoded as nested msgpack maps/lists. Atomic write (tmp + rename) so a
+killed trainer never leaves a torn checkpoint. bfloat16 round-trips via a
+uint16 view.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+
+
+def _pack(obj: Any):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        a = np.asarray(obj)
+        dt = str(a.dtype)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+            dt = "bfloat16"
+        return {_ARR: True, "dtype": dt, "shape": list(a.shape),
+                "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_pack(v) for v in obj],
+                "__tuple__": isinstance(obj, tuple)}
+    return obj
+
+
+def _unpack(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            dt = obj["dtype"]
+            if dt == "bfloat16":
+                a = np.frombuffer(obj["data"], np.uint16).reshape(obj["shape"])
+                return jnp.asarray(a.view(jnp.bfloat16))
+            return jnp.asarray(
+                np.frombuffer(obj["data"], np.dtype(dt)).reshape(obj["shape"]))
+        if "__list__" in obj:
+            vals = [_unpack(v) for v in obj["__list__"]]
+            return tuple(vals) if obj.get("__tuple__") else vals
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save(path: str | pathlib.Path, tree: Any) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str | pathlib.Path) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))

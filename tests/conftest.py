@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run forces 512 devices in
+# its own process — never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

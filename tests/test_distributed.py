@@ -1,0 +1,71 @@
+"""Distribution-layer tests run in subprocesses with fake devices
+(XLA_FLAGS must be set before jax initializes — never in this process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": ""}
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420):
+    full = (f"import os; os.environ['XLA_FLAGS']="
+            f"'--xla_force_host_platform_device_count={devices}';" + code)
+    out = subprocess.run([sys.executable, "-c", full], capture_output=True,
+                         text=True, timeout=timeout, env=ENV)
+    assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_moe_capacity_shard_map_matches_dense():
+    """Expert-parallel shard_map dispatch ≡ dense dispatch (high capacity)
+    on a 2×2 ("data","model") mesh."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro import sharding as shd
+from repro.models.moe import init_moe, moe_forward
+
+cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()   # 4 experts
+mesh = jax.make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
+rules = {"tokens": ("data",), "experts": "model", "batch": ("data",)}
+p = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+y_dense, aux_d = moe_forward(p, x, cfg, mode="dense")
+with mesh, shd.use_rules(mesh, rules):
+    y_cap, aux_c = jax.jit(lambda p, x: moe_forward(
+        p, x, cfg, mode="capacity", capacity_factor=8.0))(p, x)
+err = float(jnp.max(jnp.abs(y_dense - y_cap)))
+print("ERR", err, float(aux_d), float(aux_c))
+assert err < 1e-3, err
+assert abs(float(aux_d) - float(aux_c)) < 1e-4
+""", devices=4)
+    assert "ERR" in out
+
+
+def test_dryrun_single_combo():
+    """launch/dryrun lowers + compiles a real combo on the 16×16 mesh."""
+    out = _run("""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'
+from repro.launch.dryrun import run_combo
+rec = run_combo('mamba2-370m', 'long_500k', multi_pod=False, verbose=False)
+assert rec['status'] == 'ok', rec
+print('DRYRUN_OK', rec['dominant'], rec['compile_s'])
+""", devices=512, timeout=560)
+    assert "DRYRUN_OK" in out
+
+
+def test_make_production_mesh_shapes():
+    out = _run("""
+import jax
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m1.shape) == {"data": 16, "model": 16}
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+print("MESH_OK")
+""", devices=512, timeout=240)
+    assert "MESH_OK" in out

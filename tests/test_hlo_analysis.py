@@ -1,0 +1,49 @@
+"""HLO cost-parser unit tests on hand-written HLO snippets."""
+from repro.launch.hlo_analysis import HloCosts, _shape_bytes
+
+HLO = """\
+%loop_body (param.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+%loop_cond (param.2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %lim = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%i2, %lim), direction=LT
+}
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %w2 = f32[16,32]{1,0} constant({...})
+  %dot.2 = f32[8,32]{1,0} dot(%arg, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %init = (s32[], f32[8,16]) tuple(%c0, %arg)
+  %wh = (s32[], f32[8,16]) while(%init), condition=%loop_cond, body=%loop_body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+    assert _shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert _shape_bytes("pred[5]") == 5
+
+
+def test_loop_trip_multiplier():
+    hc = HloCosts(HLO)
+    t = hc.totals()
+    # dot inside loop: 2*8*16*16 = 4096 flops × trip 7; dot.2: 2*8*32*16
+    assert t["flops"] == 7 * 4096 + 2 * 8 * 32 * 16
+    # all-reduce inside loop: 8*16*4 bytes × 7
+    assert t["collectives"]["all-reduce"] == 7 * 8 * 16 * 4
+
+
+def test_entry_detected():
+    hc = HloCosts(HLO)
+    assert hc.entry == "main"

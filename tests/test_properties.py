@@ -1,0 +1,153 @@
+"""Hypothesis property-based tests on system invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import personalization as P
+from repro.core import policy
+from repro.train.optim import clip_by_global_norm, global_norm
+
+FINITE = {"allow_nan": False, "allow_infinity": False}
+
+
+@st.composite
+def tables(draw, max_q=12, max_m=6):
+    q = draw(st.integers(2, max_q))
+    m = draw(st.integers(2, max_m))
+    A = draw(hnp.arrays(np.float32, (q, m),
+                        elements=st.floats(0, 1, width=32)))
+    C = draw(hnp.arrays(np.float32, (q, m),
+                        elements=st.floats(0, 1, width=32)))
+    return jnp.asarray(A), jnp.asarray(C)
+
+
+@given(tables())
+@settings(max_examples=40, deadline=None)
+def test_route_shift_invariance(tc):
+    """Adding a per-query constant to every model's utility never changes
+    the routing decision (argmax invariance) — up to float ties: queries
+    whose top-2 utilities are within float tolerance are excluded (the
+    shift can legitimately flip a bit-level tie)."""
+    A, C = tc
+    U = np.asarray(policy.utility(A, C, 0.7), np.float32)
+    top2 = np.sort(U, axis=1)[:, -2:]
+    clear = (top2[:, 1] - top2[:, 0]) > 1e-5
+    m1 = np.asarray(policy.route(A, C, 0.7))
+    m2 = np.asarray(policy.route(A + 0.25, C, 0.7))
+    np.testing.assert_array_equal(m1[clear], m2[clear])
+
+
+@given(tables())
+@settings(max_examples=40, deadline=None)
+def test_mean_cost_monotone_in_lambda(tc):
+    """Sweeping λ up can only decrease the mean routed cost (frontier
+    monotonicity — the basis of the paper's accuracy–cost curves)."""
+    A, C = tc
+    lams = [0.0, 0.1, 1.0, 10.0, 1000.0]
+    costs = []
+    for lam in lams:
+        ch = policy.route(A, C, lam)
+        costs.append(float(jnp.mean(
+            jnp.take_along_axis(C, ch[:, None], axis=1))))
+    assert all(costs[i] >= costs[i + 1] - 1e-6 for i in range(len(costs) - 1))
+
+
+@given(tables())
+@settings(max_examples=30, deadline=None)
+def test_auc_bounded(tc):
+    A, C = tc
+    costs, accs = policy.frontier(A, C, A, C,
+                                  lams=np.logspace(-2, 3, 20))
+    auc = policy.frontier_auc(costs, accs)
+    assert -1e-9 <= auc <= 1.0 + 1e-9
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 6).map(lambda m: (m,)),
+                  elements=st.floats(0, 100, width=32)),
+       hnp.arrays(np.float32, st.integers(1, 6).map(lambda m: (m,)),
+                  elements=st.floats(0, 100, width=32)))
+@settings(max_examples=40, deadline=None)
+def test_mixture_weights_in_unit_interval(ef, el):
+    m = min(len(ef), len(el))
+    w = P.mixture_weights(jnp.asarray(ef[:m]), jnp.asarray(el[:m]))
+    assert bool(jnp.all((w >= 0) & (w <= 1)))
+
+
+@given(st.lists(hnp.arrays(np.float32, hnp.array_shapes(max_dims=3,
+                                                        max_side=5),
+                           elements=st.floats(-100, 100, width=32)),
+                min_size=1, max_size=4),
+       st.floats(0.01, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_clip_by_global_norm(leaves, max_norm):
+    tree = {f"p{i}": jnp.asarray(a) for i, a in enumerate(leaves)}
+    clipped = clip_by_global_norm(tree, max_norm)
+    gn = float(global_norm(clipped))
+    assert gn <= max_norm * (1 + 1e-4) + 1e-6
+    # direction preserved: clipped = s * original with one global scalar s
+    orig_n = float(global_norm(tree))
+    if orig_n > 0:
+        s = gn / orig_n
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(clipped[k]),
+                                       np.asarray(tree[k]) * s, rtol=1e-3,
+                                       atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 40), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_kmeans_assign_property(seed, n, k):
+    key = jax.random.PRNGKey(seed)
+    kx, kc = jax.random.split(key)
+    X = jax.random.normal(kx, (n, 5))
+    C = jax.random.normal(kc, (k, 5))
+    from repro.kernels.ops import kmeans_assign
+    a = np.asarray(kmeans_assign(X, C))
+    d2 = np.asarray(jnp.sum((X[:, None] - C[None]) ** 2, -1))
+    chosen = d2[np.arange(n), a]
+    assert np.all(chosen <= d2.min(axis=1) + 1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip(seed):
+    import tempfile
+    from repro.train import checkpoint as ckpt
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (3, 4)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": jax.random.normal(key, (2,)).astype(jnp.bfloat16)},
+            "e": [jnp.ones(()), jnp.zeros((1, 2))],
+            "scalar": 3, "name": "x"}
+    with tempfile.NamedTemporaryFile(suffix=".msgpack") as f:
+        ckpt.save(f.name, tree)
+        back = ckpt.restore(f.name)
+    assert back["scalar"] == 3 and back["name"] == "x"
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(back["a"]))
+    assert back["b"]["d"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(tree["b"]["d"], np.float32),
+        np.asarray(back["b"]["d"], np.float32))
+
+
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_moe_gate_weights_sum_to_one(seed, topk, experts):
+    if topk > experts:
+        topk = experts
+    import dataclasses
+    from repro.config import MoEConfig
+    from repro.configs import get_config
+    from repro.models.moe import _router_probs
+    cfg = dataclasses.replace(
+        get_config("phi3.5-moe-42b-a6.6b").reduced(),
+        moe=MoEConfig(num_experts=experts, top_k=topk, d_expert=16))
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (7, cfg.d_model))
+    p = {"router": jax.random.normal(key, (cfg.d_model, experts))}
+    w, ids, probs = _router_probs(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-5)
+    assert bool(jnp.all(ids < experts))

@@ -1,0 +1,259 @@
+"""Paper-core correctness: policy, K-means router, FedAvg, personalization,
+onboarding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, RouterConfig
+from repro.core import expansion as E
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+from repro.core import mlp_router as R
+from repro.core import personalization as P
+from repro.core import policy
+from repro.core.kmeans import kmeans
+from repro.data.partition import client_slice, federated_split, flatten_clients
+from repro.data.synthetic import make_eval_corpus
+
+RCFG = RouterConfig(d_emb=16, num_models=5, hidden=(32, 32), k_local=4,
+                    k_global=6)
+FCFG = FedConfig(num_clients=4, rounds=3, batch_size=32, seed=1)
+
+
+@pytest.fixture(scope="module")
+def split():
+    corpus = make_eval_corpus(jax.random.PRNGKey(0), n_queries=1200,
+                              n_tasks=4, n_models=5, d_emb=16)
+    return federated_split(jax.random.PRNGKey(1), corpus, FCFG)
+
+
+# ---------------------------------------------------------------------- policy
+
+def test_route_argmax_matches_manual():
+    A = jnp.array([[0.9, 0.5], [0.2, 0.8]])
+    C = jnp.array([[1.0, 0.1], [0.5, 0.9]])
+    assert policy.route(A, C, 0.0).tolist() == [0, 1]
+    assert policy.route(A, C, 10.0).tolist() == [1, 0]
+
+
+def test_frontier_auc_bounds_and_oracle_best(split):
+    tg = split["test_global"]
+    # oracle router (true tables) must beat a random-estimate router
+    *_, auc_oracle = policy.eval_router(
+        lambda x: (tg["acc_table"], tg["cost_table"]), tg["x"],
+        tg["acc_table"], tg["cost_table"])
+    key = jax.random.PRNGKey(3)
+    rand_A = jax.random.uniform(key, tg["acc_table"].shape)
+    *_, auc_rand = policy.eval_router(
+        lambda x: (rand_A, tg["cost_table"]), tg["x"], tg["acc_table"],
+        tg["cost_table"])
+    assert 0.0 <= auc_rand <= 1.0 and 0.0 <= auc_oracle <= 1.0
+    assert auc_oracle >= auc_rand
+
+
+# --------------------------------------------------------------------- kmeans
+
+def test_kmeans_assign_is_nearest():
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (200, 8))
+    cents, _ = kmeans(key, X, 5, iters=10, n_init=2)
+    from repro.kernels.ops import kmeans_assign
+    a = kmeans_assign(X, cents)
+    d2 = jnp.sum((X[:, None] - cents[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(jnp.argmin(d2, 1)))
+
+
+def test_kmeans_mask_excludes_padding():
+    key = jax.random.PRNGKey(0)
+    X = jnp.concatenate([jax.random.normal(key, (50, 4)),
+                         1e6 * jnp.ones((10, 4))])
+    mask = jnp.concatenate([jnp.ones(50), jnp.zeros(10)])
+    cents, _ = kmeans(key, X, 3, iters=10, n_init=1, mask=mask > 0)
+    assert float(jnp.max(jnp.abs(cents))) < 1e3  # padding never absorbed
+
+
+def test_fed_kmeans_router_shapes(split):
+    r = KR.fed_kmeans_router(jax.random.PRNGKey(0), split["train"], RCFG,
+                             num_models=5)
+    K = RCFG.k_global
+    assert r["centroids"].shape == (K, 16)
+    assert r["A"].shape == (K, 5) and r["C"].shape == (K, 5)
+    assert bool(jnp.all((r["A"] >= 0) & (r["A"] <= 1)))
+    A, C = KR.predict(r, split["test_global"]["x"][:7])
+    assert A.shape == (7, 5)
+
+
+def test_kmeans_stats_match_manual_average(split):
+    """Server aggregation (Alg. 2 line 14) = count-weighted global mean."""
+    r = KR.fed_kmeans_router(jax.random.PRNGKey(0), split["train"], RCFG,
+                             num_models=5)
+    from repro.kernels.ops import kmeans_assign
+    tr = split["train"]
+    N, D = tr["m"].shape
+    flat = jax.tree.map(lambda a: a.reshape((N * D,) + a.shape[2:]), tr)
+    assign = kmeans_assign(flat["x"], r["centroids"])
+    for k in range(RCFG.k_global):
+        for m in range(5):
+            sel = (np.asarray(assign) == k) & (np.asarray(flat["m"]) == m) \
+                & (np.asarray(flat["w"]) > 0)
+            if sel.sum() == 0:
+                continue
+            np.testing.assert_allclose(float(r["A"][k, m]),
+                                       np.asarray(flat["acc"])[sel].mean(),
+                                       rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- fedavg
+
+def test_fedavg_tau1_fullbatch_equals_centralized_gd(split):
+    """Alg. 1 with τ=1 full-batch SGD and full participation must equal
+    centralized full-batch gradient descent on the pooled loss."""
+    fcfg = FedConfig(num_clients=4, participation=1.0, lr=0.05, seed=0)
+    init = R.init_mlp_router(jax.random.PRNGKey(7), RCFG)
+    fed_params, _ = F.fedavg(jax.random.PRNGKey(0), split["train"], RCFG,
+                             fcfg, rounds=3, optimizer="sgd",
+                             full_batch=True, init=init)
+
+    # manual centralized GD (pooled, sample-weighted = D_i-weighted)
+    pooled = flatten_clients(split["train"])
+    params = init
+    for _ in range(3):
+        g = jax.grad(lambda p: R.router_loss(p, pooled, RCFG))(params)
+        params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    for a, b in zip(jax.tree.leaves(fed_params), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_fedavg_reduces_loss(split):
+    _, hist = F.fedavg(jax.random.PRNGKey(0), split["train"], RCFG, FCFG,
+                       rounds=6)
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_fedavg_aggregation_convex(split):
+    """The server aggregation (Alg. 1 line 11) is a weighted mean: it must
+    lie in the convex hull of the client params and match the manual
+    tensordot for the same client updates."""
+    opt = F._make_opt(FCFG, "adamw")
+    params = R.init_mlp_router(jax.random.PRNGKey(0), RCFG)
+    cp, _ = jax.vmap(lambda d, k: F.client_update(params, d, k, RCFG, FCFG,
+                                                  opt, 2),
+                     in_axes=(0, 0))(split["train"],
+                                     jax.random.split(jax.random.PRNGKey(1),
+                                                      4))
+    wts = F.dataset_sizes(split["train"])
+    wts = wts / jnp.sum(wts)
+    agg = jax.tree.map(
+        lambda s_: jnp.tensordot(wts, s_.astype(jnp.float32), axes=1), cp)
+    for leaf, stack in zip(jax.tree.leaves(agg), jax.tree.leaves(cp)):
+        lo = np.asarray(stack).min(0) - 1e-5
+        hi = np.asarray(stack).max(0) + 1e-5
+        a = np.asarray(leaf)
+        assert ((a >= lo) & (a <= hi)).all()
+
+
+# -------------------------------------------------------------- personalization
+
+def test_mixture_weights_bounds_and_edges():
+    e_f = jnp.array([0.1, 0.5, jnp.inf, jnp.inf])
+    e_l = jnp.array([0.1, jnp.inf, 0.2, jnp.inf])
+    w = P.mixture_weights(e_f, e_l)
+    assert bool(jnp.all((w >= 0) & (w <= 1)))
+    assert w[1] == 0.0   # local never logged m → use fed
+    assert w[2] == 1.0   # fed never saw m → use local
+    assert w[3] == 0.0
+
+
+def test_personalized_interpolates(split):
+    di = client_slice(split["train"], 0)
+    fed = lambda x: (jnp.full((x.shape[0], 5), 0.8),
+                     jnp.full((x.shape[0], 5), 0.5))
+    loc = lambda x: (jnp.full((x.shape[0], 5), 0.2),
+                     jnp.full((x.shape[0], 5), 0.1))
+    mixed, (wa, wc) = P.make_personalized(fed, loc, di, 5)
+    A, C = mixed(di["x"][:3])
+    assert bool(jnp.all((A >= 0.2 - 1e-6) & (A <= 0.8 + 1e-6)))
+    assert bool(jnp.all((wa >= 0) & (wa <= 1)))
+
+
+# ------------------------------------------------------------------ expansion
+
+def test_mlp_model_onboarding_trains_only_new_head(split):
+    key = jax.random.PRNGKey(0)
+    base, _ = F.fedavg(key, split["train"], RCFG, FCFG, rounds=2)
+    calib = flatten_clients(split["train"])
+    # pretend model 5 is new: relabel some samples
+    calib = dict(calib)
+    calib["m"] = jnp.where(calib["m"] == 0, 5, calib["m"])
+    new_params, _ = E.onboard_models_mlp(key, base, calib, RCFG, FCFG, 1,
+                                         steps=30)
+    assert new_params["heads"]["acc_w"].shape[1] == 6
+    # frozen trunk + old heads unchanged
+    for a, b in zip(jax.tree.leaves(base["trunk"]),
+                    jax.tree.leaves(new_params["trunk"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(base["heads"]["acc_w"]),
+        np.asarray(new_params["heads"]["acc_w"][:, :5]))
+
+
+def test_kmeans_model_onboarding(split):
+    r = KR.fed_kmeans_router(jax.random.PRNGKey(0), split["train"], RCFG,
+                             num_models=5)
+    calib = {"x": split["test_global"]["x"][:100],
+             "acc": jnp.ones(100) * 0.7, "cost": jnp.ones(100) * 0.3,
+             "w": jnp.ones(100)}
+    r2 = KR.add_model_stats(r, calib)
+    assert r2["A"].shape == (RCFG.k_global, 6)
+    np.testing.assert_array_equal(np.asarray(r["A"]),
+                                  np.asarray(r2["A"][:, :5]))
+
+
+def test_kmeans_client_onboarding_counts_add(split):
+    r = KR.fed_kmeans_router(jax.random.PRNGKey(0), split["train"], RCFG,
+                             num_models=5)
+    r2 = KR.merge_client_stats(r, split["train"], RCFG, num_models=5)
+    assert float(jnp.sum(r2["n"])) == pytest.approx(
+        2 * float(jnp.sum(r["n"])), rel=1e-6)
+
+
+# ------------------------------------------------------------------ extras
+
+def test_fedavg_dp_noise_option(split):
+    """dp_sigma=0 is exact; dp_sigma>0 perturbs but still trains."""
+    p0, h0 = F.fedavg(jax.random.PRNGKey(5), split["train"], RCFG, FCFG,
+                      rounds=6, dp_sigma=0.0)
+    p1, h1 = F.fedavg(jax.random.PRNGKey(5), split["train"], RCFG, FCFG,
+                      rounds=6, dp_sigma=1e-3)
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1))]
+    assert max(diffs) > 1e-5           # noise did something
+    assert h1["loss"][-1] < h1["loss"][0]   # and training still converges
+
+
+def test_secure_aggregation_masks_cancel(split):
+    """Masked aggregate ≡ plain weighted mean; individual contributions are
+    hidden (far from the raw updates)."""
+    from repro.core import secure_agg as SA
+    key = jax.random.PRNGKey(0)
+    N = 4
+    updates = [R.init_mlp_router(jax.random.PRNGKey(10 + i), RCFG)
+               for i in range(N)]
+    wts = [1.0, 2.0, 3.0, 4.0]
+    round_key = jax.random.PRNGKey(99)
+    masked = [SA.mask_update(round_key, i, N, updates[i], wts[i])
+              for i in range(N)]
+    agg = SA.secure_aggregate(masked, sum(wts))
+    # plain weighted mean
+    want = jax.tree.map(
+        lambda *ls: sum(w * l for w, l in zip(wts, ls)) / sum(wts), *updates)
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+    # privacy: a masked contribution is nowhere near the raw update
+    raw0 = jax.tree.leaves(updates[0])[0]
+    msk0 = jax.tree.leaves(masked[0])[0]
+    assert float(jnp.mean(jnp.abs(msk0 - raw0))) > 1.0
