@@ -13,8 +13,7 @@ import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
+from repro import routers
 from repro.data.partition import client_slice, federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
 
@@ -32,28 +31,30 @@ def run():
     split = federated_split(jax.random.PRNGKey(22), corpus, fcfg)
     tg = split["test_global"]
 
-    fed_mlp, _ = F.fedavg(jax.random.PRNGKey(23), split["train"], rcfg,
-                          fcfg, rounds=30)
-    auc_fed = C.auc_of(lambda x: F.R.apply_mlp_router(fed_mlp, x), tg)
+    fed_mlp, _ = routers.fit_federated(routers.make("mlp", rcfg),
+                                       split["train"], fcfg,
+                                       key=jax.random.PRNGKey(23),
+                                       rounds=30)
+    auc_fed = C.auc_of(fed_mlp, tg)
     aucs_loc = []
     for i in range(fcfg.num_clients):
-        p_i, _ = F.sgd_train(jax.random.PRNGKey(40 + i),
-                             client_slice(split["train"], i), rcfg, fcfg,
-                             steps=400)
-        aucs_loc.append(C.auc_of(
-            lambda x, p=p_i: F.R.apply_mlp_router(p, x), tg))
-    cen, _ = F.sgd_train(jax.random.PRNGKey(24),
-                         flatten_clients(split["train"]), rcfg, fcfg,
-                         steps=360)
-    auc_cen = C.auc_of(lambda x: F.R.apply_mlp_router(cen, x), tg)
+        p_i, _ = routers.fit_local(routers.make("mlp", rcfg),
+                                   client_slice(split["train"], i), fcfg,
+                                   key=jax.random.PRNGKey(40 + i),
+                                   steps=400)
+        aucs_loc.append(C.auc_of(p_i, tg))
+    cen, _ = routers.fit_local(routers.make("mlp", rcfg),
+                               flatten_clients(split["train"]), fcfg,
+                               key=jax.random.PRNGKey(24), steps=360)
+    auc_cen = C.auc_of(cen, tg)
 
-    km_fed = KR.fed_kmeans_router(jax.random.PRNGKey(25), split["train"],
-                                  rcfg, num_models=N_MODELS_PROX)
-    auc_kfed = C.auc_of(C.kmeans_pred(km_fed), tg)
+    km_fed = C.train_fed_kmeans(split, fcfg, seed=25, rcfg=rcfg,
+                                num_models=N_MODELS_PROX)
+    auc_kfed = C.auc_of(km_fed, tg)
     aucs_kloc = [
-        C.auc_of(C.kmeans_pred(KR.local_kmeans_router(
-            jax.random.PRNGKey(50 + i), client_slice(split["train"], i),
-            rcfg, num_models=N_MODELS_PROX)), tg)
+        C.auc_of(C.train_local_kmeans(client_slice(split["train"], i),
+                                      seed=50 + i, fcfg=fcfg, rcfg=rcfg,
+                                      num_models=N_MODELS_PROX), tg)
         for i in range(fcfg.num_clients)]
 
     us = t.us()

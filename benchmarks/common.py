@@ -1,20 +1,22 @@
-"""Shared setup for the paper-figure benchmarks."""
+"""Shared setup for the paper-figure benchmarks.
+
+All router construction/fitting goes through the unified ``repro.routers``
+API — benchmarks never touch the family-specific modules directly.
+"""
 from __future__ import annotations
 
 import functools
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import routers
 from repro.config import FedConfig, RouterConfig
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
-from repro.core import mlp_router as R
 from repro.core import policy
 from repro.data.partition import client_slice, federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
+from repro.routers import Router
 
 D_EMB = 48
 N_MODELS = 11
@@ -36,43 +38,54 @@ def corpus_and_split(alpha: float = 0.6, seed: int = 0,
     return corpus, split, fcfg
 
 
-def auc_of(pred_fn, test) -> float:
-    *_, auc = policy.eval_router(pred_fn, test["x"], test["acc_table"],
+def auc_of(router, test) -> float:
+    """Frontier AUC of a fitted Router (or a raw predict_fn, e.g. the
+    oracle's true tables) on one test split."""
+    pred = router.predict if isinstance(router, Router) else router
+    *_, auc = policy.eval_router(pred, test["x"], test["acc_table"],
                                  test["cost_table"])
     return auc
 
 
-def mlp_pred(params):
-    return lambda x: R.apply_mlp_router(params, x)
+def train_fed_mlp(split, fcfg, rounds=30, seed=2, rcfg=RCFG):
+    return routers.fit_federated(routers.make("mlp", rcfg), split["train"],
+                                 fcfg, key=jax.random.PRNGKey(seed),
+                                 rounds=rounds)
 
 
-def kmeans_pred(router):
-    return lambda x: KR.predict(router, x)
+def train_fed_kmeans(split, fcfg, seed=3, rcfg=RCFG, num_models=None):
+    router, _ = routers.fit_federated(
+        routers.make("kmeans", rcfg, num_models=num_models), split["train"],
+        fcfg, key=jax.random.PRNGKey(seed))
+    return router
 
 
-def train_fed_mlp(split, fcfg, rounds=30, seed=2):
-    params, hist = F.fedavg(jax.random.PRNGKey(seed), split["train"], RCFG,
-                            fcfg, rounds=rounds)
-    return params, hist
-
-
-def train_local_mlps(split, fcfg, steps=400, seed=100):
+def train_local_mlps(split, fcfg, steps=400, seed=100, rcfg=RCFG):
     out = []
     for i in range(split["train"]["x"].shape[0]):
-        p, _ = F.sgd_train(jax.random.PRNGKey(seed + i),
-                           client_slice(split["train"], i), RCFG, fcfg,
-                           steps=steps)
-        out.append(p)
+        r, _ = routers.fit_local(routers.make("mlp", rcfg),
+                                 client_slice(split["train"], i), fcfg,
+                                 key=jax.random.PRNGKey(seed + i),
+                                 steps=steps)
+        out.append(r)
     return out
 
 
-def train_centralized(split, fcfg, steps=None, seed=4):
+def train_local_kmeans(data_i, seed, fcfg=FCFG, rcfg=RCFG, num_models=None,
+                       k=None):
+    router, _ = routers.fit_local(
+        routers.make("kmeans", rcfg, num_models=num_models), data_i, fcfg,
+        key=jax.random.PRNGKey(seed), k=k)
+    return router
+
+
+def train_centralized(split, fcfg, steps=None, seed=4, rcfg=RCFG):
     pooled = flatten_clients(split["train"])
     steps = steps or fcfg.rounds * int(np.ceil(
         split["train"]["x"].shape[1] / fcfg.batch_size))
-    p, _ = F.sgd_train(jax.random.PRNGKey(seed), pooled, RCFG, fcfg,
-                       steps=steps)
-    return p
+    r, _ = routers.fit_local(routers.make("mlp", rcfg), pooled, fcfg,
+                             key=jax.random.PRNGKey(seed), steps=steps)
+    return r
 
 
 class Timer:

@@ -10,9 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import expansion as E
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
+from repro import routers
 
 
 def _subset(train, idx):
@@ -28,25 +26,27 @@ def run():
     old_train = _subset(split["train"], old_idx)
     new_train = _subset(split["train"], new_idx)
 
-    fed7, _ = F.fedavg(jax.random.PRNGKey(2), old_train, C.RCFG, fcfg,
-                       rounds=25)
-    auc_before = C.auc_of(C.mlp_pred(fed7), tg)
+    fed7, _ = routers.fit_federated(routers.make("mlp", C.RCFG), old_train,
+                                    fcfg, key=jax.random.PRNGKey(2),
+                                    rounds=25)
+    auc_before = C.auc_of(fed7, tg)
     # gentler adaptation: lower lr + distillation anchor (App. D.3)
     fcfg_adapt = dataclasses.replace(fcfg, lr=3e-4)
-    fed10, _ = E.onboard_clients_mlp(jax.random.PRNGKey(3), fed7, new_train,
-                                     C.RCFG, fcfg_adapt, rounds=10, beta=2.0)
-    auc_after = C.auc_of(C.mlp_pred(fed10), tg)
+    fed10 = fed7.onboard_clients(new_train, key=jax.random.PRNGKey(3),
+                                 fcfg=fcfg_adapt, rounds=10, beta=2.0)
+    auc_after = C.auc_of(fed10, tg)
 
     # forgetting check on original clients' local tests
     old_tests = [split["test"][i] for i in old_idx
                  if split["test"][i]["x"].shape[0] >= 10]
-    f_before = np.mean([C.auc_of(C.mlp_pred(fed7), te) for te in old_tests])
-    f_after = np.mean([C.auc_of(C.mlp_pred(fed10), te) for te in old_tests])
+    f_before = np.mean([C.auc_of(fed7, te) for te in old_tests])
+    f_after = np.mean([C.auc_of(fed10, te) for te in old_tests])
 
-    km7 = KR.fed_kmeans_router(jax.random.PRNGKey(4), old_train, C.RCFG)
-    km10 = KR.merge_client_stats(km7, new_train, C.RCFG)
-    auc_km_before = C.auc_of(C.kmeans_pred(km7), tg)
-    auc_km_after = C.auc_of(C.kmeans_pred(km10), tg)
+    km7, _ = routers.fit_federated(routers.make("kmeans", C.RCFG), old_train,
+                                   fcfg, key=jax.random.PRNGKey(4))
+    km10 = km7.onboard_clients(new_train)
+    auc_km_before = C.auc_of(km7, tg)
+    auc_km_after = C.auc_of(km10, tg)
 
     us = t.us()
     C.emit("fig12_mlp_auc_before_join", us, f"{auc_before:.4f}")

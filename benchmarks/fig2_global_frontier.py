@@ -2,11 +2,10 @@
 (MLP-Router and K-Means-Router accuracy–cost AUC)."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import kmeans_router as KR
+from repro.data.partition import client_slice
 
 
 def run():
@@ -15,18 +14,15 @@ def run():
     t = C.Timer()
 
     fed_mlp, _ = C.train_fed_mlp(split, fcfg)
-    auc_fed_mlp = C.auc_of(C.mlp_pred(fed_mlp), tg)
+    auc_fed_mlp = C.auc_of(fed_mlp, tg)
     locals_mlp = C.train_local_mlps(split, fcfg)
-    auc_loc_mlp = float(np.mean([C.auc_of(C.mlp_pred(p), tg)
-                                 for p in locals_mlp]))
+    auc_loc_mlp = float(np.mean([C.auc_of(r, tg) for r in locals_mlp]))
 
-    r_fed = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
-                                 C.RCFG)
-    auc_fed_km = C.auc_of(C.kmeans_pred(r_fed), tg)
+    r_fed = C.train_fed_kmeans(split, fcfg)
+    auc_fed_km = C.auc_of(r_fed, tg)
     auc_loc_km = float(np.mean([
-        C.auc_of(C.kmeans_pred(KR.local_kmeans_router(
-            jax.random.PRNGKey(30 + i),
-            jax.tree.map(lambda a: a[i], split["train"]), C.RCFG)), tg)
+        C.auc_of(C.train_local_kmeans(client_slice(split["train"], i),
+                                      seed=30 + i, fcfg=fcfg), tg)
         for i in range(fcfg.num_clients)]))
 
     us = t.us()

@@ -2,11 +2,10 @@
 test set — the in-distribution model-coverage effect."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import kmeans_router as KR
+from repro.data.partition import client_slice
 
 
 def run():
@@ -14,20 +13,18 @@ def run():
     t = C.Timer()
     fed_mlp, _ = C.train_fed_mlp(split, fcfg)
     locals_mlp = C.train_local_mlps(split, fcfg)
-    r_fed = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
-                                 C.RCFG)
+    r_fed = C.train_fed_kmeans(split, fcfg)
 
     fed_m, loc_m, fed_k, loc_k = [], [], [], []
     for i, test_i in enumerate(split["test"]):
         if test_i["x"].shape[0] < 10:
             continue
-        fed_m.append(C.auc_of(C.mlp_pred(fed_mlp), test_i))
-        loc_m.append(C.auc_of(C.mlp_pred(locals_mlp[i]), test_i))
-        fed_k.append(C.auc_of(C.kmeans_pred(r_fed), test_i))
-        r_i = KR.local_kmeans_router(
-            jax.random.PRNGKey(40 + i),
-            jax.tree.map(lambda a: a[i], split["train"]), C.RCFG)
-        loc_k.append(C.auc_of(C.kmeans_pred(r_i), test_i))
+        fed_m.append(C.auc_of(fed_mlp, test_i))
+        loc_m.append(C.auc_of(locals_mlp[i], test_i))
+        fed_k.append(C.auc_of(r_fed, test_i))
+        r_i = C.train_local_kmeans(client_slice(split["train"], i),
+                                   seed=40 + i, fcfg=fcfg)
+        loc_k.append(C.auc_of(r_i, test_i))
 
     us = t.us()
     C.emit("fig3_mlp_fed_mean_local_auc", us, f"{np.mean(fed_m):.4f}")

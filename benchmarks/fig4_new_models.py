@@ -11,19 +11,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import expansion as E
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
+from repro import routers
 from repro.core import policy
 from repro.data.partition import federated_split
 from repro.data.synthetic import observe
 
 
-def _restricted_pred(pred, keep):
-    def f(x):
-        A, Cc = pred(x)
-        return A[:, keep], Cc[:, keep]
-    return f
+def _auc_on(router, tg, models=None):
+    acc, cost = tg["acc_table"], tg["cost_table"]
+    if models is not None:
+        acc, cost = acc[:, models], cost[:, models]
+    return policy.eval_router(router.predict, tg["x"], acc, cost)[-1]
 
 
 def run():
@@ -39,13 +37,14 @@ def run():
     t = C.Timer()
 
     # ---- initial training on the reduced pool
-    fed8, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], rcfg8, fcfg)
-    auc_before = policy.eval_router(
-        lambda x: F.R.apply_mlp_router(fed8, x), tg["x"],
-        tg["acc_table"][:, base_models], tg["cost_table"][:, base_models])[-1]
+    fed8, _ = routers.fit_federated(routers.make("mlp", rcfg8),
+                                    split["train"], fcfg,
+                                    key=jax.random.PRNGKey(2))
+    auc_before = _auc_on(fed8, tg, base_models)
 
-    km8 = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"], rcfg8,
-                               num_models=M - 3)
+    km8, _ = routers.fit_federated(routers.make("kmeans", rcfg8),
+                                   split["train"], fcfg,
+                                   key=jax.random.PRNGKey(3))
 
     # ---- calibration set: 10% of each client's prompts × 3 new models
     rng = np.random.default_rng(0)
@@ -70,24 +69,18 @@ def run():
              "w": jnp.ones(3 * len(calib_q))}
 
     # ---- MLP: append + train only new heads (frozen trunk)
-    fed11, _ = E.onboard_models_mlp(jax.random.PRNGKey(4), fed8, calib,
-                                    rcfg8, fcfg, 3, steps=400)
-    auc_after = policy.eval_router(
-        lambda x: F.R.apply_mlp_router(fed11, x), tg["x"], tg["acc_table"],
-        tg["cost_table"])[-1]
+    fed11 = fed8.onboard_model(calib, key=jax.random.PRNGKey(4), fcfg=fcfg,
+                               n_new=3, steps=400)
+    auc_after = _auc_on(fed11, tg)
 
     # ---- K-means: training-free stat estimation per new model
     km11 = km8
     for j, m_new in enumerate(withheld):
         sel = slice(j * len(calib_q), (j + 1) * len(calib_q))
-        km11 = KR.add_model_stats(km11, {k: calib[k][sel]
-                                         for k in ("x", "acc", "cost", "w")})
-    auc_km_before = policy.eval_router(
-        lambda x: KR.predict(km8, x), tg["x"],
-        tg["acc_table"][:, base_models], tg["cost_table"][:, base_models])[-1]
-    auc_km_after = policy.eval_router(
-        lambda x: KR.predict(km11, x), tg["x"], tg["acc_table"],
-        tg["cost_table"])[-1]
+        km11 = km11.onboard_model({k: calib[k][sel]
+                                   for k in ("x", "acc", "cost", "w")})
+    auc_km_before = _auc_on(km8, tg, base_models)
+    auc_km_after = _auc_on(km11, tg)
 
     us = t.us()
     C.emit("fig4_mlp_auc_before_expansion", us, f"{auc_before:.4f}")

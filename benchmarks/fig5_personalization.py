@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import kmeans_router as KR
+from repro import routers
 from repro.core import personalization as P
 from repro.data.partition import client_slice
 
@@ -44,8 +44,7 @@ def run():
     t = C.Timer()
     fed_mlp, _ = C.train_fed_mlp(split, fcfg)
     locals_mlp = C.train_local_mlps(split, fcfg)
-    km_fed = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
-                                  C.RCFG)
+    km_fed = C.train_fed_kmeans(split, fcfg)
 
     rows = {"fed": [], "loc": [], "ada": [], "ada_paper": [],
             "kfed": [], "kloc": [], "kada": []}
@@ -54,32 +53,27 @@ def run():
             continue
         di = client_slice(split["train"], i)
         fit_i, cal_i = _holdout(di, seed=100 + i)
-        fed_fn = C.mlp_pred(fed_mlp)
-        loc_fn = C.mlp_pred(locals_mlp[i])
         # holdout-calibrated local router (fit on 80%, calibrate on 20%)
-        from repro.core import federated as F
-        p_fit, _ = F.sgd_train(jax.random.PRNGKey(200 + i), fit_i, C.RCFG,
-                               fcfg, steps=300)
-        loc_fit_fn = C.mlp_pred(p_fit)
-        ada_fn, _ = P.make_personalized(fed_fn, loc_fit_fn, cal_i,
-                                        C.N_MODELS)
+        p_fit, _ = routers.fit_local(routers.make("mlp", C.RCFG), fit_i,
+                                     fcfg, key=jax.random.PRNGKey(200 + i),
+                                     steps=300)
+        ada_fn, _ = P.make_personalized(fed_mlp.predict, p_fit.predict,
+                                        cal_i, C.N_MODELS)
         # paper-faithful variant: calibrate on the very training points
-        ada_p_fn, _ = P.make_personalized(fed_fn, loc_fn, di, C.N_MODELS)
-        rows["fed"].append(C.auc_of(fed_fn, test_i))
-        rows["loc"].append(C.auc_of(loc_fn, test_i))
+        ada_p_fn, _ = P.make_personalized(fed_mlp.predict,
+                                          locals_mlp[i].predict, di,
+                                          C.N_MODELS)
+        rows["fed"].append(C.auc_of(fed_mlp, test_i))
+        rows["loc"].append(C.auc_of(locals_mlp[i], test_i))
         rows["ada"].append(C.auc_of(ada_fn, test_i))
         rows["ada_paper"].append(C.auc_of(ada_p_fn, test_i))
 
-        km_loc = KR.local_kmeans_router(jax.random.PRNGKey(60 + i), di,
-                                        C.RCFG)
-        km_fit = KR.local_kmeans_router(jax.random.PRNGKey(60 + i), fit_i,
-                                        C.RCFG)
-        kfed_fn = C.kmeans_pred(km_fed)
-        kloc_fn = C.kmeans_pred(km_loc)
-        kada_fn, _ = P.make_personalized(kfed_fn, C.kmeans_pred(km_fit),
+        km_loc = C.train_local_kmeans(di, seed=60 + i, fcfg=fcfg)
+        km_fit = C.train_local_kmeans(fit_i, seed=60 + i, fcfg=fcfg)
+        kada_fn, _ = P.make_personalized(km_fed.predict, km_fit.predict,
                                          cal_i, C.N_MODELS)
-        rows["kfed"].append(C.auc_of(kfed_fn, test_i))
-        rows["kloc"].append(C.auc_of(kloc_fn, test_i))
+        rows["kfed"].append(C.auc_of(km_fed, test_i))
+        rows["kloc"].append(C.auc_of(km_loc, test_i))
         rows["kada"].append(C.auc_of(kada_fn, test_i))
 
     us = t.us()

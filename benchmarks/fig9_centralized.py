@@ -1,12 +1,7 @@
 """Fig. 9 / App. D.1: federated training ≈ centralized training."""
 from __future__ import annotations
 
-import jax
-
 from benchmarks import common as C
-from repro.core import kmeans_router as KR
-from repro.core.kmeans import kmeans
-from repro.core.kmeans_router import _cluster_stats, _finalize
 from repro.data.partition import flatten_clients
 
 
@@ -17,21 +12,17 @@ def run():
 
     fed_mlp, _ = C.train_fed_mlp(split, fcfg)
     cen_mlp = C.train_centralized(split, fcfg)
-    auc_fed = C.auc_of(C.mlp_pred(fed_mlp), tg)
-    auc_cen = C.auc_of(C.mlp_pred(cen_mlp), tg)
+    auc_fed = C.auc_of(fed_mlp, tg)
+    auc_cen = C.auc_of(cen_mlp, tg)
 
-    # centralized K-means baseline: pooled K-means + pooled stats
+    # centralized K-means baseline: pooled K-means (K = k_global) + pooled
+    # stats — exactly fit_local on the flattened client data
     pooled = flatten_clients(split["train"])
-    cents, _ = kmeans(jax.random.PRNGKey(5), pooled["x"], C.RCFG.k_global,
-                      iters=C.RCFG.kmeans_iters, n_init=C.RCFG.n_init,
-                      mask=pooled["w"] > 0)
-    a, c, n = _cluster_stats(cents, pooled, C.RCFG.k_global, C.N_MODELS)
-    A, Cc = _finalize(a, c, n, C.RCFG.c_max)
-    cen_km = {"centroids": cents, "A": A, "C": Cc, "n": n}
-    fed_km = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
-                                  C.RCFG)
-    auc_fed_km = C.auc_of(C.kmeans_pred(fed_km), tg)
-    auc_cen_km = C.auc_of(C.kmeans_pred(cen_km), tg)
+    cen_km = C.train_local_kmeans(pooled, seed=5, fcfg=fcfg,
+                                  k=C.RCFG.k_global)
+    fed_km = C.train_fed_kmeans(split, fcfg)
+    auc_fed_km = C.auc_of(fed_km, tg)
+    auc_cen_km = C.auc_of(cen_km, tg)
 
     us = t.us()
     C.emit("fig9_mlp_fed_auc", us, f"{auc_fed:.4f}")

@@ -10,9 +10,7 @@ import dataclasses
 import jax
 
 from benchmarks import common as C
-from repro.core import kmeans_router as KR
-from repro.core.kmeans import kmeans
-from repro.core.kmeans_router import _cluster_stats, _finalize
+from repro import routers
 from repro.data.partition import federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
 
@@ -30,18 +28,15 @@ def run():
         tg = split["test_global"]
         pooled = flatten_clients(split["train"])
 
-        from repro.core import federated as F
-        p_cen, _ = F.sgd_train(jax.random.PRNGKey(3), pooled, rcfg, fcfg,
-                               steps=300)
-        auc_mlp = C.auc_of(lambda x: F.R.apply_mlp_router(p_cen, x), tg)
+        p_cen, _ = routers.fit_local(routers.make("mlp", rcfg), pooled,
+                                     fcfg, key=jax.random.PRNGKey(3),
+                                     steps=300)
+        auc_mlp = C.auc_of(p_cen, tg)
 
-        cents, _ = kmeans(jax.random.PRNGKey(4), pooled["x"], rcfg.k_global,
-                          iters=rcfg.kmeans_iters, n_init=rcfg.n_init,
-                          mask=pooled["w"] > 0)
-        a, c, n = _cluster_stats(cents, pooled, rcfg.k_global, C.N_MODELS)
-        A, Cc = _finalize(a, c, n, rcfg.c_max)
-        auc_km = C.auc_of(C.kmeans_pred(
-            {"centroids": cents, "A": A, "C": Cc, "n": n}), tg)
+        km_cen, _ = routers.fit_local(routers.make("kmeans", rcfg), pooled,
+                                      fcfg, key=jax.random.PRNGKey(4),
+                                      k=rcfg.k_global)
+        auc_km = C.auc_of(km_cen, tg)
 
         us = t.us()
         C.emit(f"tab1_d{d_emb}_mlp_auc", us, f"{auc_mlp:.4f}")

@@ -9,10 +9,9 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import numpy as np
 
 from benchmarks import common as C
-from repro.core import federated as F
+from repro import routers
 from repro.data.partition import federated_split
 from repro.data.synthetic import make_eval_corpus
 
@@ -32,8 +31,10 @@ def run():
                                    participation=1.0, seed=6,
                                    dirichlet_alpha=100.0)  # near-iid
         split = federated_split(jax.random.PRNGKey(6), corpus, fcfg)
-        _, hist = F.fedavg(jax.random.PRNGKey(7), split["train"], C.RCFG,
-                           fcfg, rounds=10)
+        _, hist = routers.fit_federated(routers.make("mlp", C.RCFG),
+                                        split["train"], fcfg,
+                                        key=jax.random.PRNGKey(7),
+                                        rounds=10)
         out[n_clients] = hist["loss"]
         C.emit(f"thm51_N{n_clients}_loss_round10", t.us(),
                f"{hist['loss'][-1]:.4f}")

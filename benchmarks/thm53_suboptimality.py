@@ -11,7 +11,7 @@ import jax
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import federated as F
+from repro import routers
 from repro.data.partition import federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
 
@@ -31,9 +31,9 @@ def run():
     gaps = {}
     for D in (250, 1000, 4000):
         sub = jax.tree.map(lambda a: a[order[:D]], pooled)
-        p, _ = F.sgd_train(jax.random.PRNGKey(10), sub, C.RCFG, fcfg,
-                           steps=400)
-        auc = C.auc_of(C.mlp_pred(p), tg)
+        p, _ = routers.fit_local(routers.make("mlp", C.RCFG), sub, fcfg,
+                                 key=jax.random.PRNGKey(10), steps=400)
+        auc = C.auc_of(p, tg)
         gaps[D] = auc_oracle - auc
         C.emit(f"thm53_D{D}_subopt_gap", t.us(), f"{gaps[D]:.4f}")
     C.emit("thm53_gap_shrinks_with_D", t.us(),

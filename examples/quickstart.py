@@ -1,19 +1,21 @@
 """Quickstart: federated LLM-router training in ~60 seconds on CPU.
 
-Builds a synthetic RouterBench-like corpus, partitions it across 10
-heterogeneous clients (Dirichlet α=0.6, one logged model per query), trains
-the federated MLP-Router (Alg. 1) and the federated K-Means-Router (Alg. 2),
-and compares their accuracy–cost frontiers against client-local baselines.
+Everything goes through the unified ``repro.routers`` API: build a router
+by name (``routers.make``), fit it with the one federated entry point
+(``routers.fit_federated`` — iterative FedAvg for the parametric "mlp"
+family, one-shot statistics aggregation for the nonparametric "kmeans"
+family), then ``predict``/``route``. Builds a synthetic RouterBench-like
+corpus, partitions it across 10 heterogeneous clients (Dirichlet α=0.6,
+one logged model per query), trains both federated router families, and
+compares their accuracy–cost frontiers against client-local baselines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+from repro import routers
 from repro.config import FedConfig, RouterConfig
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
-from repro.core import mlp_router as R
 from repro.core import policy
 from repro.data.partition import client_slice, federated_split
 from repro.data.synthetic import make_eval_corpus
@@ -29,41 +31,44 @@ def main():
     split = federated_split(jax.random.PRNGKey(1), corpus, fcfg)
     tg = split["test_global"]
 
-    def auc(pred):
-        *_, a = policy.eval_router(pred, tg["x"], tg["acc_table"],
+    def auc(router):
+        *_, a = policy.eval_router(router.predict, tg["x"], tg["acc_table"],
                                    tg["cost_table"])
         return a
 
     print("== federated MLP-Router (Algorithm 1, 20 rounds) ==")
-    fed_mlp, hist = F.fedavg(jax.random.PRNGKey(2), split["train"], rcfg,
-                             fcfg)
+    fed_mlp, hist = routers.fit_federated(routers.make("mlp", rcfg),
+                                          split["train"], fcfg,
+                                          key=jax.random.PRNGKey(2))
     print(f"   round loss {hist['loss'][0]:.3f} → {hist['loss'][-1]:.3f}")
 
     print("== federated K-Means-Router (Algorithm 2, one-shot) ==")
-    fed_km = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
-                                  rcfg)
+    fed_km, _ = routers.fit_federated(routers.make("kmeans", rcfg),
+                                      split["train"], fcfg,
+                                      key=jax.random.PRNGKey(3))
 
     print("== client-local baselines (3 representative clients) ==")
     loc_aucs = []
     for i in range(3):
-        p_i, _ = F.sgd_train(jax.random.PRNGKey(10 + i),
-                             client_slice(split["train"], i), rcfg, fcfg,
-                             steps=300)
-        loc_aucs.append(auc(lambda x, p=p_i: R.apply_mlp_router(p, x)))
+        loc_i, _ = routers.fit_local(routers.make("mlp", rcfg),
+                                     client_slice(split["train"], i), fcfg,
+                                     key=jax.random.PRNGKey(10 + i),
+                                     steps=300)
+        loc_aucs.append(auc(loc_i))
 
-    a_fed = auc(lambda x: R.apply_mlp_router(fed_mlp, x))
-    a_km = auc(lambda x: KR.predict(fed_km, x))
-    a_oracle = auc(lambda x: (tg["acc_table"], tg["cost_table"]))
-    print(f"\nglobal-test frontier AUC:")
-    print(f"  federated MLP-Router     {a_fed:.3f}")
-    print(f"  federated K-Means-Router {a_km:.3f}")
+    class _Oracle:
+        predict = staticmethod(lambda x: (tg["acc_table"], tg["cost_table"]))
+
+    print("\nglobal-test frontier AUC:")
+    print(f"  federated MLP-Router     {auc(fed_mlp):.3f}")
+    print(f"  federated K-Means-Router {auc(fed_km):.3f}")
     print(f"  client-local mean        {np.mean(loc_aucs):.3f}")
-    print(f"  oracle                   {a_oracle:.3f}")
+    print(f"  oracle                   {auc(_Oracle):.3f}")
 
     print("\n== routing a few queries at different λ ==")
-    A_est, C_est = R.apply_mlp_router(fed_mlp, tg["x"][:5])
     for lam in (0.0, 1.0, 100.0):
-        print(f"  λ={lam:<6}→ models {policy.route(A_est, C_est, lam).tolist()}")
+        m = fed_mlp.route(tg["x"][:5], lam)
+        print(f"  λ={lam:<6}→ models {m.tolist()}")
 
 
 if __name__ == "__main__":

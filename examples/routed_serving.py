@@ -1,9 +1,11 @@
 """Routed serving end-to-end (deliverable b).
 
 Builds a pool of two real (reduced) models from the assigned architectures,
-trains a federated router on synthetic evaluations of that pool, then serves
-a batch of prompts through the RoutedServer gateway — per-request model
-selection, batched prefill + decode, λ chosen at request time.
+trains a federated router on synthetic evaluations of that pool through the
+unified ``repro.routers`` API, then serves a batch of prompts through the
+RoutedServer gateway — which takes the fitted ``Router`` directly:
+per-request model selection on the fused Pallas hot path, batched prefill +
+decode, λ chosen at request time.
 
   PYTHONPATH=src python examples/routed_serving.py
 """
@@ -11,10 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import routers
 from repro.config import FedConfig, RouterConfig
 from repro.configs import get_config
-from repro.core import federated as F
-from repro.core import mlp_router as R
 from repro.data.encoder import encode
 from repro.models import init_params
 from repro.serve.gateway import PoolModel, RoutedServer
@@ -66,10 +67,11 @@ def main():
     data["m"] = data["m"].astype(jnp.int32)
 
     print("== federated router training over the pool evaluations ==")
-    params, hist = F.fedavg(jax.random.PRNGKey(2), data, rcfg, fcfg)
+    router, hist = routers.fit_federated(routers.make("mlp", rcfg), data,
+                                         fcfg, key=jax.random.PRNGKey(2))
     print(f"   loss {hist['loss'][0]:.3f} → {hist['loss'][-1]:.3f}")
 
-    srv = RoutedServer(pool, params, d_emb=d_emb)
+    srv = RoutedServer(pool, router)
     for lam in (0.0, 2.0):
         out = srv.generate(PROMPTS, lam=lam, max_new_tokens=4)
         print(f"\n== λ={lam}: total cost {out['total_cost']:.2f} ==")

@@ -1,4 +1,4 @@
-"""The paper's contribution: federated LLM-router training.
+"""The paper's contribution: federated LLM-router training (the math).
 
   * policy            — utility U_λ, frontier sweep, AUC (§3, §6)
   * mlp_router        — parametric router (§4.1)
@@ -6,6 +6,10 @@
   * federated         — FedAvg simulation (Alg. 1) + local/centralized ERM
   * personalization   — adaptive federated/local mixture (§6.4)
   * expansion         — model & client onboarding (§6.3, App. D.3)
+
+Consumers (benchmarks, examples, serving, launch drivers) should not use
+these modules directly: the public surface is ``repro.routers`` — one
+``Router`` interface, a string registry, and ``fit_federated``.
 """
 from repro.core import (  # noqa: F401
     expansion,

@@ -56,9 +56,10 @@ def client_update(params, data_i, key, rcfg: RouterConfig, fcfg: FedConfig,
         loss = R.router_loss(p, batch, rcfg, rng=rng)
         if distill is not None:
             theta0, beta = distill
-            loss = loss + beta * _distill_loss(p, theta0, batch["x"],
-                                               batch.get("w",
-                                                         jnp.ones(batch["x"].shape[0])))
+            w = batch.get("w")
+            if w is None:  # don't build the all-ones fallback eagerly
+                w = jnp.ones(batch["x"].shape[0])
+            loss = loss + beta * _distill_loss(p, theta0, batch["x"], w)
         return loss
 
     def step(carry, s):

@@ -4,7 +4,9 @@ Maps the paper's client/server communication pattern onto the TPU mesh
 (DESIGN.md §3): clients are sharded over a 1-D "clients" mesh axis with
 ``shard_map``; each device runs its local clients' FedAvg updates (vmap);
 the server aggregation (Alg. 1 line 11) becomes a weighted ``psum`` — the
-TPU-idiomatic replacement for a parameter server.
+TPU-idiomatic replacement for a parameter server. All of that now lives
+behind ``repro.routers.fit_federated(..., mesh=...)``; this driver just
+builds the mesh, the data, and the router.
 
 Run standalone (simulates 8 devices on CPU):
   PYTHONPATH=src python -m repro.launch.fed_train --clients 16 --rounds 10
@@ -17,17 +19,13 @@ if __name__ == "__main__":  # only force fake devices when run as a driver
 
 # ruff: noqa: E402
 import argparse
-import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import Mesh
 
+from repro import routers
 from repro.config import FedConfig, RouterConfig
-from repro.core import federated as F
-from repro.core import mlp_router as R
 from repro.core import policy
 from repro.data.partition import federated_split
 from repro.data.synthetic import make_eval_corpus
@@ -38,62 +36,14 @@ def make_client_mesh():
     return Mesh(devs, ("clients",))
 
 
-def fedavg_round_sharded(params, data, key, rcfg, fcfg, opt, max_steps,
-                         mesh: Mesh):
-    """One FedAvg round with clients sharded across devices."""
-    N = data["x"].shape[0]
-    n_dev = mesh.shape["clients"]
-    assert N % n_dev == 0, "num_clients must divide the client-mesh size"
-    key, k_sel, k_cli = jax.random.split(key, 3)
-    n_active = max(1, int(round(fcfg.participation * N)))
-    perm = jax.random.permutation(k_sel, N)
-    active = jnp.zeros((N,)).at[perm[:n_active]].set(1.0)
-    keys = jax.random.split(k_cli, N)
-
-    upd = functools.partial(F.client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
-                            max_steps=max_steps)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(), P("clients"), P("clients"), P("clients")),
-        out_specs=(P(), P()),
-        check_vma=False)
-    def round_fn(params, data_shard, keys_shard, active_shard):
-        # local clients on this device
-        cp, closs = jax.vmap(lambda d, k: upd(params, d, k)[0:2],
-                             in_axes=(0, 0))(data_shard, keys_shard)
-        w = jnp.sum(data_shard["w"], axis=-1) * active_shard
-        wsum = jax.lax.psum(jnp.sum(w), "clients")
-        agg = jax.tree.map(
-            lambda s: jax.lax.psum(
-                jnp.tensordot(w, s.astype(jnp.float32), axes=1), "clients")
-            / jnp.maximum(wsum, 1e-12),
-            cp)
-        loss = jax.lax.psum(jnp.sum(closs * w), "clients") / jnp.maximum(
-            wsum, 1e-12)
-        return agg, loss
-
-    new_params, loss = round_fn(params, data, keys, active)
-    return jax.tree.map(lambda a, b: a.astype(b.dtype), new_params,
-                        params), loss
-
-
 def fedavg_distributed(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
                        rounds: int, mesh: Mesh):
-    opt = F._make_opt(fcfg, "adamw")
-    D_max = data["x"].shape[1]
-    max_steps = max(1, int(np.ceil(D_max / fcfg.batch_size)))
-    key, k_init = jax.random.split(key)
-    params = R.init_mlp_router(k_init, rcfg)
-    losses = []
-    step = jax.jit(functools.partial(
-        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg, opt=opt,
-        max_steps=max_steps, mesh=mesh))
-    for _ in range(rounds):
-        key, k_r = jax.random.split(key)
-        params, loss = step(params, data, k_r)
-        losses.append(float(loss))
-    return params, losses
+    """Sharded Alg. 1 through the unified entry point. Returns
+    (fitted MLPRouter, per-round losses)."""
+    router = routers.make("mlp", rcfg)
+    router, hist = routers.fit_federated(router, data, fcfg, key=key,
+                                         rounds=rounds, mesh=mesh)
+    return router, hist["loss"]
 
 
 def main():
@@ -111,12 +61,12 @@ def main():
 
     mesh = make_client_mesh()
     print(f"devices: {len(jax.devices())}, clients: {args.clients}")
-    params, losses = fedavg_distributed(jax.random.PRNGKey(2),
+    router, losses = fedavg_distributed(jax.random.PRNGKey(2),
                                         split["train"], rcfg, fcfg,
                                         rounds=args.rounds, mesh=mesh)
     tg = split["test_global"]
-    *_, auc = policy.eval_router(lambda x: R.apply_mlp_router(params, x),
-                                 tg["x"], tg["acc_table"], tg["cost_table"])
+    *_, auc = policy.eval_router(router.predict, tg["x"], tg["acc_table"],
+                                 tg["cost_table"])
     print(f"loss: {losses[0]:.4f} → {losses[-1]:.4f}; global-test AUC {auc:.3f}")
 
 

@@ -1,0 +1,30 @@
+"""``repro.routers`` — the single public API for routing.
+
+One ``Router`` interface for every family, a string registry, and one
+federated-fit entry point:
+
+    from repro import routers
+
+    router = routers.make("mlp", rcfg)          # or "kmeans"
+    router, hist = routers.fit_federated(router, split["train"], fcfg,
+                                         key=jax.random.PRNGKey(0))
+    A, C = router.predict(x)                    # estimates (Q, M)
+    m = router.route(x, lam=0.5)                # fused decision hot path
+    router.save("router.msgpack")
+    router = routers.load("router.msgpack", rcfg)
+
+Families: "mlp" (parametric, Alg. 1 FedAvg — iterative, shard_map-able)
+and "kmeans" (nonparametric, Alg. 2 — one-shot statistics aggregation).
+New families subclass ``Router`` and ``@register("name")`` themselves.
+"""
+from repro.routers.base import Router  # noqa: F401
+from repro.routers.fit import fit_federated, fit_local  # noqa: F401
+from repro.routers.kmeans import KMeansRouter  # noqa: F401
+from repro.routers.mlp import MLPRouter  # noqa: F401
+from repro.routers.registry import (  # noqa: F401
+    available,
+    get,
+    load,
+    make,
+    register,
+)

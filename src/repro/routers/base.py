@@ -1,0 +1,139 @@
+"""The unified ``Router`` interface (public API of ``repro.routers``).
+
+Every router family — parametric (MLP, Alg. 1) or nonparametric (K-means,
+Alg. 2) — is exposed through the same small surface:
+
+  * ``init(key)``                 fresh state (no-op for one-shot families)
+  * ``predict(x) -> (A, C)``      per-query accuracy / cost estimates
+  * ``route(x, lam) -> m``        argmax_m A − λ·C on the family's hot path
+  * ``loss(batch)``               training loss (parametric families only)
+  * ``onboard_model(calib, ...)`` §6.3 pool expansion
+  * ``onboard_clients(data, ...)``App. D.3 client expansion
+  * ``state``                     serializable pytree; ``save``/``load``
+                                  round-trips through train/checkpoint
+
+Routers are value-style containers: fitting and onboarding return a *new*
+``Router`` carrying the updated state, so the objects compose with jit'd
+code the same way raw pytrees do.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, ClassVar, Optional
+
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+from repro.train import checkpoint as ckpt
+
+
+class Router(abc.ABC):
+    """One member of the router family zoo (see ``repro.routers.make``)."""
+
+    #: registry key ("mlp", "kmeans", ...) — set by @register
+    name: ClassVar[str] = ""
+    #: True for gradient-trained families (iterative FedAvg, Alg. 1);
+    #: False for one-shot statistics families (Alg. 2).
+    parametric: ClassVar[bool] = True
+
+    def __init__(self, rcfg: RouterConfig, *,
+                 num_models: Optional[int] = None, state: Any = None):
+        self.rcfg = rcfg
+        self._num_models = (num_models if num_models is not None
+                            else rcfg.num_models)
+        self.state = state
+
+    # ------------------------------------------------------------- interface
+
+    @abc.abstractmethod
+    def init(self, key) -> "Router":
+        """Return a router with freshly initialized state."""
+
+    @abc.abstractmethod
+    def predict(self, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """x: (Q, d_emb) → (A (Q, M) in [0,1], C (Q, M))."""
+
+    def route(self, x: jnp.ndarray, lam: float) -> jnp.ndarray:
+        """argmax_m U_λ(x, m) = A − λ·C → chosen model indices (Q,).
+
+        Subclasses override with their fused decision hot path; this
+        default goes through ``predict``.
+        """
+        A, C = self.predict(x)
+        return jnp.argmax(A - lam * C, axis=-1)
+
+    def loss(self, batch: dict, *, rng=None) -> jnp.ndarray:
+        """Per-batch training loss. Only parametric families have one."""
+        raise NotImplementedError(
+            f"{type(self).__name__} is nonparametric: it has no training "
+            "loss — fit it with repro.routers.fit_federated (one-shot).")
+
+    @abc.abstractmethod
+    def onboard_model(self, calib: dict, **kw) -> "Router":
+        """§6.3: expand the pool with new model(s) from calibration evals."""
+
+    @abc.abstractmethod
+    def onboard_clients(self, data_new: dict, **kw) -> "Router":
+        """App. D.3: fold newly joined clients into the router."""
+
+    # -------------------------------------------------------- fitting hooks
+    # Called by repro.routers.fit_federated / fit_local — part of the
+    # family contract so incomplete subclasses fail at instantiation, not
+    # deep inside a fit call.
+
+    @abc.abstractmethod
+    def _fit_federated(self, key, data: dict, fcfg, *, rounds=None,
+                       eval_fn=None, mesh=None, **kw) -> tuple["Router", dict]:
+        """Federated fit → (fitted router, {"loss": [...], "eval": [...]})."""
+
+    @abc.abstractmethod
+    def _fit_local(self, key, data_i: dict, fcfg,
+                   **kw) -> tuple["Router", dict]:
+        """No-FL baseline fit on one flat dataset → (router, history)."""
+
+    # ------------------------------------------------------------- state mgmt
+
+    @property
+    def initialized(self) -> bool:
+        return self.state is not None
+
+    @property
+    def num_models(self) -> int:
+        """M — the model-pool dimension of the predict/route outputs."""
+        if self.state is not None:
+            return self._state_num_models()
+        return self._num_models
+
+    @abc.abstractmethod
+    def _state_num_models(self) -> int:
+        """M as recorded in the fitted state (pool may have been expanded)."""
+
+    def with_state(self, state: Any) -> "Router":
+        """Value-style update: same config, new state pytree."""
+        return type(self)(self.rcfg, num_models=self._num_models,
+                          state=state)
+
+    def _require_state(self):
+        if self.state is None:
+            raise ValueError(
+                f"{type(self).__name__} has no state — call init()/"
+                "fit_federated() or load() a checkpoint first.")
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, path) -> None:
+        """Checkpoint the router (family tag + state pytree, msgpack)."""
+        self._require_state()
+        ckpt.save(path, {"kind": self.name, "state": self.state})
+
+    @staticmethod
+    def load_state(path) -> tuple[str, Any]:
+        """Low-level restore → (family name, state). Prefer
+        ``repro.routers.load`` which also rebuilds the Router object."""
+        blob = ckpt.restore(path)
+        return blob["kind"], blob["state"]
+
+    def __repr__(self) -> str:
+        st = "fitted" if self.initialized else "uninitialized"
+        return (f"{type(self).__name__}(name={self.name!r}, M="
+                f"{self.num_models}, {st})")

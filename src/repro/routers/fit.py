@@ -1,0 +1,56 @@
+"""Unified fitting entry points for every router family.
+
+``fit_federated`` is the one federated-training call sites use: it
+dispatches to iterative FedAvg rounds (Alg. 1 — including the sharded
+``shard_map`` path via ``mesh=``) for parametric routers and to the
+one-shot statistics-aggregation protocol (Alg. 2) for nonparametric ones.
+Both return the same ``(router, history)`` contract with
+``history = {"loss": [...], "eval": [...]}`` — one entry per round for
+iterative families, at most one for one-shot families.
+
+``fit_local`` is the matching no-FL baseline (client-local or, on pooled
+data, centralized ERM / pooled K-means).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.config import FedConfig
+from repro.routers.base import Router
+
+
+def _normalize_hist(hist: dict) -> dict:
+    hist.setdefault("loss", [])
+    hist.setdefault("eval", [])
+    return hist
+
+
+def fit_federated(router: Router, data: dict, fcfg: FedConfig, *, key,
+                  rounds: Optional[int] = None,
+                  eval_fn: Optional[Callable[[Router], object]] = None,
+                  mesh=None, **family_kw) -> tuple[Router, dict]:
+    """Fit ``router`` on stacked, padded client data (see federated.py for
+    the layout). Returns a NEW fitted router plus the history dict.
+
+    eval_fn, when given, receives a fitted ``Router`` (called per round for
+    iterative families, once for one-shot families). ``mesh`` selects the
+    shard_map path for families that support it. ``family_kw`` forwards
+    family-specific knobs (optimizer=, distill=, client_mask=, dp_sigma=,
+    ...). With a fixed ``key`` the parametric path reproduces the legacy
+    ``core.federated.fedavg`` results bit-for-bit, and the nonparametric
+    path ``core.kmeans_router.fed_kmeans_router``.
+    """
+    new_router, hist = router._fit_federated(key, data, fcfg, rounds=rounds,
+                                             eval_fn=eval_fn, mesh=mesh,
+                                             **family_kw)
+    return new_router, _normalize_hist(hist)
+
+
+def fit_local(router: Router, data_i: dict, fcfg: FedConfig, *, key,
+              **family_kw) -> tuple[Router, dict]:
+    """No-FL baseline on one flat dataset {"x","m","acc","cost","w"}:
+    minibatch ERM for parametric families (steps=, optimizer=), local
+    K-means + own statistics for nonparametric ones (k=). Run on pooled
+    data this is the centralized baseline."""
+    new_router, hist = router._fit_local(key, data_i, fcfg, **family_kw)
+    return new_router, _normalize_hist(hist)

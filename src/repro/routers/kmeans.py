@@ -1,0 +1,90 @@
+"""Nonparametric K-Means-Router behind the unified interface (§4.2, Alg. 2).
+
+Wraps ``core/kmeans_router.py``. Fitting is the one-shot federated
+statistics protocol — there are no rounds and no loss. The decision hot
+path (``route``) is the Pallas ``kmeans_assign`` kernel followed by a
+cluster-level utility argmax: the (K, M) utility table collapses to one
+best model per cluster, so routing a query is assign + gather.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import kmeans_router as KR
+from repro.kernels import ops as kops
+from repro.routers.base import Router
+from repro.routers.registry import register
+
+
+@register("kmeans")
+class KMeansRouter(Router):
+    parametric = False
+
+    # ------------------------------------------------------------- interface
+
+    def init(self, key) -> "KMeansRouter":
+        """One-shot family: there is no pre-fit state. Returns self so
+        ``make(...).init(key)`` is family-agnostic at call sites."""
+        return self
+
+    def predict(self, x):
+        self._require_state()
+        return KR.predict(self.state, x)
+
+    def route(self, x, lam):
+        """Hot path: nearest global center (Pallas kernel) → precomputed
+        per-cluster best model under U_λ."""
+        self._require_state()
+        assign = kops.kmeans_assign(x, self.state["centroids"])
+        best = jnp.argmax(self.state["A"] - lam * self.state["C"], axis=-1)
+        return best[assign]
+
+    def _state_num_models(self) -> int:
+        return int(self.state["A"].shape[1])
+
+    # ------------------------------------------------------------ onboarding
+
+    def onboard_model(self, calib, **kw) -> "KMeansRouter":
+        """§6.3, training-free: estimate the new model's per-cluster stats
+        from calibration evals {"x","acc","cost","w"}."""
+        self._require_state()
+        return self.with_state(
+            KR.add_model_stats(self.state, calib, c_max=self.rcfg.c_max))
+
+    def onboard_clients(self, data_new, **kw) -> "KMeansRouter":
+        """App. D.3, training-free: count-weighted merge of the new
+        clients' statistics against the existing centers."""
+        self._require_state()
+        return self.with_state(
+            KR.merge_client_stats(self.state, data_new, self.rcfg,
+                                  num_models=self.num_models))
+
+    # --------------------------------------------------------------- fitting
+
+    def _fit_federated(self, key, data, fcfg, *, rounds=None, eval_fn=None,
+                       mesh=None, client_mask=None, **kw):
+        """Alg. 2: one-shot — local K-means upload, server K-means over
+        centroids, one statistics round. ``rounds`` does not apply (and is
+        ignored); fcfg is accepted for signature parity with parametric
+        families. ``mesh`` and parametric-only knobs are rejected rather
+        than silently dropped."""
+        if mesh is not None:
+            raise ValueError("the kmeans family is one-shot: there is no "
+                             "sharded fitting path — drop mesh=")
+        if kw:
+            raise ValueError("kmeans fit_federated got unsupported "
+                             f"options: {', '.join(sorted(kw))}")
+        state = KR.fed_kmeans_router(key, data, self.rcfg,
+                                     num_models=self._num_models,
+                                     client_mask=client_mask)
+        new = self.with_state(state)
+        hist = {"loss": [], "eval": [eval_fn(new)] if eval_fn else []}
+        return new, hist
+
+    def _fit_local(self, key, data_i, fcfg, *, k=None, **kw):
+        """Client-local (no-FL) baseline: own K-means + own statistics.
+        With ``k=rcfg.k_global`` on pooled data this is the centralized
+        baseline."""
+        state = KR.local_kmeans_router(key, data_i, self.rcfg,
+                                       num_models=self._num_models, k=k)
+        return self.with_state(state), {"loss": []}

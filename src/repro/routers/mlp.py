@@ -1,0 +1,218 @@
+"""Parametric MLP-Router behind the unified interface (paper §4.1, Alg. 1).
+
+Wraps the math in ``core/mlp_router.py`` / ``core/federated.py`` /
+``core/expansion.py``. The decision hot path (``route``) runs the fused
+Pallas ``router_utility`` kernel: one pass over the trunk features computes
+both heads and the λ-utility argmax without materializing A and C.
+
+Federated fitting is iterative FedAvg. With ``mesh=None`` it is exactly
+``core.federated.fedavg`` (bit-for-bit on a fixed key); with a 1-D client
+mesh it is the ``shard_map`` variant where each device runs its local
+clients' updates and the server aggregation is a weighted ``psum``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # moved out of experimental in newer jax
+    from jax import shard_map
+except ImportError:  # jax<=0.4.x
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import expansion as E
+from repro.core import federated as F
+from repro.core import mlp_router as R
+from repro.kernels import ops as kops
+from repro.routers.base import Router
+from repro.routers.registry import register
+
+# the "replication check" kwarg was renamed check_rep → check_vma
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(shard_map).parameters else "check_rep")
+
+
+@register("mlp")
+class MLPRouter(Router):
+    parametric = True
+
+    # ------------------------------------------------------------- interface
+
+    def init(self, key) -> "MLPRouter":
+        return self.with_state(
+            R.init_mlp_router(key, self.rcfg, num_models=self._num_models))
+
+    def predict(self, x):
+        self._require_state()
+        return R.apply_mlp_router(self.state, x)
+
+    def route(self, x, lam):
+        """Fused Pallas hot path: trunk features → utility argmax."""
+        self._require_state()
+        h = R.trunk_apply(self.state, x)
+        hd = self.state["heads"]
+        choice, _ = kops.router_utility(h, hd["acc_w"], hd["acc_b"],
+                                        hd["cost_w"], hd["cost_b"], lam)
+        return choice
+
+    def loss(self, batch, *, rng=None):
+        self._require_state()
+        return R.router_loss(self.state, batch, self.rcfg, rng=rng)
+
+    def _state_num_models(self) -> int:
+        return int(self.state["heads"]["acc_b"].shape[0])
+
+    # ------------------------------------------------------------ onboarding
+
+    def onboard_model(self, calib, *, key=None, fcfg=None, n_new: int = 1,
+                      steps: int = 300) -> "MLPRouter":
+        """§6.3: append fresh head columns, train ONLY those columns on the
+        calibration evals (trunk + existing heads frozen)."""
+        self._require_state()
+        if key is None or fcfg is None:
+            raise ValueError("MLP model onboarding trains the new heads: "
+                             "pass key= and fcfg=")
+        params, _ = E.onboard_models_mlp(key, self.state, calib, self.rcfg,
+                                         fcfg, n_new, steps=steps)
+        return self.with_state(params)
+
+    def onboard_clients(self, data_new, *, key=None, fcfg=None,
+                        rounds: int = 15, beta: float = 1.0) -> "MLPRouter":
+        """App. D.3: continued FedAvg on the new clients only, anchored by a
+        distillation penalty toward the frozen pre-join router."""
+        self._require_state()
+        if key is None or fcfg is None:
+            raise ValueError("MLP client onboarding continues FedAvg: pass "
+                             "key= and fcfg=")
+        params, _ = E.onboard_clients_mlp(key, self.state, data_new,
+                                          self.rcfg, fcfg, rounds=rounds,
+                                          beta=beta)
+        return self.with_state(params)
+
+    # --------------------------------------------------------------- fitting
+
+    def _init_for_fit(self, key):
+        """Initial params for a fit entry point: the existing state, or —
+        when make(..., num_models=) overrides the config — a fresh init
+        with the overridden M. Mirrors the key handling of the legacy
+        trainers (key, k_init = split(key); init from k_init) so the
+        default M path stays bit-for-bit identical to them."""
+        if self.state is not None:
+            return self.state
+        if self._num_models == self.rcfg.num_models:
+            return None  # let the legacy trainer init — bit-for-bit parity
+        _, k_init = jax.random.split(key)
+        return R.init_mlp_router(k_init, self.rcfg,
+                                 num_models=self._num_models)
+
+    def _fit_federated(self, key, data, fcfg, *, rounds=None, eval_fn=None,
+                       mesh=None, **kw):
+        """Alg. 1. mesh=None → in-process vmap simulation (≡ legacy
+        ``fedavg``; kw forwards optimizer/full_batch/freeze/distill/
+        client_mask/dp_sigma). mesh=Mesh(..., ("clients",)) → shard_map
+        across devices; that path supports only optimizer= of the kw."""
+        init = self._init_for_fit(key)
+        wrapped = (None if eval_fn is None
+                   else lambda p: eval_fn(self.with_state(p)))
+        if mesh is not None:
+            unsupported = sorted(set(kw) - {"optimizer"})
+            if unsupported:
+                raise ValueError(
+                    f"the mesh path supports only optimizer= (got "
+                    f"{', '.join(unsupported)}) — drop mesh= to use the "
+                    "in-process simulation with those knobs")
+            params, hist = _fedavg_sharded(
+                key, data, self.rcfg, fcfg,
+                rounds=rounds if rounds is not None else fcfg.rounds,
+                mesh=mesh, init=init, num_models=self._num_models,
+                eval_fn=wrapped, **kw)
+        else:
+            params, hist = F.fedavg(key, data, self.rcfg, fcfg,
+                                    rounds=rounds, init=init,
+                                    eval_fn=wrapped, **kw)
+        return self.with_state(params), hist
+
+    def _fit_local(self, key, data_i, fcfg, *, steps: int = 400,
+                   optimizer: str = "adamw", **kw):
+        """Client-local / centralized ERM baseline (flat dataset)."""
+        params, losses = F.sgd_train(key, data_i, self.rcfg, fcfg,
+                                     steps=steps, optimizer=optimizer,
+                                     init=self._init_for_fit(key), **kw)
+        return self.with_state(params), {"loss": [float(l) for l in
+                                                  np.asarray(losses)]}
+
+
+# ---------------------------------------------------------------------------
+# shard_map FedAvg (moved here from launch/fed_train.py so every entry point
+# reaches it through fit_federated(mesh=...))
+# ---------------------------------------------------------------------------
+
+
+def fedavg_round_sharded(params, data, key, rcfg, fcfg, opt, max_steps,
+                         mesh: Mesh):
+    """One FedAvg round with clients sharded across devices: local vmap per
+    device, server aggregation (Alg. 1 line 11) as a weighted psum."""
+    N = data["x"].shape[0]
+    n_dev = mesh.shape["clients"]
+    assert N % n_dev == 0, "num_clients must divide the client-mesh size"
+    key, k_sel, k_cli = jax.random.split(key, 3)
+    n_active = max(1, int(round(fcfg.participation * N)))
+    perm = jax.random.permutation(k_sel, N)
+    active = jnp.zeros((N,)).at[perm[:n_active]].set(1.0)
+    keys = jax.random.split(k_cli, N)
+
+    upd = functools.partial(F.client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
+                            max_steps=max_steps)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P("clients"), P("clients"), P("clients")),
+        out_specs=(P(), P()),
+        **{_CHECK_KW: False})
+    def round_fn(params, data_shard, keys_shard, active_shard):
+        # local clients on this device
+        cp, closs = jax.vmap(lambda d, k: upd(params, d, k)[0:2],
+                             in_axes=(0, 0))(data_shard, keys_shard)
+        w = jnp.sum(data_shard["w"], axis=-1) * active_shard
+        wsum = jax.lax.psum(jnp.sum(w), "clients")
+        agg = jax.tree.map(
+            lambda s: jax.lax.psum(
+                jnp.tensordot(w, s.astype(jnp.float32), axes=1), "clients")
+            / jnp.maximum(wsum, 1e-12),
+            cp)
+        loss = jax.lax.psum(jnp.sum(closs * w), "clients") / jnp.maximum(
+            wsum, 1e-12)
+        return agg, loss
+
+    new_params, loss = round_fn(params, data, keys, active)
+    return jax.tree.map(lambda a, b: a.astype(b.dtype), new_params,
+                        params), loss
+
+
+def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
+                    init=None, num_models=None, optimizer: str = "adamw",
+                    eval_fn=None):
+    opt = F._make_opt(fcfg, optimizer)
+    D_max = data["x"].shape[1]
+    # same local-work budget as the in-process path (F.fedavg)
+    max_steps = max(1, int(np.ceil(D_max / fcfg.batch_size))) \
+        * fcfg.local_epochs
+    key, k_init = jax.random.split(key)
+    params = init if init is not None else R.init_mlp_router(
+        k_init, rcfg, num_models=num_models)
+    hist = {"loss": [], "eval": []}
+    step = jax.jit(functools.partial(
+        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg, opt=opt,
+        max_steps=max_steps, mesh=mesh))
+    for _ in range(rounds):
+        key, k_r = jax.random.split(key)
+        params, loss = step(params, data, k_r)
+        hist["loss"].append(float(loss))
+        if eval_fn is not None:
+            hist["eval"].append(eval_fn(params))
+    return params, hist

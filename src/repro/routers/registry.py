@@ -1,0 +1,50 @@
+"""String registry: configs, benchmarks, and the gateway select router
+families by name — ``routers.make("mlp", rcfg)`` — so slotting in a new
+family is one decorated class, not N call-site edits."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Type
+
+from repro.config import RouterConfig
+from repro.routers.base import Router
+
+_REGISTRY: Dict[str, Type[Router]] = {}
+
+
+def register(name: str) -> Callable[[Type[Router]], Type[Router]]:
+    """Class decorator: ``@register("mlp")`` adds a family to the zoo."""
+    def deco(cls: Type[Router]) -> Type[Router]:
+        if not issubclass(cls, Router):
+            raise TypeError(f"{cls.__name__} must subclass Router")
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"router family {name!r} already registered "
+                             f"({_REGISTRY[name].__name__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type[Router]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown router family {name!r}; available: "
+                       f"{', '.join(available())}") from None
+
+
+def make(name: str, rcfg: RouterConfig, *, num_models: Optional[int] = None,
+         state=None, **kw) -> Router:
+    """Build an (unfitted, unless ``state`` is given) router by name."""
+    return get(name)(rcfg, num_models=num_models, state=state, **kw)
+
+
+def load(path, rcfg: RouterConfig) -> Router:
+    """Restore a router checkpoint written by ``Router.save``: the family
+    tag stored alongside the state picks the class from the registry."""
+    kind, state = Router.load_state(path)
+    return make(kind, rcfg, state=state)

@@ -1,15 +1,17 @@
 """RoutedServer: the paper's router in front of an actual model pool.
 
-A request batch is (i) embedded by the encoder stub, (ii) routed by a
-trained router (MLP or K-means; the fused Pallas ``router_utility`` kernel
-is the decision hot-path), (iii) grouped per chosen model, and (iv) served
-by that model's prefill + decode loop. This is the deployment shape the
-paper targets: per-request model selection under an accuracy/cost trade-off
-λ chosen at inference time (§3).
+A request batch is (i) embedded by the encoder stub, (ii) routed by one
+``repro.routers.Router`` — the MLP family decides via the fused Pallas
+``router_utility`` kernel, the K-means family via the ``kmeans_assign``
+kernel + cluster-level utility — (iii) grouped per chosen model, and (iv)
+served by that model's prefill + decode loop. This is the deployment shape
+the paper targets: per-request model selection under an accuracy/cost
+trade-off λ chosen at inference time (§3).
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -17,10 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core import mlp_router as R
 from repro.data.encoder import encode
-from repro.kernels import ops as kops
 from repro.models import model as mdl
+from repro.routers import Router
 from repro.serve.kv_cache import extend_cache
 
 
@@ -33,25 +34,40 @@ class PoolModel:
 
 
 class RoutedServer:
-    """λ is a per-request knob — no router retraining needed (§3)."""
+    """λ is a per-request knob — no router retraining needed (§3).
 
-    def __init__(self, pool: List[PoolModel], router_params: dict,
-                 d_emb: int = 64, predict_fn: Optional[Callable] = None):
+    Takes ONE fitted ``Router`` (any registered family); the router's model
+    dimension M must match the pool, checked at construction so a mismatch
+    fails loudly instead of silently wrapping indices at serve time.
+    """
+
+    def __init__(self, pool: List[PoolModel], router: Router,
+                 d_emb: Optional[int] = None):
+        if not isinstance(router, Router):
+            raise TypeError(
+                "RoutedServer takes a repro.routers.Router — build one with "
+                "routers.make(...) + routers.fit_federated(...) or "
+                "routers.load(...)")
+        if not router.initialized:
+            raise ValueError("router has no fitted state — fit or load it "
+                             "before serving")
+        if router.num_models != len(pool):
+            raise ValueError(
+                f"router predicts over M={router.num_models} models but the "
+                f"pool has {len(pool)} — onboard the missing models "
+                "(router.onboard_model) or fix the pool")
+        if d_emb is not None and d_emb != router.rcfg.d_emb:
+            raise ValueError(
+                f"d_emb={d_emb} does not match the router's embedding "
+                f"dimension {router.rcfg.d_emb} — drop d_emb= to use the "
+                "router's own")
         self.pool = pool
-        self.router = router_params
-        self.d_emb = d_emb
-        self._predict = predict_fn  # optional non-parametric router
+        self.router = router
+        self.d_emb = router.rcfg.d_emb
 
     def route(self, prompts: List[str], lam: float) -> np.ndarray:
         x = jnp.asarray(encode(prompts, self.d_emb))
-        if self._predict is not None:
-            A, C = self._predict(x)
-            return np.asarray(jnp.argmax(A - lam * C, axis=-1))
-        h = R.trunk_apply(self.router, x)
-        hd = self.router["heads"]
-        choice, _ = kops.router_utility(h, hd["acc_w"], hd["acc_b"],
-                                        hd["cost_w"], hd["cost_b"], lam)
-        return np.asarray(choice)
+        return np.asarray(self.router.route(x, lam))
 
     def generate(self, prompts: List[str], *, lam: float = 0.5,
                  max_new_tokens: int = 16,
@@ -61,7 +77,7 @@ class RoutedServer:
         results = [None] * len(prompts)
         cost = 0.0
         for m_idx in np.unique(choice):
-            pm = self.pool[int(m_idx) % len(self.pool)]
+            pm = self.pool[int(m_idx)]
             idx = np.where(choice == m_idx)[0]
             toks = self._tokenize([prompts[i] for i in idx], pm.cfg, tokenize)
             out = self._serve_batch(pm, toks, max_new_tokens)
@@ -75,12 +91,13 @@ class RoutedServer:
     def _tokenize(prompts, cfg, tokenize):
         if tokenize is not None:
             return tokenize(prompts)
-        # stub tokenizer: stable hash per word
+        # stub tokenizer: crc32 is stable across processes (unlike builtin
+        # hash, which varies with PYTHONHASHSEED)
         L = max(max(len(p.split()) for p in prompts), 1)
         out = np.zeros((len(prompts), L), np.int32)
         for i, p in enumerate(prompts):
             for j, w in enumerate(p.split()):
-                out[i, j] = hash(w) % (cfg.vocab - 1) + 1
+                out[i, j] = zlib.crc32(w.encode("utf-8")) % (cfg.vocab - 1) + 1
         return out
 
     @staticmethod

@@ -1,4 +1,9 @@
 """Hypothesis property-based tests on system invariants."""
+# ruff: noqa: E402
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

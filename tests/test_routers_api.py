@@ -1,0 +1,327 @@
+"""Unified ``repro.routers`` API: registry round-trip, bit-for-bit parity
+of ``fit_federated``/``fit_local`` with the legacy family-specific entry
+points on a fixed seed, save/load round-trips, and the gateway's
+construction-time pool validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, RouterConfig
+from repro.core import federated as F
+from repro.core import kmeans_router as KR
+from repro.core import mlp_router as R
+from repro.data.partition import client_slice, federated_split, flatten_clients
+from repro.data.synthetic import make_eval_corpus
+
+RCFG = RouterConfig(d_emb=16, num_models=5, hidden=(32, 32), k_local=4,
+                    k_global=6)
+FCFG = FedConfig(num_clients=4, rounds=3, batch_size=32, seed=1)
+
+
+@pytest.fixture(scope="module")
+def split():
+    corpus = make_eval_corpus(jax.random.PRNGKey(0), n_queries=900,
+                              n_tasks=4, n_models=5, d_emb=16)
+    return federated_split(jax.random.PRNGKey(1), corpus, FCFG)
+
+
+@pytest.fixture(scope="module")
+def fed_mlp(split):
+    router, hist = routers.fit_federated(routers.make("mlp", RCFG),
+                                         split["train"], FCFG,
+                                         key=jax.random.PRNGKey(2))
+    return router, hist
+
+
+@pytest.fixture(scope="module")
+def fed_km(split):
+    router, _ = routers.fit_federated(routers.make("kmeans", RCFG),
+                                      split["train"], FCFG,
+                                      key=jax.random.PRNGKey(3))
+    return router
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -------------------------------------------------------------------- registry
+
+def test_registry_lists_both_families():
+    assert set(routers.available()) >= {"mlp", "kmeans"}
+
+
+def test_make_unknown_family_raises():
+    with pytest.raises(KeyError, match="unknown router family"):
+        routers.make("transformer", RCFG)
+
+
+def test_make_builds_registered_classes():
+    assert isinstance(routers.make("mlp", RCFG), routers.MLPRouter)
+    assert isinstance(routers.make("kmeans", RCFG), routers.KMeansRouter)
+    assert routers.make("mlp", RCFG).parametric
+    assert not routers.make("kmeans", RCFG).parametric
+
+
+# ------------------------------------------------------------- legacy parity
+
+def test_fit_federated_mlp_matches_legacy_fedavg(split, fed_mlp):
+    """Unified path ≡ core.federated.fedavg bit-for-bit on a fixed seed."""
+    router, hist = fed_mlp
+    legacy, lhist = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
+                             FCFG)
+    _trees_equal(router.state, legacy)
+    assert hist["loss"] == lhist["loss"]
+
+
+def test_fit_federated_kmeans_matches_legacy(split, fed_km):
+    legacy = KR.fed_kmeans_router(jax.random.PRNGKey(3), split["train"],
+                                  RCFG)
+    _trees_equal(fed_km.state, legacy)
+
+
+def test_fit_local_matches_legacy(split):
+    di = client_slice(split["train"], 0)
+    r_mlp, _ = routers.fit_local(routers.make("mlp", RCFG), di, FCFG,
+                                 key=jax.random.PRNGKey(11), steps=25)
+    legacy_mlp, _ = F.sgd_train(jax.random.PRNGKey(11), di, RCFG, FCFG,
+                                steps=25)
+    _trees_equal(r_mlp.state, legacy_mlp)
+
+    r_km, _ = routers.fit_local(routers.make("kmeans", RCFG), di, FCFG,
+                                key=jax.random.PRNGKey(12))
+    legacy_km = KR.local_kmeans_router(jax.random.PRNGKey(12), di, RCFG)
+    _trees_equal(r_km.state, legacy_km)
+
+
+def test_predict_matches_legacy_apply(split, fed_mlp, fed_km):
+    x = split["test_global"]["x"][:13]
+    router, _ = fed_mlp
+    A, C = router.predict(x)
+    A_l, C_l = R.apply_mlp_router(router.state, x)
+    np.testing.assert_array_equal(np.asarray(A), np.asarray(A_l))
+    A, C = fed_km.predict(x)
+    A_l, C_l = KR.predict(fed_km.state, x)
+    np.testing.assert_array_equal(np.asarray(A), np.asarray(A_l))
+
+
+# ---------------------------------------------------- unified route contract
+
+@pytest.mark.parametrize("lam", [0.0, 0.5, 100.0])
+def test_route_matches_predict_argmax(split, fed_mlp, fed_km, lam):
+    """Each family's fused hot path must agree with predict + argmax."""
+    x = split["test_global"]["x"][:17]
+    for router in (fed_mlp[0], fed_km):
+        A, C = router.predict(x)
+        want = jnp.argmax(A - lam * C, axis=-1)
+        np.testing.assert_array_equal(np.asarray(router.route(x, lam)),
+                                      np.asarray(want))
+
+
+def test_history_contract(split, fed_mlp):
+    _, hist = fed_mlp
+    assert set(hist) >= {"loss", "eval"}
+    assert len(hist["loss"]) == FCFG.rounds
+    _, khist = routers.fit_federated(
+        routers.make("kmeans", RCFG), split["train"], FCFG,
+        key=jax.random.PRNGKey(3),
+        eval_fn=lambda r: r.num_models)
+    assert khist["loss"] == [] and khist["eval"] == [5]
+
+
+def test_num_models_override_honored_by_fit(split):
+    """make(..., num_models=) must shape the fitted router even when the
+    fit entry point does the initialization."""
+    r, _ = routers.fit_federated(routers.make("mlp", RCFG, num_models=3),
+                                 split["train"], FCFG,
+                                 key=jax.random.PRNGKey(2), rounds=1)
+    assert r.num_models == 3
+    rl, _ = routers.fit_local(routers.make("mlp", RCFG, num_models=3),
+                              client_slice(split["train"], 0), FCFG,
+                              key=jax.random.PRNGKey(4), steps=3)
+    assert rl.num_models == 3
+    rk, _ = routers.fit_federated(routers.make("kmeans", RCFG,
+                                               num_models=3),
+                                  split["train"], FCFG,
+                                  key=jax.random.PRNGKey(3))
+    assert rk.num_models == 3
+
+
+def test_fit_federated_mesh_contract(split):
+    """The shard_map path honors eval_fn per round and names unsupported
+    family kwargs instead of failing deep inside."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
+    seen = []
+    r, hist = routers.fit_federated(
+        routers.make("mlp", RCFG), split["train"], FCFG,
+        key=jax.random.PRNGKey(2), rounds=2, mesh=mesh,
+        eval_fn=lambda rt: seen.append(rt.num_models) or len(seen))
+    assert r.num_models == 5
+    assert len(hist["loss"]) == 2 and hist["eval"] == [1, 2]
+    with pytest.raises(ValueError, match="mesh path supports only"):
+        routers.fit_federated(routers.make("mlp", RCFG), split["train"],
+                              FCFG, key=jax.random.PRNGKey(2), mesh=mesh,
+                              dp_sigma=0.1)
+
+
+def test_mesh_path_local_epochs_consistent_with_inprocess(split):
+    """Both fit paths budget scan length as ⌈D_max/B⌉·local_epochs, and in
+    both the active step count is gated per client at ⌈D_i/B⌉ inside
+    client_update — so local_epochs must not change the mesh-path result,
+    exactly as it does not change the in-process result."""
+    import dataclasses
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
+    outs = []
+    for le in (1, 2):
+        fcfg = dataclasses.replace(FCFG, local_epochs=le)
+        r, _ = routers.fit_federated(routers.make("mlp", RCFG),
+                                     split["train"], fcfg,
+                                     key=jax.random.PRNGKey(2), rounds=1,
+                                     mesh=mesh)
+        outs.append(r.state)
+    _trees_equal(outs[0], outs[1])
+
+
+def test_kmeans_rejects_unsupported_fit_options(split):
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
+    with pytest.raises(ValueError, match="no .*sharded fitting path"):
+        routers.fit_federated(routers.make("kmeans", RCFG), split["train"],
+                              FCFG, key=jax.random.PRNGKey(3), mesh=mesh)
+    with pytest.raises(ValueError, match="unsupported options: dp_sigma"):
+        routers.fit_federated(routers.make("kmeans", RCFG), split["train"],
+                              FCFG, key=jax.random.PRNGKey(3), dp_sigma=0.1)
+
+
+def test_gateway_rejects_d_emb_mismatch(fed_mlp):
+    from repro.serve.gateway import RoutedServer
+    with pytest.raises(ValueError, match="does not match the router"):
+        RoutedServer(_dummy_pool(5), fed_mlp[0], d_emb=64)
+    srv = RoutedServer(_dummy_pool(5), fed_mlp[0], d_emb=RCFG.d_emb)
+    assert srv.d_emb == RCFG.d_emb
+
+
+def test_incomplete_family_fails_at_instantiation():
+    class HalfBaked(routers.Router):
+        def init(self, key):
+            return self
+
+        def predict(self, x):
+            return x, x
+
+        def onboard_model(self, calib, **kw):
+            return self
+
+        def onboard_clients(self, data_new, **kw):
+            return self
+
+        def _state_num_models(self):
+            return 0
+        # no _fit_federated / _fit_local
+
+    with pytest.raises(TypeError, match="abstract"):
+        HalfBaked(RCFG)
+
+
+def test_uninitialized_router_raises(split):
+    r = routers.make("mlp", RCFG)
+    with pytest.raises(ValueError, match="no state"):
+        r.predict(split["test_global"]["x"][:2])
+    with pytest.raises(NotImplementedError, match="nonparametric"):
+        routers.make("kmeans", RCFG).loss({})
+
+
+# ----------------------------------------------------------------- save/load
+
+def test_save_load_round_trip(tmp_path, fed_mlp, fed_km, split):
+    x = split["test_global"]["x"][:5]
+    for router in (fed_mlp[0], fed_km):
+        path = tmp_path / f"{router.name}.msgpack"
+        router.save(path)
+        restored = routers.load(path, RCFG)
+        assert type(restored) is type(router)
+        _trees_equal(router.state, restored.state)
+        A0, C0 = router.predict(x)
+        A1, C1 = restored.predict(x)
+        np.testing.assert_array_equal(np.asarray(A0), np.asarray(A1))
+        np.testing.assert_array_equal(np.asarray(C0), np.asarray(C1))
+
+
+# ---------------------------------------------------------------- onboarding
+
+def test_onboard_model_via_interface(split, fed_mlp, fed_km):
+    x = split["test_global"]["x"][:50]
+    calib = {"x": x, "acc": jnp.full(50, 0.7), "cost": jnp.full(50, 0.3),
+             "w": jnp.ones(50)}
+    km6 = fed_km.onboard_model(calib)
+    assert km6.num_models == fed_km.num_models + 1
+
+    mlp_calib = flatten_clients(split["train"])
+    mlp_calib = dict(mlp_calib)
+    mlp_calib["m"] = jnp.where(mlp_calib["m"] == 0, 5, mlp_calib["m"])
+    mlp6 = fed_mlp[0].onboard_model(mlp_calib, key=jax.random.PRNGKey(5),
+                                    fcfg=FCFG, n_new=1, steps=10)
+    assert mlp6.num_models == 6
+    # the original router is untouched (value semantics)
+    assert fed_mlp[0].num_models == 5
+
+
+def test_onboard_clients_via_interface(split, fed_km):
+    km2 = fed_km.onboard_clients(split["train"])
+    assert float(jnp.sum(km2.state["n"])) == pytest.approx(
+        2 * float(jnp.sum(fed_km.state["n"])), rel=1e-6)
+
+
+# ----------------------------------------------- gateway pool validation
+
+def _dummy_pool(n):
+    from repro.serve.gateway import PoolModel
+    return [PoolModel(f"m{i}", None, {}, 0.1) for i in range(n)]
+
+
+def test_gateway_rejects_pool_size_mismatch(fed_mlp):
+    from repro.serve.gateway import RoutedServer
+    with pytest.raises(ValueError, match="M=5 .* pool has 3"):
+        RoutedServer(_dummy_pool(3), fed_mlp[0])
+
+
+def test_gateway_rejects_non_router(fed_mlp):
+    from repro.serve.gateway import RoutedServer
+    with pytest.raises(TypeError, match="routers.Router"):
+        RoutedServer(_dummy_pool(5), fed_mlp[0].state)
+    with pytest.raises(ValueError, match="no fitted state"):
+        RoutedServer(_dummy_pool(5), routers.make("mlp", RCFG))
+
+
+# ------------------------------------------- distill default-weight fix
+
+def test_distill_weight_default_matches_explicit(split):
+    """client_update's distill regularizer: the hoisted all-ones fallback
+    must match an explicit w on unpadded data, and the reported first-step
+    loss must equal the manual loss + β·distill computation."""
+    di = client_slice(split["train"], 0)
+    keep = np.where(np.asarray(di["w"]) > 0)[0]
+    di = jax.tree.map(lambda a: a[keep], di)  # unpadded: w == 1 everywhere
+    theta0 = R.init_mlp_router(jax.random.PRNGKey(0), RCFG)
+    params = R.init_mlp_router(jax.random.PRNGKey(1), RCFG)
+
+    explicit = F._distill_loss(params, theta0, di["x"], di["w"])
+    fallback = F._distill_loss(params, theta0, di["x"],
+                               jnp.ones(di["x"].shape[0]))
+    np.testing.assert_allclose(np.asarray(explicit), np.asarray(fallback),
+                               rtol=1e-6)
+
+    beta = 0.7
+    opt = F._make_opt(FCFG, "sgd")
+    _, loss = F.client_update(params, di, jax.random.PRNGKey(2), RCFG, FCFG,
+                              opt, max_steps=1, full_batch=True,
+                              distill=(theta0, beta))
+    manual = R.router_loss(params, di, RCFG) + beta * explicit
+    np.testing.assert_allclose(float(loss), float(manual), rtol=1e-5)

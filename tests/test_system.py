@@ -15,10 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import routers
 from repro.config import FedConfig, RouterConfig
-from repro.core import federated as F
-from repro.core import kmeans_router as KR
-from repro.core import mlp_router as R
 from repro.core import policy
 from repro.data.partition import client_slice, federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
@@ -37,52 +35,58 @@ def split():
 
 @pytest.fixture(scope="module")
 def fed_mlp(split):
-    params, hist = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
-                            FCFG)
-    return params, hist
+    router, hist = routers.fit_federated(routers.make("mlp", RCFG),
+                                         split["train"], FCFG,
+                                         key=jax.random.PRNGKey(2))
+    return router, hist
 
 
-def _auc(pred, tg):
+def _auc(router_or_pred, tg):
+    pred = (router_or_pred.predict
+            if isinstance(router_or_pred, routers.Router) else router_or_pred)
     *_, auc = policy.eval_router(pred, tg["x"], tg["acc_table"],
                                  tg["cost_table"])
     return auc
 
 
 def test_federated_mlp_beats_local_global(split, fed_mlp):
-    params, _ = fed_mlp
+    router, _ = fed_mlp
     tg = split["test_global"]
-    auc_fed = _auc(lambda x: R.apply_mlp_router(params, x), tg)
+    auc_fed = _auc(router, tg)
     aucs_loc = []
     for i in range(3):  # a subset of clients is enough at test scale
-        p_i, _ = F.sgd_train(jax.random.PRNGKey(10 + i),
-                             client_slice(split["train"], i), RCFG, FCFG,
-                             steps=150)
-        aucs_loc.append(_auc(lambda x, p=p_i: R.apply_mlp_router(p, x), tg))
+        r_i, _ = routers.fit_local(routers.make("mlp", RCFG),
+                                   client_slice(split["train"], i), FCFG,
+                                   key=jax.random.PRNGKey(10 + i),
+                                   steps=150)
+        aucs_loc.append(_auc(r_i, tg))
     assert auc_fed > np.mean(aucs_loc) + 0.02
 
 
 def test_federated_kmeans_beats_local_global(split):
     tg = split["test_global"]
-    r_fed = KR.fed_kmeans_router(jax.random.PRNGKey(0), split["train"],
-                                 RCFG, num_models=7)
-    auc_fed = _auc(lambda x: KR.predict(r_fed, x), tg)
+    r_fed, _ = routers.fit_federated(routers.make("kmeans", RCFG),
+                                     split["train"], FCFG,
+                                     key=jax.random.PRNGKey(0))
+    auc_fed = _auc(r_fed, tg)
     aucs_loc = []
     for i in range(3):
-        r_i = KR.local_kmeans_router(jax.random.PRNGKey(20 + i),
-                                     client_slice(split["train"], i), RCFG,
-                                     num_models=7)
-        aucs_loc.append(_auc(lambda x, r=r_i: KR.predict(r, x), tg))
+        r_i, _ = routers.fit_local(routers.make("kmeans", RCFG),
+                                   client_slice(split["train"], i), FCFG,
+                                   key=jax.random.PRNGKey(20 + i))
+        aucs_loc.append(_auc(r_i, tg))
     assert auc_fed > np.mean(aucs_loc) + 0.02
 
 
 def test_federated_close_to_centralized(split, fed_mlp):
-    params, _ = fed_mlp
+    router, _ = fed_mlp
     tg = split["test_global"]
-    auc_fed = _auc(lambda x: R.apply_mlp_router(params, x), tg)
+    auc_fed = _auc(router, tg)
     pooled = flatten_clients(split["train"])
-    p_cen, _ = F.sgd_train(jax.random.PRNGKey(4), pooled, RCFG, FCFG,
-                           steps=FCFG.rounds * 12)
-    auc_cen = _auc(lambda x: R.apply_mlp_router(p_cen, x), tg)
+    r_cen, _ = routers.fit_local(routers.make("mlp", RCFG), pooled, FCFG,
+                                 key=jax.random.PRNGKey(4),
+                                 steps=FCFG.rounds * 12)
+    auc_cen = _auc(r_cen, tg)
     assert abs(auc_fed - auc_cen) < 0.08  # Fig. 9: on par
 
 
@@ -98,12 +102,15 @@ def test_gateway_routes_cheaper_with_higher_lambda():
                               cost_per_token=0.1 * (i + 1) ** 2))
     prompts = ["write a poem about the sea", "solve this integral now",
                "summarize the meeting notes", "prove the theorem carefully"]
+    # one-cluster K-means router: every query gets the same estimates —
     # strong model (idx 1) better but 9× pricier
-    A = jnp.array([0.6, 0.9])
-    C = jnp.array([0.1, 0.9])
-    srv = RoutedServer(pool, router_params=None, d_emb=64,
-                       predict_fn=lambda x: (jnp.tile(A, (x.shape[0], 1)),
-                                             jnp.tile(C, (x.shape[0], 1))))
+    router = routers.make(
+        "kmeans", RouterConfig(d_emb=64, num_models=2),
+        state={"centroids": jnp.zeros((1, 64)),
+               "A": jnp.array([[0.6, 0.9]]),
+               "C": jnp.array([[0.1, 0.9]]),
+               "n": jnp.ones((1, 2))})
+    srv = RoutedServer(pool, router)
     lo = srv.generate(prompts, lam=0.0, max_new_tokens=2)
     hi = srv.generate(prompts, lam=5.0, max_new_tokens=2)
     assert hi["total_cost"] < lo["total_cost"]
@@ -121,8 +128,11 @@ def test_distributed_fed_driver_runs():
         "from repro.launch import fed_train; fed_train.main()")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=420,
+                         # pin to cpu: the fake-device XLA flag only applies
+                         # to the host platform, and auto-detect can burn
+                         # minutes probing an accelerator backend
                          env={**os.environ, "PYTHONPATH": "src",
-                              "JAX_PLATFORMS": ""})
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     assert "AUC" in out.stdout
 
