@@ -6,6 +6,8 @@ API — benchmarks never touch the family-specific modules directly.
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
 import time
 
 import jax
@@ -88,13 +90,63 @@ def train_centralized(split, fcfg, steps=None, seed=4, rcfg=RCFG):
     return r
 
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+#: records collected by ``emit`` since the last ``write_bench`` — one dict
+#: per measurement, serialized as the BENCH_*.json trajectory files.
+_RECORDS: list[dict] = []
+
+
 class Timer:
+    """Wall-clock region timer (``perf_counter``-based, monotonic)."""
+
     def __init__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
 
     def us(self, calls: int = 1) -> float:
-        return (time.time() - self.t0) * 1e6 / max(calls, 1)
+        return (time.perf_counter() - self.t0) * 1e6 / max(calls, 1)
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    print(f"{name},{us_per_call:.1f},{derived}")
+def timeit(fn, *args, warmup: int = 2, iters: int = 20, repeats: int = 3,
+           **kw) -> float:
+    """µs per call of ``fn(*args)``: ``warmup`` untimed calls (compile +
+    cache fill), then ``repeats`` timed loops of ``iters`` calls under
+    ``block_until_ready`` (async dispatch can't fake a result). Reports
+    the best repeat — the scheduler-noise-resistant statistic."""
+    iters = max(iters, 1)
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         speedup_vs_baseline: float | None = None):
+    """Record one measurement (JSON trajectory record) and echo it."""
+    rec = {"op": name, "us_per_call": round(us_per_call, 2)}
+    if derived:
+        rec["derived"] = derived
+    if speedup_vs_baseline is not None:
+        rec["speedup_vs_baseline"] = round(speedup_vs_baseline, 3)
+    _RECORDS.append(rec)
+    extra = (f",speedup={speedup_vs_baseline:.2f}x"
+             if speedup_vs_baseline is not None else "")
+    print(f"{name},{us_per_call:.1f},{derived}{extra}")
+
+
+def write_bench(filename: str, *, meta: dict | None = None) -> pathlib.Path:
+    """Flush the records emitted so far to ``REPO_ROOT/filename`` (JSON)
+    and reset the collector. Returns the written path."""
+    path = REPO_ROOT / filename
+    payload = {"meta": {"backend": jax.default_backend(),
+                        **(meta or {})},
+               "records": _RECORDS[:]}
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    _RECORDS.clear()
+    return path

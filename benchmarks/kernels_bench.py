@@ -3,8 +3,6 @@ the Pallas kernels target TPU and are validated in interpret mode by tests).
 us_per_call is a real wall-clock measurement here."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -12,35 +10,30 @@ from benchmarks import common as C
 from repro.kernels import ref
 
 
-def _time(f, *args, iters=20):
-    out = f(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) * 1e6 / iters
-
-
 def run():
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (8192, 768))
     cents = jax.random.normal(key, (20, 768))
     f1 = jax.jit(ref.kmeans_assign_ref)
-    C.emit("kernel_kmeans_assign_8192x768x20", _time(f1, x, cents),
+    C.emit("kernel_kmeans_assign_8192x768x20", C.timeit(f1, x, cents),
            "routing-assignment oracle")
+
+    w = jnp.ones((8192,))
+    f1r = jax.jit(ref.kmeans_assign_reduce_ref)
+    C.emit("kernel_kmeans_assign_reduce_8192x768x20",
+           C.timeit(f1r, x, cents, w), "fused Lloyd's-step oracle")
 
     h = jax.random.normal(key, (4096, 512))
     aw = jax.random.normal(key, (512, 11)) * 0.05
     cw = jax.random.normal(key, (512, 11)) * 0.05
     b = jnp.zeros(11)
     f2 = jax.jit(lambda h: ref.router_utility_ref(h, aw, b, cw, b, 0.5))
-    C.emit("kernel_router_utility_4096x512x11", _time(f2, h),
+    C.emit("kernel_router_utility_4096x512x11", C.timeit(f2, h),
            "fused routing decision oracle")
 
     q = jax.random.normal(key, (1, 1024, 8, 64), jnp.bfloat16)
     f3 = jax.jit(lambda q: ref.flash_attention_ref(q, q, q, causal=True))
-    C.emit("kernel_flash_attention_1x1024x8x64", _time(f3, q, iters=5),
+    C.emit("kernel_flash_attention_1x1024x8x64", C.timeit(f3, q, iters=5),
            "attention oracle")
     return None
 

@@ -1,0 +1,232 @@
+"""Hot-path perf suite → BENCH_train.json / BENCH_route.json / BENCH_serve.json.
+
+Measures the three wall-clock consumers this repo optimizes — federated
+training rounds, the K-means routing math, and the serving gateway — each
+against its pre-fusion baseline, with warmup-then-measure methodology and
+``block_until_ready``-correct timers (see benchmarks/common.timeit).
+
+  PYTHONPATH=src python -m benchmarks.perf_suite            # full run
+  PYTHONPATH=src python -m benchmarks.perf_suite --smoke    # CI: tiny +
+                                                            # JSON validity
+
+``--smoke`` shrinks every workload so the suite finishes in seconds; CI
+only asserts the three JSON files are produced and well-formed (CPU CI
+timing is too noisy for thresholds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro import routers
+from repro.config import FedConfig, RouterConfig
+from repro.core import federated as F
+from repro.data.partition import federated_split
+from repro.data.synthetic import make_eval_corpus
+from repro.kernels import ops as kops
+
+
+def _bench_file(section: str, smoke: bool) -> str:
+    """Smoke runs write *.smoke.json so they can never clobber the
+    git-tracked full-run trajectory files."""
+    return f"BENCH_{section}{'.smoke' if smoke else ''}.json"
+
+
+# ---------------------------------------------------------------------------
+# train: scan-fused FedAvg vs the per-round loop
+# ---------------------------------------------------------------------------
+
+
+def bench_train(smoke: bool) -> None:
+    import functools
+
+    from repro.core import mlp_router as R
+
+    rounds = 5 if smoke else 30
+    rcfg = RouterConfig(d_emb=16, num_models=8, hidden=(32, 32))
+    fcfg = FedConfig(num_clients=8, batch_size=128, rounds=rounds)
+    corpus = make_eval_corpus(jax.random.PRNGKey(0),
+                              n_queries=200 if smoke else 400,
+                              n_tasks=4, n_models=8, d_emb=16)
+    data = federated_split(jax.random.PRNGKey(1), corpus, fcfg)["train"]
+    key = jax.random.PRNGKey(2)
+    max_steps = max(1, int(np.ceil(data["x"].shape[1] / fcfg.batch_size))) \
+        * fcfg.local_epochs
+
+    def prepr_fit():
+        """The pre-scan driver verbatim: a FRESH jit per fit (recompiles
+        every call) + one host sync per round."""
+        opt = F._make_opt(fcfg, "adamw")
+        k, k_init = jax.random.split(key)
+        params = R.init_mlp_router(key=k_init, cfg=rcfg)
+        round_fn = jax.jit(functools.partial(
+            F.fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=opt,
+            max_steps=max_steps))
+        for _ in range(rounds):
+            k, k_r = jax.random.split(k)
+            params, loss = round_fn(params, data, k_r)
+            float(loss)
+        return params
+
+    def loop_fit():  # cached per-round jit, still one dispatch+sync/round
+        return F.fedavg(key, data, rcfg, fcfg, eval_fn=lambda p: None)[0]
+
+    def scan_fit():  # the fused path: one dispatch, one sync per fit
+        return F.fedavg(key, data, rcfg, fcfg)[0]
+
+    repeats = 2 if smoke else 5
+    prepr = C.timeit(prepr_fit, warmup=1, iters=1, repeats=repeats)
+    loop = C.timeit(loop_fit, warmup=1, iters=1, repeats=repeats)
+    fused = C.timeit(scan_fit, warmup=1, iters=1, repeats=repeats)
+    C.emit(f"fedavg_prepr_{rounds}r", prepr,
+           "pre-PR driver: jit per fit + sync per round")
+    C.emit(f"fedavg_loop_{rounds}r", loop,
+           "cached per-round jit + sync per round",
+           speedup_vs_baseline=prepr / loop)
+    C.emit(f"fedavg_scan_{rounds}r", fused, "lax.scan-fused rounds",
+           speedup_vs_baseline=prepr / fused)
+    C.emit(f"fedavg_scan_vs_loop_{rounds}r", fused,
+           "scan fusion alone (vs cached loop)",
+           speedup_vs_baseline=loop / fused)
+    C.write_bench(_bench_file("train", smoke), meta={"rounds": rounds,
+                                                     "smoke": smoke})
+
+
+# ---------------------------------------------------------------------------
+# route: fused assign-reduce + incremental k-means++ vs their baselines
+# ---------------------------------------------------------------------------
+
+
+def bench_route(smoke: bool) -> None:
+    n, d, K = (512, 32, 8) if smoke else (8192, 64, 32)
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (n, d))
+    cents = jax.random.normal(kc, (K, d))
+    w = jnp.ones((n,))
+
+    # Lloyd's step, pre-fusion: assign kernel + host-visible one-hot scatter
+    @jax.jit
+    def lloyd_step_onehot(x, cents, w):
+        assign = kops.kmeans_assign(x, cents)
+        onehot = jax.nn.one_hot(assign, K, dtype=x.dtype)
+        wv = onehot * w[:, None]
+        return wv.T @ x, jnp.sum(wv, axis=0)
+
+    @jax.jit
+    def lloyd_step_fused(x, cents, w):
+        _, sums, cnts = kops.kmeans_assign_reduce(x, cents, w)
+        return sums, cnts
+
+    base = C.timeit(lloyd_step_onehot, x, cents, w, repeats=5)
+    fused = C.timeit(lloyd_step_fused, x, cents, w, repeats=5)
+    C.emit(f"lloyd_step_onehot_{n}x{d}x{K}", base, "assign + one-hot scatter")
+    C.emit(f"lloyd_step_fused_{n}x{d}x{K}", fused,
+           "fused assign-reduce (on CPU both run the jnp oracle — expect "
+           "~1x; the fusion win is the Pallas TPU kernel)",
+           speedup_vs_baseline=base / fused)
+
+    # k-means++ seeding: O(n·K·d) broadcast (pre-change) vs incremental
+    from repro.core.kmeans import _plusplus_init
+
+    def plusplus_broadcast(key, X, w):  # the replaced implementation
+        n = X.shape[0]
+        k0, key = jax.random.split(key)
+        first = jax.random.choice(k0, n, p=w / jnp.sum(w))
+        cents0 = jnp.zeros((K, X.shape[1]), X.dtype).at[0].set(X[first])
+
+        def body(i, carry):
+            cents, key = carry
+            d2 = jnp.min(
+                jnp.sum((X[:, None, :] - cents[None, :, :]) ** 2, -1)
+                + jnp.where(jnp.arange(K)[None, :] < i, 0.0, jnp.inf),
+                axis=1)
+            p = d2 * w
+            p = jnp.where(jnp.isfinite(p), p, 0.0)
+            p = p / jnp.maximum(jnp.sum(p), 1e-12)
+            key, sub = jax.random.split(key)
+            nxt = jax.random.choice(sub, n, p=p)
+            return cents.at[i].set(X[nxt]), key
+
+        cents, _ = jax.lax.fori_loop(1, K, body, (cents0, key))
+        return cents
+
+    k = jax.random.PRNGKey(3)
+    base_pp = C.timeit(jax.jit(plusplus_broadcast), k, x, w)
+    fast_pp = C.timeit(jax.jit(lambda k, X, w: _plusplus_init(k, X, w, K)),
+                       k, x, w)
+    C.emit(f"plusplus_broadcast_{n}x{d}x{K}", base_pp, "O(n*K*d) per step")
+    C.emit(f"plusplus_incremental_{n}x{d}x{K}", fast_pp,
+           "O(n*d) per step", speedup_vs_baseline=base_pp / fast_pp)
+    C.write_bench(_bench_file("route", smoke), meta={"n": n, "d": d,
+                                                     "K": K, "smoke": smoke})
+
+
+# ---------------------------------------------------------------------------
+# serve: scan-fused decode + cached jit vs the per-token loop
+# ---------------------------------------------------------------------------
+
+
+def bench_serve(smoke: bool) -> None:
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.gateway import PoolModel, RoutedServer
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    pool = [PoolModel("qwen2-1.5b", cfg,
+                      init_params(jax.random.PRNGKey(0), cfg), 0.1)]
+    router = routers.make(
+        "kmeans", RouterConfig(d_emb=64, num_models=1),
+        state={"centroids": jnp.zeros((1, 64)),
+               "A": jnp.array([[0.9]]), "C": jnp.array([[0.1]]),
+               "n": jnp.ones((1, 1))})
+    srv = RoutedServer(pool, router)
+    prompts = ["write a poem about the sea", "solve this integral now",
+               "summarize the meeting notes", "prove the theorem carefully"]
+    max_new = 4 if smoke else 32
+    iters = 1 if smoke else 5
+
+    base = C.timeit(lambda: srv.generate(prompts, lam=0.5,
+                                         max_new_tokens=max_new,
+                                         scan_decode=False),
+                    warmup=1, iters=iters)
+    fused = C.timeit(lambda: srv.generate(prompts, lam=0.5,
+                                          max_new_tokens=max_new),
+                     warmup=1, iters=iters)
+    C.emit(f"generate_token_loop_b4_t{max_new}", base,
+           "per-token dispatch + host sync")
+    C.emit(f"generate_scan_decode_b4_t{max_new}", fused,
+           "scan decode, one transfer", speedup_vs_baseline=base / fused)
+
+    route_us = C.timeit(lambda: srv.route(prompts, 0.5), warmup=2,
+                        iters=max(iters, 3))
+    C.emit("route_batch4", route_us, "encode + cached-jit route")
+    C.write_bench(_bench_file("serve", smoke),
+                  meta={"model": cfg.name, "max_new": max_new,
+                        "smoke": smoke})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workloads — validate the harness, not perf")
+    args = ap.parse_args()
+
+    bench_train(args.smoke)
+    bench_route(args.smoke)
+    bench_serve(args.smoke)
+
+    for f in (_bench_file(s, args.smoke)
+              for s in ("train", "route", "serve")):
+        blob = json.loads((C.REPO_ROOT / f).read_text())
+        assert blob["records"], f"{f}: no records"
+        assert all(np.isfinite(r["us_per_call"]) for r in blob["records"])
+        print(f"{f}: {len(blob['records'])} records OK")
+
+
+if __name__ == "__main__":
+    main()

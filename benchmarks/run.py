@@ -21,6 +21,8 @@ MODULES = [
 
 
 def main() -> None:
+    from benchmarks import common as C
+
     print("name,us_per_call,derived")
     failures = 0
     only = sys.argv[1:] if len(sys.argv) > 1 else None
@@ -34,6 +36,10 @@ def main() -> None:
             failures += 1
             print(f"{mod_name},0.0,EXCEPTION")
             traceback.print_exc()
+    if only is None:  # a filtered/debug run must not clobber the full set
+        path = C.write_bench("BENCH_figures.json",
+                             meta={"failures": failures})
+        print(f"wrote {path}")
     if failures:
         sys.exit(1)
 

@@ -134,27 +134,92 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            init=None, full_batch: bool = False, freeze=None, distill=None,
            client_mask=None, dp_sigma: float = 0.0,
            eval_fn: Optional[Callable] = None):
-    """Run T rounds of Algorithm 1. Returns (params, history dict)."""
+    """Run T rounds of Algorithm 1. Returns (params, history dict).
+
+    Without ``eval_fn`` the T-round loop is fused into one ``lax.scan`` —
+    a single dispatch and one host sync for the whole fit, bit-for-bit
+    equal to the per-round loop on the same key. ``eval_fn`` needs params
+    on the host every round, so it falls back to the per-round loop.
+    """
     rounds = rounds if rounds is not None else fcfg.rounds
-    opt = _make_opt(fcfg, optimizer)
     D_max = data["x"].shape[1]
     max_steps = 1 if full_batch else max(
         1, int(np.ceil(D_max / fcfg.batch_size))) * fcfg.local_epochs
     key, k_init = jax.random.split(key)
     params = init if init is not None else R.init_mlp_router(key=k_init,
                                                              cfg=rcfg)
-    round_fn = jax.jit(functools.partial(
-        fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=opt, max_steps=max_steps,
-        full_batch=full_batch, freeze=freeze, distill=distill,
-        client_mask=client_mask, dp_sigma=dp_sigma))
+    # Hashable-config fits reuse module-level compiled functions (repeated
+    # fits — restarts, sweeps, benchmarks — compile once per config+shape);
+    # pytree-carrying knobs (freeze/distill/client_mask) build a fresh jit.
+    # Keep `simple`/`cfg_key` in sync with _round_partial's signature.
+    simple = freeze is None and distill is None and client_mask is None
+    cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma)
+
+    if eval_fn is None:
+        if simple:
+            fit = _scan_fit_cached(*cfg_key, rounds, init is None)
+        else:
+            fit = _make_scan_fit(
+                _round_partial(*cfg_key, freeze, distill, client_mask),
+                rounds, donate=init is None)
+        params, losses = fit(params, key, data)
+        return params, {"loss": np.asarray(losses).tolist(), "eval": []}
+
+    round_jit = (_round_fn_cached(*cfg_key) if simple else
+                 jax.jit(_round_partial(*cfg_key, freeze, distill,
+                                        client_mask)))
     hist = {"loss": [], "eval": []}
     for t in range(rounds):
         key, k_r = jax.random.split(key)
-        params, loss = round_fn(params, data, k_r)
+        params, loss = round_jit(params, data, k_r)
         hist["loss"].append(float(loss))
-        if eval_fn is not None:
-            hist["eval"].append(eval_fn(params))
+        hist["eval"].append(eval_fn(params))
     return params, hist
+
+
+def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
+    """Fuse T communication rounds into one ``lax.scan``: per-step key
+    handling replicates the per-round loop exactly (split → round), so the
+    result is bit-for-bit identical on a fixed key. Params are donated when
+    the caller does not hold the initial buffer (fresh init)."""
+    def run(params, key, data):
+        def body(carry, _):
+            params, key = carry
+            key, k_r = jax.random.split(key)
+            params, loss = round_fn(params, data, k_r)
+            return (params, key), loss
+
+        (params, _), losses = jax.lax.scan(body, (params, key), None,
+                                           length=rounds)
+        return params, losses
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
+def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
+                   freeze=None, distill=None, client_mask=None):
+    """The one place a fedavg_round closure is built — every fit path
+    (cached or not) goes through it, so a new knob can't silently diverge
+    between the cached and fresh-jit variants."""
+    return functools.partial(
+        fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=_make_opt(fcfg, optimizer),
+        max_steps=max_steps, full_batch=full_batch, freeze=freeze,
+        distill=distill, client_mask=client_mask, dp_sigma=dp_sigma)
+
+
+@functools.lru_cache(maxsize=64)
+def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma):
+    return jax.jit(_round_partial(rcfg, fcfg, optimizer, max_steps,
+                                  full_batch, dp_sigma))
+
+
+@functools.lru_cache(maxsize=64)
+def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
+                     rounds, donate):
+    return _make_scan_fit(
+        _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch,
+                       dp_sigma),
+        rounds, donate=donate)
 
 
 # ---------------------------------------------------------------------------

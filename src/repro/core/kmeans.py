@@ -16,25 +16,29 @@ from repro.kernels import ops as kops
 
 
 def _plusplus_init(key, X, w, K):
-    """k-means++ style seeding (weighted)."""
+    """k-means++ style seeding (weighted).
+
+    Tracks the running min squared distance incrementally: each step only
+    computes distances to the one newly added center — O(n·d) per step
+    instead of the O(n·K·d) full-table broadcast (min over centers is
+    exact, so the fold is bit-for-bit the same argmin)."""
     n = X.shape[0]
     k0, key = jax.random.split(key)
     first = jax.random.choice(k0, n, p=w / jnp.sum(w))
     cents = jnp.zeros((K, X.shape[1]), X.dtype).at[0].set(X[first])
+    d2min = jnp.sum((X - X[first][None, :]) ** 2, -1)
 
     def body(i, carry):
-        cents, key = carry
-        d2 = jnp.min(
-            jnp.sum((X[:, None, :] - cents[None, :, :]) ** 2, -1)
-            + jnp.where(jnp.arange(K)[None, :] < i, 0.0, jnp.inf), axis=1)
-        p = d2 * w
+        cents, d2min, key = carry
+        p = d2min * w
         p = jnp.where(jnp.isfinite(p), p, 0.0)
         p = p / jnp.maximum(jnp.sum(p), 1e-12)
         key, sub = jax.random.split(key)
         nxt = jax.random.choice(sub, n, p=p)
-        return cents.at[i].set(X[nxt]), key
+        d2min = jnp.minimum(d2min, jnp.sum((X - X[nxt][None, :]) ** 2, -1))
+        return cents.at[i].set(X[nxt]), d2min, key
 
-    cents, _ = jax.lax.fori_loop(1, K, body, (cents, key))
+    cents, _, _ = jax.lax.fori_loop(1, K, body, (cents, d2min, key))
     return cents
 
 
@@ -43,14 +47,12 @@ def _lloyd_once(key, X, w, K: int, iters: int):
     cents = _plusplus_init(key, X, w, K)
 
     def step(cents, _):
-        assign = kops.kmeans_assign(X, cents)               # (n,)
-        onehot = jax.nn.one_hot(assign, K, dtype=X.dtype)   # (n, K)
-        wv = onehot * w[:, None]
-        sums = wv.T @ X                                     # (K, d)
-        cnts = jnp.sum(wv, axis=0)                          # (K,)
+        # fused assign-reduce: argmin + weighted per-cluster sums/counts in
+        # one pass (Pallas kernel on TPU, jnp oracle elsewhere)
+        _, sums, cnts = kops.kmeans_assign_reduce(X, cents, w)
         new = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1e-12)[:, None],
                         cents)  # keep empty clusters in place
-        return new, None
+        return new.astype(cents.dtype), None  # f32 sums; keep carry dtype
 
     cents, _ = jax.lax.scan(step, cents, None, length=iters)
     assign = kops.kmeans_assign(X, cents)

@@ -1,13 +1,20 @@
-"""Pallas TPU kernel: K-means nearest-centroid assignment.
+"""Pallas TPU kernels: K-means nearest-centroid assignment (+ fused reduce).
 
 The K-means router's hot loop (paper Alg. 2 lines 3/9) is a pairwise-distance
 argmin. TPU mapping: query rows are tiled into VMEM blocks; the centroid
-table (K ≤ a few hundred) stays VMEM-resident; −2·x·μᵀ runs on the MXU and
-the rank-1 ‖μ‖² correction + argmin run on the VPU. ‖x‖² is dropped
-(argmin-invariant), so the kernel is one matmul + a lane reduction.
+table is tiled along K into ``block_k`` VMEM blocks (so K in the thousands
+never overflows VMEM); −2·x·μᵀ runs on the MXU and the rank-1 ‖μ‖²
+correction + argmin run on the VPU. ‖x‖² is dropped (argmin-invariant), so
+assignment is one matmul + a lane reduction per (query, centroid) tile.
 
-Block shapes are padded by the ops wrapper to (8, 128) multiples; padded
-centroids carry +inf bias so they are never selected.
+``kmeans_assign_reduce_pallas`` additionally fuses the Lloyd's-step update
+into the same pass: the per-tile one-hot of the argmin feeds a second MXU
+matmul that accumulates per-cluster weighted coordinate sums and counts
+across query tiles, so a full Lloyd iteration is one kernel launch instead
+of assign + host-visible one-hot scatter.
+
+Inputs are only padded when their shapes are not already (8, 128)-aligned;
+padded centroids carry +inf bias so they are never selected.
 """
 from __future__ import annotations
 
@@ -16,45 +23,164 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, c_ref, bias_ref, out_ref):
+def _rup(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pad2(a, rows: int, cols: int):
+    """Zero-pad a 2-D array up to (rows, cols) — no-op when already there."""
+    if a.shape == (rows, cols):
+        return a
+    return jnp.zeros((rows, cols), a.dtype).at[:a.shape[0], :a.shape[1]].set(a)
+
+
+def _assign_kernel(x_ref, c_ref, bias_ref, out_ref, min_s):
+    """One (query tile, centroid tile) step: block argmin merged into the
+    running (min distance, argmin). The min carry lives in VMEM scratch
+    (persists across the inner centroid-tile grid steps) — only the
+    argmin itself ever reaches HBM."""
+    k = pl.program_id(1)
+    bk = c_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)          # (BN, D)
+    c = c_ref[...].astype(jnp.float32)          # (BK, D)
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BN, BK) — MXU
+    c2 = jnp.sum(c * c, axis=1)                 # (BK,)
+    dist = c2[None, :] - 2.0 * xc + bias_ref[...]  # (BN, BK)
+    blk_min = jnp.min(dist, axis=1)
+    blk_arg = jnp.argmin(dist, axis=1).astype(jnp.int32) + k * bk
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = blk_arg
+        min_s[...] = blk_min[:, None]
+
+    @pl.when(k > 0)
+    def _():
+        # strict < keeps the earlier tile on ties — global argmin semantics
+        better = blk_min < min_s[..., 0]
+        out_ref[...] = jnp.where(better, blk_arg, out_ref[...])
+        min_s[...] = jnp.minimum(blk_min[:, None], min_s[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def kmeans_assign_pallas(x: jnp.ndarray, cents: jnp.ndarray, *,
+                         block_n: int = 256, block_k: int = 512,
+                         interpret: bool = True):
+    """x: (n, d), cents: (K, d) → (n,) int32."""
+    n, d = x.shape
+    K = cents.shape[0]
+    assert block_k % 128 == 0, "block_k must be lane-aligned (multiple of 128)"
+
+    n_p, d_p = _rup(n, block_n), _rup(d, 128)
+    bk = min(block_k, _rup(max(K, 8), 128))
+    k_p = _rup(max(K, 8), bk)
+    x_p = _pad2(x, n_p, d_p)
+    c_p = _pad2(cents, k_p, d_p)
+    bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]  # (1, k_p)
+
+    grid = (n_p // block_n, k_p // bk)  # centroid tiles innermost
+    out = pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_p), lambda i, k: (i, 0)),
+            pl.BlockSpec((bk, d_p), lambda i, k: (k, 0)),
+            pl.BlockSpec((1, bk), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, 1), jnp.float32),  # running min carry
+        ],
+        interpret=interpret,
+    )(x_p, c_p, bias)
+    return out[:n]
+
+
+def _assign_reduce_kernel(x_ref, c_ref, bias_ref, w_ref, assign_ref,
+                          sums_ref, cnts_ref):
+    """One query tile: nearest-centroid argmin AND its weighted one-hot
+    reduction (per-cluster coordinate sums + counts), sharing the x·μᵀ
+    MXU pass. sums/cnts blocks are grid-invariant → VMEM accumulation."""
+    i = pl.program_id(0)
+    kk = c_ref.shape[0]
     x = x_ref[...].astype(jnp.float32)          # (BN, D)
     c = c_ref[...].astype(jnp.float32)          # (K, D)
     xc = jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)     # (BN, K) — MXU
-    c2 = jnp.sum(c * c, axis=1)                 # (K,)
-    dist = c2[None, :] - 2.0 * xc + bias_ref[...]  # (BN, K)
-    out_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    c2 = jnp.sum(c * c, axis=1)
+    dist = c2[None, :] - 2.0 * xc + bias_ref[...]
+    assign = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    assign_ref[...] = assign
+
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], kk), 1)
+              == assign[:, None]).astype(jnp.float32)
+    wv = onehot * w_ref[...][:, None]           # (BN, K) — pad rows have w=0
+    part_sums = jax.lax.dot_general(
+        wv, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (K, D) — MXU
+    part_cnts = jnp.sum(wv, axis=0)             # (K,)
+
+    @pl.when(i == 0)
+    def _():
+        sums_ref[...] = part_sums
+        cnts_ref[...] = part_cnts
+
+    @pl.when(i > 0)
+    def _():
+        sums_ref[...] += part_sums
+        cnts_ref[...] += part_cnts
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def kmeans_assign_pallas(x: jnp.ndarray, cents: jnp.ndarray, *,
-                         block_n: int = 256, interpret: bool = True):
-    """x: (n, d), cents: (K, d) → (n,) int32."""
+def kmeans_assign_reduce_pallas(x: jnp.ndarray, cents: jnp.ndarray,
+                                w: jnp.ndarray, *, block_n: int = 256,
+                                interpret: bool = True):
+    """x: (n, d), cents: (K, d), w: (n,) →
+    (assign (n,) int32, sums (K, d) f32, counts (K,) f32) where
+    sums[k] = Σ_{i: assign_i=k} w_i·x_i and counts[k] = Σ w_i.
+
+    The centroid table is kept whole in VMEM (Lloyd's K is small); use
+    ``kmeans_assign_pallas`` when only assignments are needed for huge K.
+    """
     n, d = x.shape
     K = cents.shape[0]
 
-    def rup(v, m):
-        return (v + m - 1) // m * m
-
-    n_p, d_p, k_p = rup(n, block_n), rup(d, 128), rup(max(K, 8), 128)
-    x_p = jnp.zeros((n_p, d_p), x.dtype).at[:n, :d].set(x)
-    c_p = jnp.zeros((k_p, d_p), cents.dtype).at[:K, :d].set(cents)
-    bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]  # (1, k_p)
+    n_p, d_p, k_p = _rup(n, block_n), _rup(d, 128), _rup(max(K, 8), 128)
+    x_p = _pad2(x, n_p, d_p)
+    c_p = _pad2(cents, k_p, d_p)
+    w_p = (jnp.asarray(w, jnp.float32) if n_p == n
+           else jnp.zeros((n_p,), jnp.float32).at[:n].set(w))
+    bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]
 
     grid = (n_p // block_n,)
-    out = pl.pallas_call(
-        _kernel,
+    whole = lambda i: (0, 0)
+    assign, sums, cnts = pl.pallas_call(
+        _assign_reduce_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, d_p), lambda i: (i, 0)),
-            pl.BlockSpec((k_p, d_p), lambda i: (0, 0)),
-            pl.BlockSpec((1, k_p), lambda i: (0, 0)),
+            pl.BlockSpec((k_p, d_p), whole),
+            pl.BlockSpec((1, k_p), whole),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((k_p, d_p), whole),
+            pl.BlockSpec((k_p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_p,), jnp.int32),
+            jax.ShapeDtypeStruct((k_p, d_p), jnp.float32),
+            jax.ShapeDtypeStruct((k_p,), jnp.float32),
+        ],
         interpret=interpret,
-    )(x_p, c_p, bias)
-    return out[:n]
+    )(x_p, c_p, bias, w_p)
+    return assign[:n], sums[:K, :d], cnts[:K]

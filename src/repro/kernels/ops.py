@@ -14,7 +14,8 @@ import jax
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.kmeans_assign import (kmeans_assign_pallas,
+                                         kmeans_assign_reduce_pallas)
 from repro.kernels.router_utility import router_utility_pallas
 
 
@@ -34,6 +35,16 @@ def kmeans_assign(x, cents, *, impl: str | None = None):
     if impl == "pallas":
         return kmeans_assign_pallas(x, cents, interpret=_interpret())
     return ref.kmeans_assign_ref(x, cents)
+
+
+def kmeans_assign_reduce(x, cents, w, *, impl: str | None = None):
+    """Fused Lloyd's-step op: nearest-centroid assignment + per-cluster
+    weighted coordinate sums and counts in one pass over x."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return kmeans_assign_reduce_pallas(x, cents, w,
+                                           interpret=_interpret())
+    return ref.kmeans_assign_reduce_ref(x, cents, w)
 
 
 def router_utility(h, acc_w, acc_b, cost_w, cost_b, lam, *,

@@ -17,6 +17,21 @@ def kmeans_assign_ref(x: jnp.ndarray, cents: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(c2[None, :] - 2.0 * xc, axis=-1).astype(jnp.int32)
 
 
+def kmeans_assign_reduce_ref(x: jnp.ndarray, cents: jnp.ndarray,
+                             w: jnp.ndarray):
+    """x: (n, d), cents: (K, d), w: (n,) →
+    (assign (n,) int32, sums (K, d) f32, counts (K,) f32): the
+    nearest-centroid argmin plus the weighted one-hot reduction a Lloyd's
+    step needs (sums[k] = Σ_{assign_i=k} w_i·x_i, counts[k] = Σ w_i).
+    Accumulates in f32 like the Pallas kernel (and every other oracle
+    here), so the two impls stay interchangeable for low-precision x."""
+    K = cents.shape[0]
+    assign = kmeans_assign_ref(x, cents)
+    onehot = jax.nn.one_hot(assign, K, dtype=jnp.float32)           # (n, K)
+    wv = onehot * w.astype(jnp.float32)[:, None]
+    return assign, wv.T @ x.astype(jnp.float32), jnp.sum(wv, axis=0)
+
+
 def router_utility_ref(h: jnp.ndarray, acc_w, acc_b, cost_w, cost_b,
                        lam) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused routing decision on trunk features.

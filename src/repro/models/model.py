@@ -103,12 +103,15 @@ def init_params(key, cfg: ModelConfig) -> dict:
 def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
             moe_mode: str = "dense", q_chunk: int = 512,
             window: Optional[int] = None, remat: bool = True,
-            logits_last_only: bool = False, return_cache: bool = False,
-            attn_layout: str = "grouped"):
+            logits_last_only: bool = False, last_pos=None,
+            return_cache: bool = False, attn_layout: str = "grouped"):
     """Returns (logits, aux_loss[, cache]).
 
     logits_last_only — serving prefill: only the final position is
     unembedded (avoids a (B,S,V) logits tensor).
+    last_pos — with logits_last_only, a traced scalar index selecting the
+    position to unembed instead of S−1: lets the gateway right-pad prompts
+    into shape buckets without recompiling per true length.
     return_cache — also emit the decode cache (per-unit KV / SSM state as
     scan ys), i.e. this call doubles as ``prefill``.
     """
@@ -154,7 +157,8 @@ def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
                                    params["blocks"])
     x = _norm(cfg, params["final_norm"], x)
     if logits_last_only:
-        x = x[:, -1:, :]
+        x = (x[:, -1:, :] if last_pos is None else
+             jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1))
     logits = x @ params["embed"]["unembed"]
     logits = constrain(logits, ("batch", "seq", "vocab"))
     if return_cache:

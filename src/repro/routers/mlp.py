@@ -194,10 +194,20 @@ def fedavg_round_sharded(params, data, key, rcfg, fcfg, opt, max_steps,
                         params), loss
 
 
+@functools.lru_cache(maxsize=16)
+def _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps, mesh: Mesh,
+                             rounds, donate):
+    """Compiled scan-fused sharded fit, reused across repeated fits with
+    the same config/mesh (Mesh and the frozen configs are hashable)."""
+    round_fn = functools.partial(
+        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,
+        opt=F._make_opt(fcfg, optimizer), max_steps=max_steps, mesh=mesh)
+    return F._make_scan_fit(round_fn, rounds, donate=donate)
+
+
 def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
                     init=None, num_models=None, optimizer: str = "adamw",
                     eval_fn=None):
-    opt = F._make_opt(fcfg, optimizer)
     D_max = data["x"].shape[1]
     # same local-work budget as the in-process path (F.fedavg)
     max_steps = max(1, int(np.ceil(D_max / fcfg.batch_size))) \
@@ -205,14 +215,19 @@ def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
     key, k_init = jax.random.split(key)
     params = init if init is not None else R.init_mlp_router(
         k_init, rcfg, num_models=num_models)
-    hist = {"loss": [], "eval": []}
+    if eval_fn is None:  # fuse the round loop — one dispatch, one host sync
+        fit = _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps,
+                                       mesh, rounds, init is None)
+        params, losses = fit(params, key, data)
+        return params, {"loss": np.asarray(losses).tolist(), "eval": []}
+
     step = jax.jit(functools.partial(
-        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg, opt=opt,
-        max_steps=max_steps, mesh=mesh))
+        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,
+        opt=F._make_opt(fcfg, optimizer), max_steps=max_steps, mesh=mesh))
+    hist = {"loss": [], "eval": []}
     for _ in range(rounds):
         key, k_r = jax.random.split(key)
         params, loss = step(params, data, k_r)
         hist["loss"].append(float(loss))
-        if eval_fn is not None:
-            hist["eval"].append(eval_fn(params))
+        hist["eval"].append(eval_fn(params))
     return params, hist

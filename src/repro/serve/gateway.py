@@ -7,10 +7,18 @@ kernel + cluster-level utility — (iii) grouped per chosen model, and (iv)
 served by that model's prefill + decode loop. This is the deployment shape
 the paper targets: per-request model selection under an accuracy/cost
 trade-off λ chosen at inference time (§3).
+
+Hot-path discipline: every jitted function here is built ONCE per
+(model config, static shape) and cached at module level — nothing is
+re-jitted per request. Batch sizes and prompt lengths are bucketed to
+powers of two so repeated traffic reuses compiled programs, and greedy
+decode runs as a single ``lax.scan`` that returns the whole token matrix
+in one device→host transfer (no per-token sync).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import zlib
 from typing import Callable, Dict, List, Optional
 
@@ -31,6 +39,61 @@ class PoolModel:
     cfg: ModelConfig
     params: dict
     cost_per_token: float
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << (max(v, 1) - 1).bit_length()
+
+
+#: one entry appended per jit TRACE of a serve/decode function — tests
+#: assert it stays flat after warmup (zero new compilations).
+TRACE_LOG: List[tuple] = []
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_step_fn(cfg: ModelConfig):
+    """Jitted single-token decode step, cached per model config (the
+    per-token fallback path — never rebuilt per request batch)."""
+    def step(params, cache, tok, pos):
+        TRACE_LOG.append(("decode_step", cfg.name, tok.shape))
+        return mdl.decode_step(params, cache, cfg, tokens=tok, pos=pos)
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_fn(cfg: ModelConfig, max_new: int):
+    """Jitted prefill + greedy ``lax.scan`` decode, cached per
+    (model config, max_new); distinct (B, S) buckets land in the jit
+    tracing cache, so same-bucket traffic compiles nothing.
+
+    ``last_pos`` (traced) is the true last prompt position inside the
+    padded S bucket; decode continues from ``last_pos + 1`` and the cache
+    slots holding pad prefill K/V are overwritten before they ever become
+    attention-valid (validity is ``pos + 1``).
+    """
+    def serve(params, toks, last_pos):
+        TRACE_LOG.append(("serve", cfg.name, toks.shape, max_new))
+        S = toks.shape[1]
+        logits, _, cache = mdl.forward(params, cfg, tokens=toks,
+                                       logits_last_only=True,
+                                       last_pos=last_pos,
+                                       return_cache=True, q_chunk=64)
+        cache = extend_cache(cache, S + max_new)
+        tok0 = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+        def body(carry, t):
+            tok, cache = carry
+            logits_t, cache = mdl.decode_step(params, cache, cfg,
+                                              tokens=tok,
+                                              pos=last_pos + 1 + t)
+            nxt = jnp.argmax(logits_t[:, 0], axis=-1)[:, None]
+            return (nxt.astype(jnp.int32), cache), tok[:, 0]
+
+        _, out = jax.lax.scan(body, (tok0, cache),
+                              jnp.arange(max_new, dtype=jnp.int32))
+        return out.T                                  # (B, max_new)
+
+    return jax.jit(serve)
 
 
 class RoutedServer:
@@ -64,15 +127,43 @@ class RoutedServer:
         self.pool = pool
         self.router = router
         self.d_emb = router.rcfg.d_emb
+        # One jitted decision function per router object. State and λ are
+        # traced arguments — not baked-in constants — so in-place state
+        # swaps and per-request λ never recompile or go stale; batch sizes
+        # are bucketed below so repeat traffic hits the tracing cache.
+        # A replaced router object (e.g. a different family swapped in)
+        # rebuilds the function on the next route().
+        self._route_fn = self._make_route_fn(router)
+        self._route_fn_router = router
+
+    @staticmethod
+    def _make_route_fn(router: Router):
+        return jax.jit(lambda state, x, lam:
+                       router.with_state(state).route(x, lam))
 
     def route(self, prompts: List[str], lam: float) -> np.ndarray:
-        x = jnp.asarray(encode(prompts, self.d_emb))
-        return np.asarray(self.router.route(x, lam))
+        if self.router is not self._route_fn_router:
+            self._route_fn = self._make_route_fn(self.router)
+            self._route_fn_router = self.router
+        B = len(prompts)
+        x = encode(prompts, self.d_emb)
+        B_b = _next_pow2(B)
+        if B_b != B:
+            x = np.concatenate([x, np.zeros((B_b - B, x.shape[1]),
+                                            x.dtype)])
+        choice = self._route_fn(self.router.state, jnp.asarray(x),
+                                jnp.float32(lam))
+        return np.asarray(choice)[:B]
 
     def generate(self, prompts: List[str], *, lam: float = 0.5,
                  max_new_tokens: int = 16,
-                 tokenize: Optional[Callable] = None) -> Dict:
-        """Route, group by model, serve each group batched."""
+                 tokenize: Optional[Callable] = None,
+                 scan_decode: bool = True) -> Dict:
+        """Route, group by model, serve each group batched.
+
+        scan_decode=False selects the per-token fallback loop (one host
+        sync per token) — same tokens, kept for debugging/comparison.
+        """
         choice = self.route(prompts, lam)
         results = [None] * len(prompts)
         cost = 0.0
@@ -80,7 +171,8 @@ class RoutedServer:
             pm = self.pool[int(m_idx)]
             idx = np.where(choice == m_idx)[0]
             toks = self._tokenize([prompts[i] for i in idx], pm.cfg, tokenize)
-            out = self._serve_batch(pm, toks, max_new_tokens)
+            out = self._serve_batch(pm, toks, max_new_tokens,
+                                    scan_decode=scan_decode)
             for j, i in enumerate(idx):
                 results[i] = {"model": pm.name, "tokens": out[j].tolist()}
             cost += pm.cost_per_token * max_new_tokens * len(idx)
@@ -101,9 +193,27 @@ class RoutedServer:
         return out
 
     @staticmethod
-    def _serve_batch(pm: PoolModel, toks: np.ndarray, max_new: int):
+    def _serve_batch(pm: PoolModel, toks: np.ndarray, max_new: int, *,
+                     scan_decode: bool = True):
         cfg = pm.cfg
         B, S = toks.shape
+        if scan_decode:
+            # Bucket (B, S, max_new) to powers of two so repeat traffic
+            # reuses the compiled program and the program cache stays
+            # bounded. Greedy decode is prefix-stable, so decoding to the
+            # bucket length and slicing changes nothing. SSM/hybrid states
+            # integrate over every prefill position, so their prompts are
+            # served unpadded (cache hits still cover repeated lengths).
+            B_b = _next_pow2(B)
+            S_b = S if cfg.arch_type in ("ssm", "hybrid") else _next_pow2(S)
+            toks_p = np.zeros((B_b, S_b), np.int32)
+            toks_p[:B, :S] = toks
+            out = _serve_fn(cfg, _next_pow2(max_new))(
+                pm.params, jnp.asarray(toks_p), jnp.int32(S - 1))
+            return np.asarray(out)[:B, :max_new]
+
+        # fallback: per-token Python loop (cached jitted step)
+        step = _decode_step_fn(cfg)
         toks_j = jnp.asarray(toks)
         logits, _, cache = mdl.forward(pm.params, cfg, tokens=toks_j,
                                        logits_last_only=True,
@@ -111,11 +221,8 @@ class RoutedServer:
         cache = extend_cache(cache, S + max_new)
         out = np.zeros((B, max_new), np.int32)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        step = jax.jit(lambda p, c, t, pos: mdl.decode_step(
-            p, c, cfg, tokens=t, pos=pos))
         for t in range(max_new):
             out[:, t] = np.asarray(tok[:, 0])
-            logits_t, cache = step(pm.params, cache, tok,
-                                   jnp.int32(S + t))
+            logits_t, cache = step(pm.params, cache, tok, jnp.int32(S + t))
             tok = jnp.argmax(logits_t[:, 0], axis=-1)[:, None].astype(jnp.int32)
         return out

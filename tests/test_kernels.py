@@ -9,7 +9,8 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.kmeans_assign import (kmeans_assign_pallas,
+                                         kmeans_assign_reduce_pallas)
 from repro.kernels.router_utility import router_utility_pallas
 
 
@@ -31,6 +32,53 @@ def test_kmeans_assign(n, d, K, dtype):
         assert np.allclose(d2[rows, np.asarray(got)[rows]],
                            d2[rows, np.asarray(want)[rows]], rtol=1e-3,
                            atol=1e-3)
+
+
+def test_kmeans_assign_large_k_tiled():
+    """Centroid tables bigger than one block run the block_k tile loop and
+    still match the oracle exactly (strict-< merge keeps first-tie order)."""
+    kx, kc = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (200, 24))
+    c = jax.random.normal(kc, (1000, 24))
+    want = ref.kmeans_assign_ref(x, c)
+    for bk in (128, 256, 512):
+        got = kmeans_assign_pallas(x, c, block_k=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,K", [(64, 8, 3), (513, 77, 13), (256, 128, 20),
+                                   (100, 40, 130)])
+def test_kmeans_assign_reduce(n, d, K):
+    """Fused assign-reduce kernel == jnp oracle: same argmin, same
+    weighted per-cluster coordinate sums and counts."""
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(n + d), 3)
+    x = jax.random.normal(kx, (n, d))
+    c = jax.random.normal(kc, (K, d))
+    w = jax.random.uniform(kw, (n,))
+    a_ref, s_ref, n_ref = ref.kmeans_assign_reduce_ref(x, c, w)
+    a_got, s_got, n_got = kmeans_assign_reduce_pallas(x, c, w,
+                                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_got), np.asarray(a_ref))
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(n_got), np.asarray(n_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_assign_reduce_masks_padding():
+    """Zero-weight (padded) rows must not leak into sums/counts, and the
+    reduction must agree with a manual per-cluster sum."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(37, 9)),
+                    jnp.float32)
+    c = x[:5]
+    w = jnp.where(jnp.arange(37) < 30, 1.0, 0.0)
+    assign, sums, cnts = ref.kmeans_assign_reduce_ref(x, c, w)
+    assert float(jnp.sum(cnts)) == pytest.approx(30.0)
+    manual = np.zeros((5, 9), np.float32)
+    for i in range(30):
+        manual[int(assign[i])] += np.asarray(x[i])
+    np.testing.assert_allclose(np.asarray(sums), manual, rtol=1e-5,
+                               atol=1e-5)
 
 
 @pytest.mark.parametrize("n,dh,M", [(17, 64, 3), (300, 512, 11), (256, 512, 14),
