@@ -29,11 +29,15 @@ def main() -> None:
     for mod_name in MODULES:
         if only and not any(o in mod_name for o in only):
             continue
+        n_before = len(C._RECORDS)
         try:
             mod = __import__(mod_name, fromlist=["run"])
             mod.run()
         except Exception:
             failures += 1
+            # drop this module's partial records — an aborted figure must
+            # not serialize half its measurements as if they completed
+            del C._RECORDS[n_before:]
             print(f"{mod_name},0.0,EXCEPTION")
             traceback.print_exc()
     if only is None:  # a filtered/debug run must not clobber the full set

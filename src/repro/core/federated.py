@@ -133,13 +133,18 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            rounds: Optional[int] = None, optimizer: str = "adamw",
            init=None, full_batch: bool = False, freeze=None, distill=None,
            client_mask=None, dp_sigma: float = 0.0,
-           eval_fn: Optional[Callable] = None):
+           eval_fn: Optional[Callable] = None, eval_every: int = 1):
     """Run T rounds of Algorithm 1. Returns (params, history dict).
 
     Without ``eval_fn`` the T-round loop is fused into one ``lax.scan`` —
     a single dispatch and one host sync for the whole fit, bit-for-bit
     equal to the per-round loop on the same key. ``eval_fn`` needs params
-    on the host every round, so it falls back to the per-round loop.
+    on the host, so it falls back to a host loop — per round by default;
+    ``eval_every=E > 1`` scans E rounds per eval sync instead (one
+    dispatch + one host sync per E rounds — most of the fusion win while
+    keeping a round-level loss curve and an every-E eval curve). Params
+    and losses stay bit-for-bit identical to the per-round loop; the eval
+    list gets one entry per chunk boundary (after rounds E, 2E, ..., T).
     """
     rounds = rounds if rounds is not None else fcfg.rounds
     D_max = data["x"].shape[1]
@@ -162,8 +167,18 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
             fit = _make_scan_fit(
                 _round_partial(*cfg_key, freeze, distill, client_mask),
                 rounds, donate=init is None)
-        params, losses = fit(params, key, data)
+        params, _, losses = fit(params, key, data)
         return params, {"loss": np.asarray(losses).tolist(), "eval": []}
+
+    if eval_every > 1:
+        def chunk_fn(E):
+            return (_scan_fit_cached(*cfg_key, E, False) if simple
+                    else _make_scan_fit(
+                _round_partial(*cfg_key, freeze, distill, client_mask),
+                E, donate=False))
+
+        return chunked_eval_fit(chunk_fn, params, key, data, rounds,
+                                eval_every, eval_fn)
 
     round_jit = (_round_fn_cached(*cfg_key) if simple else
                  jax.jit(_round_partial(*cfg_key, freeze, distill,
@@ -177,11 +192,39 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     return params, hist
 
 
+def chunked_eval_fit(chunk_fn, params, key, data, rounds: int,
+                     eval_every: int, eval_fn):
+    """Drive a fit that scans E rounds between eval syncs: one dispatch +
+    one host sync per chunk instead of per round. ``chunk_fn(E)`` returns
+    a compiled ``(params, key, data) -> (params, key, losses)`` scan fit
+    of E rounds (built at most once per distinct length — E and the
+    tail). The scan body splits the key exactly like the per-round loop
+    and the carry key threads across chunks, so the trajectory is
+    bit-for-bit the per-round loop; history gets every per-round loss and
+    one eval entry per chunk boundary. Shared by the in-process and the
+    ``shard_map`` mesh paths so their bookkeeping can't diverge. No
+    donation: eval_fn may hold onto the params it was handed."""
+    hist = {"loss": [], "eval": []}
+    chunk_fns = {}
+    done = 0
+    while done < rounds:
+        E = min(eval_every, rounds - done)
+        if E not in chunk_fns:
+            chunk_fns[E] = chunk_fn(E)
+        params, key, losses = chunk_fns[E](params, key, data)
+        hist["loss"].extend(float(l) for l in np.asarray(losses))
+        hist["eval"].append(eval_fn(params))
+        done += E
+    return params, hist
+
+
 def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
     """Fuse T communication rounds into one ``lax.scan``: per-step key
     handling replicates the per-round loop exactly (split → round), so the
     result is bit-for-bit identical on a fixed key. Params are donated when
-    the caller does not hold the initial buffer (fresh init)."""
+    the caller does not hold the initial buffer (fresh init). Returns
+    (params, advanced key, per-round losses) so chunked-eval fits can
+    thread the key across chunks."""
     def run(params, key, data):
         def body(carry, _):
             params, key = carry
@@ -189,9 +232,9 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
             params, loss = round_fn(params, data, k_r)
             return (params, key), loss
 
-        (params, _), losses = jax.lax.scan(body, (params, key), None,
-                                           length=rounds)
-        return params, losses
+        (params, key), losses = jax.lax.scan(body, (params, key), None,
+                                             length=rounds)
+        return params, key, losses
 
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 

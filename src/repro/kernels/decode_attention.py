@@ -6,7 +6,9 @@ online-softmax accumulation — the cache never materializes in f32 and never
 needs a layout transpose (head-major storage, matching
 models/attention.init_kv_cache). Grid (B, Hkv, nS); the innermost seq
 dimension accumulates (m, l, acc) in VMEM scratch. A validity bound masks
-unwritten cache slots (positions ≥ n_valid).
+unwritten cache slots (positions ≥ n_valid); it may be per-batch — a (B,)
+vector — so a continuous-batching slot pool (serve/engine.py) can decode
+requests sitting at different positions in one launch.
 """
 from __future__ import annotations
 
@@ -18,6 +20,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+# jax 0.4.x names it TPUCompilerParams; 0.5+ renamed to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
 
 
 def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
@@ -56,21 +62,23 @@ def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
 def decode_attention_pallas(q, k_cache, v_cache, n_valid, *,
                             block_s: int = 512, interpret: bool = True):
     """q: (B, Hkv, g, hd); caches: (B, Hkv, S, hd) head-major;
-    n_valid: scalar int32 — number of filled cache slots.
+    n_valid: scalar int32 — number of filled cache slots — or a (B,)
+    vector giving each batch row (pool slot) its own validity bound.
     Returns (B, Hkv, g, hd)."""
     B, Hkv, g, hd = q.shape
     S = k_cache.shape[2]
     bs = min(block_s, S)
     assert S % bs == 0
     ns = S // bs
-    nv = jnp.full((1, 1), n_valid, jnp.int32)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1, 1),
+                          (B, 1))
 
     kern = functools.partial(_kernel, bs=bs, ns=ns, scale=hd ** -0.5)
     out = pl.pallas_call(
         kern,
         grid=(B, Hkv, ns),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, i: (0, 0),
+            pl.BlockSpec((1, 1), lambda b, h, i: (b, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, g, hd), lambda b, h, i: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, hd), lambda b, h, i: (b, h, i, 0)),
@@ -83,7 +91,7 @@ def decode_attention_pallas(q, k_cache, v_cache, n_valid, *,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(nv, q, k_cache, v_cache)

@@ -18,6 +18,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30  # python float: avoids capturing a traced constant
 
+# jax 0.4.x names it TPUCompilerParams; 0.5+ renamed to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
             causal: bool, bq: int, bk: int, nk: int, scale: float):
@@ -94,7 +98,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
             pltpu.VMEM((bq, 1), jnp.float32),    # normalizer
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

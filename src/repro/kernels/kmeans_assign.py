@@ -105,9 +105,11 @@ def kmeans_assign_pallas(x: jnp.ndarray, cents: jnp.ndarray, *,
 
 def _assign_reduce_kernel(x_ref, c_ref, bias_ref, w_ref, assign_ref,
                           sums_ref, cnts_ref):
-    """One query tile: nearest-centroid argmin AND its weighted one-hot
-    reduction (per-cluster coordinate sums + counts), sharing the x·μᵀ
-    MXU pass. sums/cnts blocks are grid-invariant → VMEM accumulation."""
+    """One query tile, whole centroid table resident: nearest-centroid
+    argmin AND its weighted one-hot reduction (per-cluster coordinate sums
+    + counts), sharing the x·μᵀ MXU pass. sums/cnts blocks are
+    grid-invariant → VMEM accumulation across consecutive grid steps (the
+    only revisit pattern Pallas TPU guarantees)."""
     i = pl.program_id(0)
     kk = c_ref.shape[0]
     x = x_ref[...].astype(jnp.float32)          # (BN, D)
@@ -139,48 +141,118 @@ def _assign_reduce_kernel(x_ref, c_ref, bias_ref, w_ref, assign_ref,
         cnts_ref[...] += part_cnts
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _reduce_tiled_kernel(x_ref, w_ref, assign_ref, sums_ref, cnts_ref, *,
+                         bk: int):
+    """Weighted one-hot reduction for ONE centroid tile, streaming query
+    tiles innermost: grid (nk, nq) keeps each (bk, D) sums block resident
+    in VMEM across all its consecutive query-tile steps — no
+    non-consecutive output revisits (which compiled Pallas TPU does not
+    support). Rows assigned outside this tile fall out of the iota
+    comparison; padded rows carry w=0."""
+    kt = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)          # (BN, D)
+    local = assign_ref[...] - kt * bk           # in [0, bk) iff in this tile
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], bk), 1)
+              == local[:, None]).astype(jnp.float32)
+    wv = onehot * w_ref[...][:, None]           # (BN, BK)
+    part_sums = jax.lax.dot_general(
+        wv, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BK, D) — MXU
+    part_cnts = jnp.sum(wv, axis=0)             # (BK,)
+
+    @pl.when(i == 0)
+    def _():
+        sums_ref[...] = part_sums
+        cnts_ref[...] = part_cnts
+
+    @pl.when(i > 0)
+    def _():
+        sums_ref[...] += part_sums
+        cnts_ref[...] += part_cnts
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
 def kmeans_assign_reduce_pallas(x: jnp.ndarray, cents: jnp.ndarray,
                                 w: jnp.ndarray, *, block_n: int = 256,
+                                block_k: int = 512,
                                 interpret: bool = True):
     """x: (n, d), cents: (K, d), w: (n,) →
     (assign (n,) int32, sums (K, d) f32, counts (K,) f32) where
     sums[k] = Σ_{i: assign_i=k} w_i·x_i and counts[k] = Σ w_i.
 
-    The centroid table is kept whole in VMEM (Lloyd's K is small); use
-    ``kmeans_assign_pallas`` when only assignments are needed for huge K.
+    When the centroid table fits one ``block_k`` tile (Lloyd's usual K),
+    assignment and reduction run as ONE fused pass sharing the x·μᵀ
+    matmul. Larger tables tile along K: the shared ``_assign_kernel``
+    block_k loop produces the global argmin, then a reduction kernel with
+    query tiles innermost accumulates each centroid tile's sums/counts —
+    both passes only ever accumulate into VMEM-resident blocks across
+    consecutive grid steps (compiled Pallas TPU does not support
+    non-consecutive output revisits), at the cost of streaming x twice.
     """
     n, d = x.shape
     K = cents.shape[0]
+    assert block_k % 128 == 0, "block_k must be lane-aligned (multiple of 128)"
 
-    n_p, d_p, k_p = _rup(n, block_n), _rup(d, 128), _rup(max(K, 8), 128)
+    n_p, d_p = _rup(n, block_n), _rup(d, 128)
+    bk = min(block_k, _rup(max(K, 8), 128))
+    k_p = _rup(max(K, 8), bk)
+    nk = k_p // bk
     x_p = _pad2(x, n_p, d_p)
-    c_p = _pad2(cents, k_p, d_p)
     w_p = (jnp.asarray(w, jnp.float32) if n_p == n
            else jnp.zeros((n_p,), jnp.float32).at[:n].set(w))
     bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]
+    nq = n_p // block_n
 
-    grid = (n_p // block_n,)
-    whole = lambda i: (0, 0)
-    assign, sums, cnts = pl.pallas_call(
-        _assign_reduce_kernel,
-        grid=grid,
+    if nk == 1:                                 # fused single pass
+        c_p = _pad2(cents, k_p, d_p)
+        whole = lambda i: (0, 0)
+        assign, sums, cnts = pl.pallas_call(
+            _assign_reduce_kernel,
+            grid=(nq,),
+            in_specs=[
+                pl.BlockSpec((block_n, d_p), lambda i: (i, 0)),
+                pl.BlockSpec((k_p, d_p), whole),
+                pl.BlockSpec((1, k_p), whole),
+                pl.BlockSpec((block_n,), lambda i: (i,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_n,), lambda i: (i,)),
+                pl.BlockSpec((k_p, d_p), whole),
+                pl.BlockSpec((k_p,), lambda i: (0,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n_p,), jnp.int32),
+                jax.ShapeDtypeStruct((k_p, d_p), jnp.float32),
+                jax.ShapeDtypeStruct((k_p,), jnp.float32),
+            ],
+            interpret=interpret,
+        )(x_p, c_p, bias, w_p)
+        return assign[:n], sums[:K, :d], cnts[:K]
+
+    # tiled: global argmin via the shared block_k assign kernel, then the
+    # per-tile reduction (query tiles innermost — consecutive accumulation)
+    assign = kmeans_assign_pallas(x, cents, block_n=block_n,
+                                  block_k=block_k, interpret=interpret)
+    assign_p = (assign if n_p == n
+                else jnp.zeros((n_p,), jnp.int32).at[:n].set(assign))
+    sums, cnts = pl.pallas_call(
+        functools.partial(_reduce_tiled_kernel, bk=bk),
+        grid=(nk, nq),                          # query tiles innermost
         in_specs=[
-            pl.BlockSpec((block_n, d_p), lambda i: (i, 0)),
-            pl.BlockSpec((k_p, d_p), whole),
-            pl.BlockSpec((1, k_p), whole),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, d_p), lambda kt, i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda kt, i: (i,)),
+            pl.BlockSpec((block_n,), lambda kt, i: (i,)),
         ],
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((k_p, d_p), whole),
-            pl.BlockSpec((k_p,), lambda i: (0,)),
+            pl.BlockSpec((bk, d_p), lambda kt, i: (kt, 0)),
+            pl.BlockSpec((bk,), lambda kt, i: (kt,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_p,), jnp.int32),
             jax.ShapeDtypeStruct((k_p, d_p), jnp.float32),
             jax.ShapeDtypeStruct((k_p,), jnp.float32),
         ],
         interpret=interpret,
-    )(x_p, c_p, bias, w_p)
-    return assign[:n], sums[:K, :d], cnts[:K]
+    )(x_p, w_p, assign_p)
+    return assign, sums[:K, :d], cnts[:K]

@@ -37,12 +37,15 @@ def kmeans_assign(x, cents, *, impl: str | None = None):
     return ref.kmeans_assign_ref(x, cents)
 
 
-def kmeans_assign_reduce(x, cents, w, *, impl: str | None = None):
+def kmeans_assign_reduce(x, cents, w, *, impl: str | None = None,
+                         block_k: int = 512):
     """Fused Lloyd's-step op: nearest-centroid assignment + per-cluster
-    weighted coordinate sums and counts in one pass over x."""
+    weighted coordinate sums and counts in one pass over x. The centroid
+    table is streamed through VMEM in ``block_k`` tiles (K in the
+    thousands stays resident)."""
     impl = impl or _default_impl()
     if impl == "pallas":
-        return kmeans_assign_reduce_pallas(x, cents, w,
+        return kmeans_assign_reduce_pallas(x, cents, w, block_k=block_k,
                                            interpret=_interpret())
     return ref.kmeans_assign_reduce_ref(x, cents, w)
 

@@ -62,13 +62,15 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def decode_attention_ref(q, k_cache, v_cache, n_valid):
-    """q: (B,Hkv,g,hd); caches (B,Hkv,S,hd) head-major; n_valid scalar.
+    """q: (B,Hkv,g,hd); caches (B,Hkv,S,hd) head-major; n_valid scalar or
+    (B,) per-row validity bound (continuous-batching slot pool).
     Returns (B,Hkv,g,hd)."""
     S = k_cache.shape[2]
     hd = q.shape[-1]
     s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * hd ** -0.5
-    valid = jnp.arange(S)[None, None, None, :] < n_valid
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(-1, 1, 1, 1)   # (B|1,1,1,1)
+    valid = jnp.arange(S)[None, None, None, :] < nv
     s = jnp.where(valid, s, jnp.float32(-1e30))
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))

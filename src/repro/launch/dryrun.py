@@ -152,6 +152,8 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     terms = H.roofline_terms(hlo, n_chips=n_chips,
                              peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,

@@ -166,25 +166,42 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
 
 def attn_decode_step(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                      cfg: ModelConfig, *, rolling: bool) -> tuple:
-    """x: (B, 1, d). pos: scalar int32 absolute position → (out, new_cache).
+    """x: (B, 1, d). pos: int32 absolute position → (out, new_cache).
+
+    pos may be a scalar (all rows at the same position — the classic
+    same-age batch) or a (B,) vector (continuous batching: every cache row
+    is a pool *slot* holding a different request at its own position; RoPE,
+    the cache write, and the attention-validity mask are all per-slot).
 
     rolling=True → cache length W is a sliding window written at ``pos % W``;
     RoPE is applied before caching, so slot order is irrelevant.
     """
     B = x.shape[0]
     W = cache["k"].shape[2]
-    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+    per_slot = jnp.ndim(pos) == 1
+    positions = (pos[:, None].astype(jnp.int32) if per_slot
+                 else jnp.full((1, 1), pos, dtype=jnp.int32))
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     slot = (pos % W if rolling else pos).astype(jnp.int32)
     k_new = jnp.moveaxis(k_new, 1, 2)  # (B, Hkv, 1, hd)
     v_new = jnp.moveaxis(v_new, 1, 2)
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, 0, slot, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, 0, slot, 0))
+    if per_slot:
+        upd = jax.vmap(lambda c, u, s:
+                       jax.lax.dynamic_update_slice(c, u, (0, s, 0)))
+        k_cache = upd(cache["k"], k_new, slot)
+        v_cache = upd(cache["v"], v_new, slot)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                               (0, 0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                               (0, 0, slot, 0))
     k_cache = constrain(k_cache, ("batch", None, "kv_seq", None))
     v_cache = constrain(v_cache, ("batch", None, "kv_seq", None))
-    # Validity: before the window wraps, only slots [0, pos] are filled.
+    # Validity: before the window wraps, only slots [0, pos] are filled —
+    # per row when pos is a vector ((B, W)), shared otherwise ((1, W)).
     n_valid = jnp.minimum(pos + 1, W)
-    valid = jnp.arange(W)[None, :] < n_valid                    # (1, W)
+    valid = (jnp.arange(W)[None, :] < n_valid[:, None] if per_slot
+             else jnp.arange(W)[None, :] < n_valid)
 
     Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
     qg = q.reshape(B, Hkv, g, hd)

@@ -215,7 +215,11 @@ def decode_step(params: dict, cache: dict, cfg: ModelConfig, *,
                 tokens=None, embeds=None, pos, rolling: bool = False,
                 moe_mode: str = "dense"):
     """One-token decode. tokens: (B,1) int or embeds: (B,1,d).
-    Returns (logits (B,1,V), new_cache)."""
+
+    pos: scalar int32 (whole batch at one position) or a (B,) int32 vector
+    (continuous batching — each cache row is a slot serving a request at
+    its own position; see serve/engine.py). Returns (logits (B,1,V),
+    new_cache)."""
     if embeds is None:
         embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
     x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", None, None))

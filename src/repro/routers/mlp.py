@@ -120,12 +120,12 @@ class MLPRouter(Router):
         wrapped = (None if eval_fn is None
                    else lambda p: eval_fn(self.with_state(p)))
         if mesh is not None:
-            unsupported = sorted(set(kw) - {"optimizer"})
+            unsupported = sorted(set(kw) - {"optimizer", "eval_every"})
             if unsupported:
                 raise ValueError(
-                    f"the mesh path supports only optimizer= (got "
-                    f"{', '.join(unsupported)}) — drop mesh= to use the "
-                    "in-process simulation with those knobs")
+                    f"the mesh path supports only optimizer=/eval_every= "
+                    f"(got {', '.join(unsupported)}) — drop mesh= to use "
+                    "the in-process simulation with those knobs")
             params, hist = _fedavg_sharded(
                 key, data, self.rcfg, fcfg,
                 rounds=rounds if rounds is not None else fcfg.rounds,
@@ -207,7 +207,7 @@ def _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps, mesh: Mesh,
 
 def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
                     init=None, num_models=None, optimizer: str = "adamw",
-                    eval_fn=None):
+                    eval_fn=None, eval_every: int = 1):
     D_max = data["x"].shape[1]
     # same local-work budget as the in-process path (F.fedavg)
     max_steps = max(1, int(np.ceil(D_max / fcfg.batch_size))) \
@@ -218,8 +218,14 @@ def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
     if eval_fn is None:  # fuse the round loop — one dispatch, one host sync
         fit = _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps,
                                        mesh, rounds, init is None)
-        params, losses = fit(params, key, data)
+        params, _, losses = fit(params, key, data)
         return params, {"loss": np.asarray(losses).tolist(), "eval": []}
+
+    if eval_every > 1:  # chunked-eval: scan E rounds per eval sync
+        return F.chunked_eval_fit(
+            lambda E: _sharded_scan_fit_cached(rcfg, fcfg, optimizer,
+                                               max_steps, mesh, E, False),
+            params, key, data, rounds, eval_every, eval_fn)
 
     step = jax.jit(functools.partial(
         fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,

@@ -1,0 +1,314 @@
+"""Continuous-batching serving engine with a persistent slot-based KV pool.
+
+The deployment shape the paper targets (§3) is a router in front of a
+model pool serving *many clients concurrently*. The per-request gateway
+path serves one caller's batch at a time and pad-copies a fresh KV cache
+per request; this engine instead keeps, per routed model, one persistent
+cache pool with a fixed number of sequence **slots** and decodes every
+in-flight request together:
+
+  admission  — ``submit()`` queues a request; when a slot frees up the
+               prompt is prefilled in its own pow2 length bucket (cached
+               jit per (config, bucket)) and its K/V written into the slot
+               (``kv_cache.write_slot``, pool buffer donated — no copy).
+  decode     — ``step()`` runs ONE cached jitted ``lax.scan`` chunk of
+               ``chunk`` greedy tokens over the whole slot batch. Each
+               slot carries its own position (a per-slot ``pos`` vector —
+               see ``models.attention.attn_decode_step``), so requests at
+               different depths share the batch; per-slot validity
+               (``pos + 1``) masks whatever an earlier occupant left in
+               the region. New requests join between chunks instead of
+               waiting for the batch to drain.
+  completion — a request that has emitted ``max_new`` tokens frees its
+               slot at the next chunk boundary; freeing is just returning
+               the slot index — steady-state decode never reallocates.
+
+Every jitted function is built once per (model config, static shape) and
+cached at module level; warm traffic compiles nothing (appends to
+``TRACE_LOG`` are per jit *trace*, and tests pin them flat).
+
+Greedy decode is prefix-stable, so a request's tokens are bit-identical
+to the single-request scan path (``RoutedServer.generate(engine=False)``
+on that prompt alone) — test-enforced in tests/test_engine.py.
+
+SSM/hybrid archs integrate state over every prefill position and cannot
+share right-padded prompt buckets; they stay on the gateway's per-request
+path (``RoutedServer.generate`` falls back automatically).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model as mdl
+from repro.serve.kv_cache import alloc_slot_pool, write_slot
+
+#: one entry appended per jit TRACE of an engine/serve function — bounded
+#: so a long-running server can't leak memory; tests assert its length
+#: stays flat after warmup. gateway.py re-exports this same object.
+TRACE_LOG: Deque[tuple] = collections.deque(maxlen=4096)
+
+
+def reset_trace_log() -> None:
+    """Explicitly clear the retrace log (long-running servers)."""
+    TRACE_LOG.clear()
+
+
+def next_pow2(v: int) -> int:
+    return 1 << (max(v, 1) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape — one compiled program set per value of this."""
+    slots: int = 8     #: concurrent sequences per model (pool batch rows)
+    max_seq: int = 256  #: per-slot KV region: prompt bucket + decode room
+    chunk: int = 8     #: decode tokens per jitted chunk (admission period)
+    done_buffer: int = 1024  #: finished results kept for drain(); oldest
+    #: evicted beyond this, so step()-consuming servers don't leak
+
+
+# ---------------------------------------------------------------------------
+# Cached jitted stages (module level — never rebuilt per request)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg: ModelConfig):
+    """Prefill one prompt bucket → (first greedy token (B,), KV cache).
+    Identical math to the gateway scan path's prefill segment (same
+    q_chunk, same last_pos unembed), so engine tokens stay bit-identical
+    to the single-request path."""
+    def prefill(params, toks, last_pos):
+        TRACE_LOG.append(("engine_prefill", cfg.name, toks.shape))
+        logits, _, cache = mdl.forward(params, cfg, tokens=toks,
+                                       logits_last_only=True,
+                                       last_pos=last_pos,
+                                       return_cache=True, q_chunk=64)
+        tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return tok0, cache
+    return jax.jit(prefill)
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_fn(cfg: ModelConfig):
+    """Write a prefill cache into one pool slot. The pool argument is
+    donated: admission mutates the persistent buffers in place instead of
+    copying the whole pool per request."""
+    def admit(pool, prefill_cache, slot):
+        TRACE_LOG.append(("engine_admit", cfg.name,
+                          jax.tree.leaves(prefill_cache)[0].shape))
+        return write_slot(pool, prefill_cache, slot)
+    return jax.jit(admit, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_fn(cfg: ModelConfig, chunk: int):
+    """One decode chunk over the whole slot batch: ``chunk`` greedy tokens
+    via ``lax.scan`` with a per-slot position vector. Emits the token fed
+    at each step (same emission order as the gateway scan), the slot
+    cache (donated — steady-state decode reuses the pool buffers), and the
+    advanced (tok, pos) carry."""
+    def run(params, cache, tok, pos):
+        TRACE_LOG.append(("engine_chunk", cfg.name, tok.shape, chunk))
+
+        def body(carry, _):
+            tok, pos, cache = carry
+            logits, cache = mdl.decode_step(params, cache, cfg,
+                                            tokens=tok[:, None], pos=pos)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return (nxt, pos + 1, cache), tok
+
+        (tok, pos, cache), out = jax.lax.scan(body, (tok, pos, cache), None,
+                                              length=chunk)
+        return cache, tok, pos, out.T                     # out: (B, chunk)
+    return jax.jit(run, donate_argnums=(1,))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    rid: int
+    max_new: int
+    chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    emitted: int = 0
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    toks: np.ndarray           # (S,) int32 prompt tokens, unpadded
+    max_new: int
+
+
+class _Lane:
+    """Per-model engine state: the slot pool + host-side slot bookkeeping."""
+
+    def __init__(self, pm, ecfg: EngineConfig):
+        self.pm = pm
+        self.ecfg = ecfg
+        self.pool = alloc_slot_pool(pm.cfg, ecfg.slots, ecfg.max_seq)
+        self.free: List[int] = list(range(ecfg.slots))[::-1]
+        self.active: Dict[int, _Active] = {}             # slot -> request
+        self.queue: Deque[_Pending] = collections.deque()
+        self.tok = np.zeros((ecfg.slots,), np.int32)     # next token to feed
+        self.pos = np.zeros((ecfg.slots,), np.int32)     # its write position
+
+
+class ServeEngine:
+    """Admission queue + slot pools over a model pool (attention archs).
+
+    ``submit`` enqueues, ``step`` admits + decodes one chunk per lane,
+    ``drain`` steps until idle and returns {request id: np tokens}.
+    """
+
+    def __init__(self, pool: List, ecfg: Optional[EngineConfig] = None):
+        self.ecfg = ecfg or EngineConfig()
+        self.pool = pool
+        self._lanes: Dict[int, _Lane] = {}
+        self._next_rid = 0
+        self._done: Dict[int, np.ndarray] = {}
+
+    def fits(self, n_tokens: int, max_new: int) -> bool:
+        """Whether a request fits one slot region: the prefill writes its
+        pow2 length bucket, decode writes whole chunks past the prompt —
+        both must stay inside ``max_seq``."""
+        steps = -(-max_new // self.ecfg.chunk) * self.ecfg.chunk
+        return max(next_pow2(n_tokens),
+                   n_tokens + steps) <= self.ecfg.max_seq
+
+    # ------------------------------------------------------------- submit
+    def submit(self, model_idx: int, toks: np.ndarray, max_new: int) -> int:
+        pm = self.pool[int(model_idx)]
+        if pm.cfg.arch_type in ("ssm", "hybrid"):
+            raise TypeError(
+                f"{pm.cfg.name}: SSM/hybrid archs integrate state over pad "
+                "positions and can't share right-padded slot buckets — use "
+                "RoutedServer.generate (it falls back per request)")
+        toks = np.asarray(toks, np.int32).reshape(-1)
+        if not self.fits(len(toks), max_new):
+            raise ValueError(
+                f"prompt ({len(toks)} tokens, pow2 bucket "
+                f"{next_pow2(len(toks))}) + whole decode chunks for "
+                f"max_new={max_new} exceed the per-slot region "
+                f"max_seq={self.ecfg.max_seq} — raise EngineConfig.max_seq "
+                "or shorten the request (RoutedServer.generate falls back "
+                "to the per-call path automatically)")
+        rid = self._next_rid
+        self._next_rid += 1
+        lane = self._lanes.get(int(model_idx))
+        if lane is None:
+            lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg)
+        lane.queue.append(_Pending(rid, toks, max_new))
+        return rid
+
+    # --------------------------------------------------------------- step
+    def step(self) -> List[Tuple[int, np.ndarray]]:
+        """Admit what fits, then decode one chunk on every busy lane.
+        Returns the requests finished this step as (rid, tokens). Finished
+        results are also buffered for ``drain()`` — up to
+        ``EngineConfig.done_buffer`` of them, oldest evicted first, so a
+        server that consumes step()'s return value and never drains can
+        run forever without growing memory."""
+        finished: List[Tuple[int, np.ndarray]] = []
+        for lane in self._lanes.values():
+            self._admit(lane)
+            if lane.active:
+                finished.extend(self._decode_chunk(lane))
+        for rid, out in finished:
+            self._done[rid] = out
+        while len(self._done) > self.ecfg.done_buffer:
+            self._done.pop(next(iter(self._done)))
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return any(l.queue or l.active for l in self._lanes.values())
+
+    def drain(self, rids=None) -> Dict[int, np.ndarray]:
+        """Step until completion and return {rid: tokens}. With rids=None,
+        runs until every lane is idle and returns (and clears) everything;
+        with an iterable of request ids, runs until exactly those finish
+        and leaves other results in place (so interleaved ``submit``
+        streams keep their results)."""
+        if rids is None:
+            # capture from step() returns as requests finish — like the
+            # rids branch below, immune to done-buffer eviction when more
+            # than done_buffer requests are in flight
+            out = dict(self._done)
+            while self.busy:
+                out.update(self.step())
+            out.update(self._done)
+            self._done = {}
+            return out
+        want = set(rids)
+        # collect straight from step() results (not only the _done buffer,
+        # whose oldest entries step() may evict) — a wanted rid is captured
+        # the moment it finishes, so any batch size is safe
+        out = {r: self._done.pop(r) for r in want if r in self._done}
+        while want - out.keys():
+            if not self.busy:
+                raise KeyError(f"unknown request ids: "
+                               f"{sorted(want - out.keys())}")
+            for rid, toks in self.step():
+                if rid in want:
+                    out[rid] = toks
+                    self._done.pop(rid, None)
+        return out
+
+    # ------------------------------------------------------------ internals
+    def _admit(self, lane: _Lane) -> None:
+        cfg = lane.pm.cfg
+        while lane.free and lane.queue:
+            req = lane.queue.popleft()
+            slot = lane.free.pop()
+            S = len(req.toks)
+            S_b = next_pow2(S)
+            toks_p = np.zeros((1, S_b), np.int32)
+            toks_p[0, :S] = req.toks
+            tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
+                                        jnp.int32(S - 1))
+            lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
+            lane.tok[slot] = int(tok0[0])
+            lane.pos[slot] = S          # first decode token writes K/V at S
+            lane.active[slot] = _Active(req.rid, req.max_new)
+
+    def _decode_chunk(self, lane: _Lane) -> List[Tuple[int, np.ndarray]]:
+        cfg, ecfg = lane.pm.cfg, self.ecfg
+        lane.pool, tok, pos, out = _chunk_fn(cfg, ecfg.chunk)(
+            lane.pm.params, lane.pool, jnp.asarray(lane.tok),
+            jnp.asarray(lane.pos))
+        out = np.asarray(out)
+        active_mask = np.zeros((ecfg.slots,), bool)
+        active_mask[list(lane.active)] = True
+        # free slots keep (tok=0, pos=0). Their garbage K/V writes are safe
+        # by the write-before-validity invariant: a slot's valid region
+        # [0, pos+1) is always entirely written by its CURRENT occupant —
+        # prefill covers [0, S_b), and each decode step writes position p
+        # before validity reaches p — so stale leftovers are never attended
+        lane.tok = np.where(active_mask, np.asarray(tok), 0).astype(np.int32)
+        lane.pos = np.where(active_mask, np.asarray(pos), 0).astype(np.int32)
+        finished = []
+        for slot in list(lane.active):
+            st = lane.active[slot]
+            st.chunks.append(out[slot])
+            st.emitted += ecfg.chunk
+            if st.emitted >= st.max_new:
+                tokens = np.concatenate(st.chunks)[:st.max_new]
+                finished.append((st.rid, tokens))
+                del lane.active[slot]
+                lane.free.append(slot)
+                lane.tok[slot] = 0
+                lane.pos[slot] = 0
+        return finished

@@ -1,19 +1,28 @@
 """RoutedServer: the paper's router in front of an actual model pool.
 
-A request batch is (i) embedded by the encoder stub, (ii) routed by one
+A request is (i) embedded by the encoder stub, (ii) routed by one
 ``repro.routers.Router`` — the MLP family decides via the fused Pallas
 ``router_utility`` kernel, the K-means family via the ``kmeans_assign``
-kernel + cluster-level utility — (iii) grouped per chosen model, and (iv)
-served by that model's prefill + decode loop. This is the deployment shape
-the paper targets: per-request model selection under an accuracy/cost
-trade-off λ chosen at inference time (§3).
+kernel + cluster-level utility — and (iii) served by the chosen model.
+This is the deployment shape the paper targets: per-request model
+selection under an accuracy/cost trade-off λ chosen at inference time
+(§3).
+
+Serving runs through the continuous-batching engine by default
+(``repro.serve.engine``): concurrent requests share per-model slot pools
+and decode together in chunked scans, each prompt prefilled in its own
+length bucket. ``generate(engine=False)`` keeps the original per-call
+path — the whole prompt batch group-padded per model and decoded as one
+``lax.scan`` (``scan_decode=False`` further drops to the per-token
+debugging loop). SSM/hybrid archs always take the per-call path (their
+state integrates over pad positions, so prompts are served unpadded).
 
 Hot-path discipline: every jitted function here is built ONCE per
 (model config, static shape) and cached at module level — nothing is
 re-jitted per request. Batch sizes and prompt lengths are bucketed to
 powers of two so repeated traffic reuses compiled programs, and greedy
-decode runs as a single ``lax.scan`` that returns the whole token matrix
-in one device→host transfer (no per-token sync).
+decode returns whole token matrices in one device→host transfer (no
+per-token sync).
 """
 from __future__ import annotations
 
@@ -30,6 +39,12 @@ from repro.config import ModelConfig
 from repro.data.encoder import encode
 from repro.models import model as mdl
 from repro.routers import Router
+# TRACE_LOG lives in engine.py (bounded deque) and is re-exported here so
+# `gateway.TRACE_LOG` keeps working for tests and callers; same for
+# reset_trace_log.
+from repro.serve.engine import EngineConfig, ServeEngine, TRACE_LOG
+from repro.serve.engine import next_pow2 as _next_pow2
+from repro.serve.engine import reset_trace_log  # noqa: F401
 from repro.serve.kv_cache import extend_cache
 
 
@@ -39,15 +54,6 @@ class PoolModel:
     cfg: ModelConfig
     params: dict
     cost_per_token: float
-
-
-def _next_pow2(v: int) -> int:
-    return 1 << (max(v, 1) - 1).bit_length()
-
-
-#: one entry appended per jit TRACE of a serve/decode function — tests
-#: assert it stays flat after warmup (zero new compilations).
-TRACE_LOG: List[tuple] = []
 
 
 @functools.lru_cache(maxsize=None)
@@ -105,7 +111,8 @@ class RoutedServer:
     """
 
     def __init__(self, pool: List[PoolModel], router: Router,
-                 d_emb: Optional[int] = None):
+                 d_emb: Optional[int] = None,
+                 engine_cfg: Optional[EngineConfig] = None):
         if not isinstance(router, Router):
             raise TypeError(
                 "RoutedServer takes a repro.routers.Router — build one with "
@@ -135,6 +142,9 @@ class RoutedServer:
         # rebuilds the function on the next route().
         self._route_fn = self._make_route_fn(router)
         self._route_fn_router = router
+        # One continuous-batching engine per server: per-model slot pools
+        # are allocated lazily on first traffic to that model.
+        self.engine = ServeEngine(pool, engine_cfg)
 
     @staticmethod
     def _make_route_fn(router: Router):
@@ -155,27 +165,80 @@ class RoutedServer:
                                 jnp.float32(lam))
         return np.asarray(choice)[:B]
 
+    # -------------------------------------------------- engine streaming API
+    def submit(self, prompt: str, *, lam: float = 0.5,
+               max_new_tokens: int = 16,
+               tokenize: Optional[Callable] = None) -> int:
+        """Route one prompt and enqueue it on the continuous-batching
+        engine; returns a request id. The request joins the routed model's
+        shared decode batch at the next free slot — call ``step()`` to
+        advance in-flight decoding or ``drain()`` to run to completion."""
+        m_idx = int(self.route([prompt], lam)[0])
+        toks = self._tokenize([prompt], self.pool[m_idx].cfg, tokenize)[0]
+        return self.engine.submit(m_idx, toks, max_new_tokens)
+
+    def step(self):
+        """Advance every busy engine lane one chunk (admissions happen at
+        chunk boundaries). Returns [(request id, np tokens)] finished."""
+        return self.engine.step()
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Run the engine until idle; returns {request id: np tokens}."""
+        return self.engine.drain()
+
+    # ------------------------------------------------------------- generate
     def generate(self, prompts: List[str], *, lam: float = 0.5,
                  max_new_tokens: int = 16,
                  tokenize: Optional[Callable] = None,
-                 scan_decode: bool = True) -> Dict:
-        """Route, group by model, serve each group batched.
+                 scan_decode: bool = True, engine: bool = True) -> Dict:
+        """Route, then serve every prompt as its own request through the
+        continuous-batching engine (per-model slot pools, chunked shared
+        decode). Each prompt is prefilled at its own pow2 length bucket, so
+        results are bit-identical to serving it alone.
 
-        scan_decode=False selects the per-token fallback loop (one host
-        sync per token) — same tokens, kept for debugging/comparison.
+        engine=False restores the per-call grouped path: each model's
+        prompts are padded to one (B, S) batch and decoded together —
+        shorter prompts then attend pad positions of the group's longest.
+        scan_decode=False (with engine=False) further selects the
+        per-token fallback loop (one host sync per token) — same tokens as
+        the grouped scan, kept for debugging/comparison. SSM/hybrid models
+        always take the per-call path (no padded slot sharing).
         """
         choice = self.route(prompts, lam)
         results = [None] * len(prompts)
         cost = 0.0
+        rid_to_slot = {}
         for m_idx in np.unique(choice):
             pm = self.pool[int(m_idx)]
             idx = np.where(choice == m_idx)[0]
-            toks = self._tokenize([prompts[i] for i in idx], pm.cfg, tokenize)
-            out = self._serve_batch(pm, toks, max_new_tokens,
-                                    scan_decode=scan_decode)
-            for j, i in enumerate(idx):
-                results[i] = {"model": pm.name, "tokens": out[j].tolist()}
+            use_engine = (engine and scan_decode
+                          and pm.cfg.arch_type not in ("ssm", "hybrid"))
+            if use_engine:
+                for i in idx:
+                    toks_i = self._tokenize([prompts[i]], pm.cfg, tokenize)[0]
+                    if not self.engine.fits(len(toks_i), max_new_tokens):
+                        # request exceeds a slot region — serve it per-call
+                        # (extend_cache path), like the pre-engine gateway
+                        out = self._serve_batch(pm, toks_i[None],
+                                                max_new_tokens)
+                        results[i] = {"model": pm.name,
+                                      "tokens": out[0].tolist()}
+                        continue
+                    rid = self.engine.submit(int(m_idx), toks_i,
+                                             max_new_tokens)
+                    rid_to_slot[rid] = (int(i), pm.name)
+            else:
+                toks = self._tokenize([prompts[i] for i in idx], pm.cfg,
+                                      tokenize)
+                out = self._serve_batch(pm, toks, max_new_tokens,
+                                        scan_decode=scan_decode)
+                for j, i in enumerate(idx):
+                    results[i] = {"model": pm.name, "tokens": out[j].tolist()}
             cost += pm.cost_per_token * max_new_tokens * len(idx)
+        if rid_to_slot:
+            for rid, toks in self.engine.drain(rid_to_slot).items():
+                i, name = rid_to_slot[rid]
+                results[i] = {"model": name, "tokens": toks.tolist()}
         return {"results": results, "total_cost": cost,
                 "routing": choice.tolist()}
 

@@ -1,4 +1,19 @@
-"""KV-cache utilities for the serving path."""
+"""KV-cache utilities for the serving path.
+
+Two cache regimes live here:
+
+* ``extend_cache`` — the per-request regime: a prefill-produced cache is
+  pad-copied up to prompt+max_new so a single batch can decode. Kept as
+  the fallback path (``RoutedServer.generate(engine=False)``).
+* the **slot pool** — the continuous-batching regime (serve/engine.py):
+  one persistent cache is allocated per (model config, pool shape) with a
+  fixed number of sequence *slots* (the batch dim) and a fixed per-slot
+  region length. Requests claim a slot at admission, their prefill K/V is
+  written into the slot with ``write_slot``, and steady-state decode does
+  zero cache reallocation — per-slot validity (``pos + 1``) masks whatever
+  a previous occupant left behind, so freeing a slot is just returning its
+  index to the free list.
+"""
 from __future__ import annotations
 
 import jax
@@ -17,3 +32,28 @@ def extend_cache(cache, new_len: int):
                 a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
         return a
     return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def alloc_slot_pool(cfg, slots: int, max_seq: int):
+    """Allocate the persistent slot-pool cache for one model: the stacked
+    decode cache with ``slots`` sequence rows and ``max_seq`` positions per
+    slot. Zero-filled; slot contents only become attention-valid once a
+    request writes them (validity is per-slot ``pos + 1``)."""
+    from repro.models import model as mdl
+    return mdl.init_decode_cache(cfg, slots, max_seq)
+
+
+def write_slot(pool, prefill_cache, slot):
+    """Copy a single-sequence prefill cache (leaves (L, 1, ...)) into row
+    ``slot`` of the pool (leaves (L, slots, ...)). ``slot`` may be traced —
+    one compiled program serves every slot index. Attention leaves land at
+    positions [0, S_prefill) of the slot's region; anything beyond stays
+    whatever the previous occupant wrote, masked off by per-slot validity.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def leaf(p, u):
+        return jax.lax.dynamic_update_slice(
+            p, u.astype(p.dtype), (0, slot) + (0,) * (u.ndim - 2))
+
+    return jax.tree.map(leaf, pool, prefill_cache)

@@ -6,7 +6,10 @@ import sys
 
 import pytest
 
-ENV = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": ""}
+# pin the CPU platform: the image carries a libtpu, and platform
+# auto-detect burns minutes probing the TPU backend in every subprocess
+# (the fake-device XLA_FLAGS only applies to the CPU platform anyway)
+ENV = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
 
 
 def _run(code: str, devices: int = 8, timeout: int = 420):

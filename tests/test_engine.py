@@ -1,0 +1,205 @@
+"""Continuous-batching engine: requests admitted at arbitrary chunk
+boundaries into shared slot pools must produce tokens bit-identical to the
+single-request scan path, reuse freed slots without leaking state between
+occupants, and compile nothing once the (config, bucket) programs are warm.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import ModelConfig, RouterConfig
+from repro.serve import gateway
+from repro.serve.engine import EngineConfig, ServeEngine
+
+TINY = ModelConfig(name="tiny-dense-eng", arch_type="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                   head_dim=16)
+ECFG = EngineConfig(slots=2, max_seq=32, chunk=4)   # tiny: forces slot reuse
+
+
+def _make_server(ecfg=ECFG):
+    from repro.models import init_params
+    router = routers.make(
+        "kmeans", RouterConfig(d_emb=16, num_models=1),
+        state={"centroids": jnp.zeros((1, 16)),
+               "A": jnp.array([[0.9]]), "C": jnp.array([[0.1]]),
+               "n": jnp.ones((1, 1))})
+    pool = [gateway.PoolModel("tiny", TINY,
+                              init_params(jax.random.PRNGKey(0), TINY), 0.1)]
+    return gateway.RoutedServer(pool, router, engine_cfg=ecfg)
+
+
+@pytest.fixture(scope="module")
+def server():
+    return _make_server()
+
+
+PROMPTS = ["the quick brown fox", "jumps over", "a lazy dog today ok fine",
+           "one two three", "counting up to five now", "zig zag",
+           "when in rome do as"]
+
+
+def _solo(server, prompt, max_new):
+    """Reference: the request served alone on the per-request scan path."""
+    out = server.generate([prompt], lam=0.5, max_new_tokens=max_new,
+                          engine=False)
+    return out["results"][0]["tokens"]
+
+
+def test_interleaved_admissions_token_parity(server):
+    """More requests than slots, different lengths (max_new % chunk != 0
+    included): requests join mid-flight as slots free up, and every one
+    matches its single-request reference bit-for-bit."""
+    max_news = [5, 3, 8, 6, 4, 7, 5]
+    rids = [server.submit(p, lam=0.5, max_new_tokens=m)
+            for p, m in zip(PROMPTS, max_news)]
+    done = server.drain()
+    assert sorted(done) == sorted(rids)
+    for p, m, rid in zip(PROMPTS, max_news, rids):
+        assert done[rid].tolist() == _solo(server, p, m), p
+
+
+def test_step_makes_incremental_progress(server):
+    """step() emits chunk tokens per busy lane; requests shorter than one
+    chunk finish on the first step, longer ones keep their slot."""
+    r_short = server.submit("alpha beta", max_new_tokens=2)
+    r_long = server.submit("gamma delta epsilon", max_new_tokens=12)
+    finished = dict(server.step())
+    assert r_short in finished and len(finished[r_short]) == 2
+    assert r_long not in finished
+    done = server.drain()
+    assert done[r_long].tolist() == _solo(server, "gamma delta epsilon", 12)
+
+
+def test_slot_reuse_and_free(server):
+    """Slots recycle: after drain every lane is fully free again, and a
+    slot's next occupant never sees the previous occupant's cache (the
+    validity frontier masks it) — parity on reused slots proves it."""
+    for wave in range(3):                      # 3 waves through 2 slots
+        rids = {server.submit(p, lam=0.5, max_new_tokens=4): p
+                for p in PROMPTS[:4]}
+        done = server.drain()
+        for rid, p in rids.items():
+            assert done[rid].tolist() == _solo(server, p, 4), (wave, p)
+    for lane in server.engine._lanes.values():
+        assert sorted(lane.free) == list(range(ECFG.slots))
+        assert not lane.active and not lane.queue
+
+
+def test_selective_drain_keeps_other_results(server):
+    ra = server.submit("first stream", max_new_tokens=3)
+    rb = server.submit("second stream", max_new_tokens=3)
+    got = server.engine.drain([rb])
+    assert set(got) == {rb}
+    rest = server.drain()
+    assert ra in rest and rb not in rest
+    with pytest.raises(KeyError):
+        server.engine.drain([10 ** 9])
+
+
+def test_warm_engine_compiles_nothing(server):
+    """After the buckets are warm, interleaved traffic with new prompts,
+    lengths, λ and admission orders must not trace anything."""
+    for p, m in zip(PROMPTS, [5, 3, 8, 6, 4, 7, 5]):   # warm all buckets
+        server.submit(p, lam=0.5, max_new_tokens=m)
+    server.drain()
+    gateway.reset_trace_log()   # far from maxlen — a len() change is real
+    n0 = len(gateway.TRACE_LOG)
+    rids = [server.submit(p, lam=1.5, max_new_tokens=m) for p, m in
+            zip(["x y z w", "q r", "a b c d e f", "hello there you"],
+                [4, 8, 5, 6])]
+    done = server.drain()
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"unexpected retrace: {list(gateway.TRACE_LOG)[n0:]}"
+    assert sorted(done) == sorted(rids)
+
+
+def test_trace_log_bounded():
+    """TRACE_LOG is a bounded deque (long-running servers don't leak) with
+    an explicit reset helper."""
+    assert gateway.TRACE_LOG.maxlen is not None
+    before = list(gateway.TRACE_LOG)
+    for i in range(gateway.TRACE_LOG.maxlen + 10):
+        gateway.TRACE_LOG.append(("filler", i))
+    assert len(gateway.TRACE_LOG) == gateway.TRACE_LOG.maxlen
+    gateway.reset_trace_log()
+    assert len(gateway.TRACE_LOG) == 0
+    gateway.TRACE_LOG.extend(before)           # restore for other tests
+
+
+def test_ssm_arch_rejected_with_fallback_hint():
+    from repro.config import SSMConfig
+    ssm_cfg = ModelConfig(name="tiny-ssm-eng", arch_type="ssm", n_layers=2,
+                          d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                          vocab=97, head_dim=16,
+                          ssm=SSMConfig(d_state=16, head_dim=32))
+    # submit must reject on arch alone — params never touched
+    pm = gateway.PoolModel("ssm", ssm_cfg, {}, 0.1)
+    eng = ServeEngine([pm], ECFG)
+    with pytest.raises(TypeError, match="falls back"):
+        eng.submit(0, np.array([1, 2, 3], np.int32), 4)
+
+
+def test_prompt_too_long_for_slot_rejected(server):
+    with pytest.raises(ValueError, match="max_seq"):
+        server.engine.submit(0, np.arange(1, 30, dtype=np.int32), 8)
+
+
+def test_fits_accounts_for_pow2_prefill_bucket():
+    """A prompt whose pow2 prefill bucket exceeds max_seq must be rejected
+    cleanly even when raw prompt + decode would fit (non-pow2 max_seq)."""
+    srv = _make_server(EngineConfig(slots=2, max_seq=48, chunk=8))
+    assert not srv.engine.fits(33, 8)          # bucket 64 > 48
+    assert srv.engine.fits(32, 8)              # 32 + 8 = 40 <= 48
+    with pytest.raises(ValueError, match="pow2 bucket"):
+        srv.engine.submit(0, np.arange(1, 34, dtype=np.int32), 8)
+
+
+def test_generate_falls_back_for_oversize_prompt(server):
+    """generate() must serve a prompt that exceeds a slot region on the
+    per-call path instead of raising — same tokens as engine=False."""
+    long_prompt = " ".join(f"w{i}" for i in range(30))   # bucket 32 > 32-4
+    out = server.generate([long_prompt, "short one"], lam=0.5,
+                          max_new_tokens=4)
+    ref = server.generate([long_prompt], lam=0.5, max_new_tokens=4,
+                          engine=False)
+    assert out["results"][0]["tokens"] == ref["results"][0]["tokens"]
+    assert len(out["results"][1]["tokens"]) == 4
+
+
+def test_done_buffer_bounded():
+    """A server that consumes step() results and never drains must not
+    accumulate finished requests beyond EngineConfig.done_buffer."""
+    srv = _make_server(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                    done_buffer=3))
+    for i in range(8):
+        srv.submit(f"request number {i}", max_new_tokens=2)
+    while srv.engine.busy:
+        srv.step()
+    assert len(srv.engine._done) <= 3
+
+
+def test_streaming_drain_survives_done_buffer_eviction():
+    """The README streaming pattern (submit N, then drain()) must return
+    every request even when N exceeds done_buffer."""
+    srv = _make_server(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                    done_buffer=3))
+    rids = [srv.submit(f"stream prompt number {i}", max_new_tokens=4)
+            for i in range(8)]
+    out = srv.drain()
+    assert sorted(out) == sorted(rids)
+    assert all(len(v) == 4 for v in out.values())
+
+
+def test_drain_survives_done_buffer_eviction():
+    """drain(rids) / generate() must deliver every request of a batch
+    larger than done_buffer — wanted rids are captured as they finish,
+    not recovered from the evicting buffer."""
+    srv = _make_server(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                    done_buffer=3))
+    prompts = [f"batch prompt number {i}" for i in range(7)]
+    out = srv.generate(prompts, lam=0.5, max_new_tokens=4)
+    for p, r in zip(prompts, out["results"]):
+        assert r["tokens"] == _solo(srv, p, 4), p

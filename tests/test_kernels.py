@@ -65,6 +65,26 @@ def test_kmeans_assign_reduce(n, d, K):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_kmeans_assign_reduce_large_k_tiled():
+    """K in the thousands runs the two-phase block_k centroid-tile loop
+    (tiled argmin merge, then tiled one-hot reduction) and still matches
+    the whole-table oracle: exact argmin (strict-< keeps first-tie order)
+    and allclose sums/counts."""
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = jax.random.normal(kx, (300, 24))
+    c = jax.random.normal(kc, (2000, 24))
+    w = jax.random.uniform(kw, (300,))
+    a_ref, s_ref, n_ref = ref.kmeans_assign_reduce_ref(x, c, w)
+    for bk in (128, 512, 1024):
+        a_got, s_got, n_got = kmeans_assign_reduce_pallas(
+            x, c, w, block_k=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a_got), np.asarray(a_ref))
+        np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(n_got), np.asarray(n_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_kmeans_assign_reduce_masks_padding():
     """Zero-weight (padded) rows must not leak into sums/counts, and the
     reduction must agree with a manual per-cluster sum."""
@@ -154,6 +174,28 @@ def test_decode_attention(B, Hkv, g, S, hd, n_valid_frac, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=tol,
                                atol=tol)
+
+
+def test_decode_attention_per_batch_n_valid():
+    """A (B,) n_valid vector gives every batch row (continuous-batching
+    pool slot) its own validity bound — equal to the scalar kernel run
+    per-row."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    B, Hkv, g, S, hd = 3, 2, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kc = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    vc = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    nv = jnp.array([3, 40, 64], jnp.int32)
+    got = decode_attention_pallas(q, kc, vc, nv, block_s=32, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+    for b in range(B):
+        row = decode_attention_pallas(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                                      int(nv[b]), block_s=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row[0]),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_decode_attention_matches_model_decode():

@@ -59,6 +59,26 @@ def test_scan_fused_fedavg_with_init_preserves_input(split):
     _trees_equal(p1, p2)
 
 
+def test_chunked_eval_fit_bit_for_bit(split):
+    """eval_every=E scans E rounds per eval sync — params and per-round
+    losses must stay bit-for-bit the per-round loop, with one eval entry
+    per chunk boundary (including the short tail chunk)."""
+    evals = []
+
+    def eval_fn(p):
+        evals.append(float(jax.tree.leaves(p)[0].ravel()[0]))
+        return evals[-1]
+
+    p_loop, h_loop = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
+                              FCFG, eval_fn=lambda p: None)
+    p_chunk, h_chunk = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
+                                FCFG, eval_fn=eval_fn, eval_every=2)
+    _trees_equal(p_loop, p_chunk)
+    assert h_chunk["loss"] == h_loop["loss"]
+    # FCFG.rounds=3, E=2 → chunks of 2 and 1 → two eval entries
+    assert len(h_chunk["eval"]) == 2 and h_chunk["eval"] == evals
+
+
 def test_scan_fused_mesh_path_bit_for_bit(split):
     from jax.sharding import Mesh
     mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
@@ -107,10 +127,25 @@ def server():
 PROMPTS = ["the quick brown fox", "jumps over", "a lazy dog today ok fine"]
 
 
+def test_engine_matches_single_request_path(server):
+    """The default (engine) path serves each prompt as its own request —
+    tokens must equal generating that prompt alone on the legacy scan
+    path (no group-padding context leaks between prompts)."""
+    eng = server.generate(PROMPTS, lam=0.5, max_new_tokens=5)
+    for p, r in zip(PROMPTS, eng["results"]):
+        solo = server.generate([p], lam=0.5, max_new_tokens=5,
+                               engine=False)
+        assert r["tokens"] == solo["results"][0]["tokens"]
+        assert len(r["tokens"]) == 5
+
+
 def test_scan_decode_matches_token_loop(server):
-    scan = server.generate(PROMPTS, lam=0.5, max_new_tokens=5)
+    """Legacy grouped path: the fused scan decode and the per-token loop
+    must produce identical tokens for the same group-padded batch."""
+    scan = server.generate(PROMPTS, lam=0.5, max_new_tokens=5,
+                           engine=False)
     loop = server.generate(PROMPTS, lam=0.5, max_new_tokens=5,
-                           scan_decode=False)
+                           engine=False, scan_decode=False)
     for a, b in zip(scan["results"], loop["results"]):
         assert a["tokens"] == b["tokens"]
         assert len(a["tokens"]) == 5
@@ -120,13 +155,14 @@ def test_warm_bucket_compiles_nothing(server):
     from repro.serve import gateway
     server.generate(PROMPTS, lam=0.5, max_new_tokens=5)         # warm
     baseline = server.generate(PROMPTS, lam=0.5, max_new_tokens=5)
-    n0 = len(gateway.TRACE_LOG)
+    gateway.reset_trace_log()   # a bounded deque at maxlen would make the
+    n0 = len(gateway.TRACE_LOG)  # length assertion below vacuous
     # same (B=3→4, S→8) bucket: different prompts, lengths and λ
     out = server.generate(["a b c d e f g", "x y", "one two three four"],
                           lam=1.5, max_new_tokens=5)
     repeat = server.generate(PROMPTS, lam=0.5, max_new_tokens=5)
     assert len(gateway.TRACE_LOG) == n0, \
-        f"unexpected retrace: {gateway.TRACE_LOG[n0:]}"
+        f"unexpected retrace: {list(gateway.TRACE_LOG)[n0:]}"
     assert all(r["tokens"] for r in out["results"])
     # determinism across repeated calls through the cached program
     for a, b in zip(baseline["results"], repeat["results"]):
