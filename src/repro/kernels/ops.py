@@ -12,7 +12,8 @@ import os
 import jax
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kmeans_assign import (kmeans_assign_pallas,
                                          kmeans_assign_reduce_pallas)
@@ -73,3 +74,17 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, impl: str | None = None):
         return decode_attention_pallas(q, k_cache, v_cache, n_valid,
                                        interpret=_interpret())
     return ref.decode_attention_ref(q, k_cache, v_cache, n_valid)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, n_valid, *,
+                           impl: str | None = None):
+    """Decode attention against the paged KV pool (serve/kv_cache): each
+    batch row attends the pages its page-table row names. On TPU the Pallas
+    kernel DMAs pages via scalar prefetch; the CPU fallback materializes
+    the gather (ref.paged_gather_ref) — correct, just not bandwidth-lean."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return paged_decode_attention_pallas(q, k_pool, v_pool, page_table,
+                                             n_valid, interpret=_interpret())
+    return ref.paged_decode_attention_ref(q, k_pool, v_pool, page_table,
+                                          n_valid)

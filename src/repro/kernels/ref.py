@@ -63,8 +63,9 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 def decode_attention_ref(q, k_cache, v_cache, n_valid):
     """q: (B,Hkv,g,hd); caches (B,Hkv,S,hd) head-major; n_valid scalar or
-    (B,) per-row validity bound (continuous-batching slot pool).
-    Returns (B,Hkv,g,hd)."""
+    (B,) per-row validity bound (continuous-batching slot pool). A row with
+    bound 0 (fully-invalid slot) returns exactly 0, matching the kernel's
+    l=0 guard. Returns (B,Hkv,g,hd)."""
     S = k_cache.shape[2]
     hd = q.shape[-1]
     s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
@@ -72,6 +73,33 @@ def decode_attention_ref(q, k_cache, v_cache, n_valid):
     nv = jnp.asarray(n_valid, jnp.int32).reshape(-1, 1, 1, 1)   # (B|1,1,1,1)
     valid = jnp.arange(S)[None, None, None, :] < nv
     s = jnp.where(valid, s, jnp.float32(-1e30))
-    p = jax.nn.softmax(s, axis=-1)
+    # explicit masked softmax (not jax.nn.softmax): zero the exp under the
+    # mask so a fully-invalid row accumulates l = 0 and emits 0 instead of
+    # a uniform average over garbage
+    p = jnp.where(valid, jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)), 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_gather_ref(pool, page_table):
+    """pool: (P, Hkv, ps, hd) page-major; page_table: (B, npg) int32.
+    Materializes each row's contiguous logical view — (B, Hkv, npg*ps, hd)
+    — by gathering its pages out of the shared pool. This is the CPU
+    fallback the Pallas kernel's scalar-prefetch DMA avoids on TPU."""
+    B, npg = page_table.shape
+    _, Hkv, ps, hd = pool.shape
+    g = pool[page_table]                       # (B, npg, Hkv, ps, hd)
+    g = jnp.moveaxis(g, 2, 1)                  # (B, Hkv, npg, ps, hd)
+    return g.reshape(B, Hkv, npg * ps, hd)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, n_valid):
+    """q: (B,Hkv,g,hd); pools (P,Hkv,ps,hd) page-major shared by all rows;
+    page_table (B,npg) int32; n_valid (B,) per-row bound. Gathers each
+    row's pages into a contiguous view and runs the contiguous oracle —
+    positions past n_valid (including anything a trash-page table entry
+    drags in) are masked. Returns (B,Hkv,g,hd)."""
+    return decode_attention_ref(q, paged_gather_ref(k_pool, page_table),
+                                paged_gather_ref(v_pool, page_table),
+                                n_valid)

@@ -205,14 +205,89 @@ def attn_decode_step(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
 
     Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
     qg = q.reshape(B, Hkv, g, hd)
-    # Dot in the cache dtype with f32 accumulation: upcasting the cache
-    # (k.astype(f32)) makes XLA materialize an f32 copy of the whole cache
-    # every step — measured 60% of decode HBM traffic (§Perf H3 iter 2).
+    out = _masked_grouped_attn(qg, k_cache, v_cache, valid)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def _masked_grouped_attn(qg, k_cache, v_cache, valid):
+    """The decode attention block shared by the contiguous and paged (CPU
+    fallback) paths — ONE definition so the engine-vs-solo token-parity
+    guarantee can't silently split across copies. qg: (B, Hkv, g, hd);
+    caches (B, Hkv, K, hd); valid: (B|1, K) bool. Dot in the cache dtype
+    with f32 accumulation: upcasting the cache (k.astype(f32)) makes XLA
+    materialize an f32 copy of the whole cache every step — measured 60%
+    of decode HBM traffic (§Perf H3 iter 2). Returns (B, Hkv, g, hd) in
+    the cache dtype."""
+    hd = qg.shape[-1]
     scores = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(k_cache.dtype), k_cache,
                         preferred_element_type=jnp.float32) * hd ** -0.5
     scores = jnp.where(valid[:, None, None], scores, jnp.float32(-1e30))
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32).astype(v_cache.dtype)
-    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                      preferred_element_type=jnp.float32).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (vLLM-style page pool — serve/kv_cache.alloc_page_pool)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_kv_cache(cfg: ModelConfig, pages: int, page_size: int,
+                        dtype=None):
+    """One layer's page pool: (pages, Hkv, page_size, hd) page-major — the
+    slot-pool layout with the batch dim reinterpreted as a flat pool of
+    fixed-size pages shared by every in-flight request."""
+    return init_kv_cache(cfg, pages, page_size, dtype)
+
+
+def attn_decode_step_paged(p: dict, x: jnp.ndarray, cache: dict,
+                           page_table: jnp.ndarray, pos: jnp.ndarray,
+                           cfg: ModelConfig) -> tuple:
+    """One-token decode against the paged pool. x: (B, 1, d);
+    cache leaves (P, Hkv, page_size, hd) shared by all rows; page_table:
+    (B, npg) int32 — row b's i-th entry is the pool page holding its
+    logical positions [i*page_size, (i+1)*page_size); pos: (B,) int32
+    absolute positions (always per-row — paging exists for continuous
+    batching). Returns (out, new_cache).
+
+    The new K/V lands at (page_table[b, pos_b // ps], pos_b % ps); rows
+    whose table entry is the trash page (index 0 by serve/kv_cache
+    convention) scatter harmlessly there. On TPU attention runs the
+    scalar-prefetch Pallas kernel (``paged_decode_attention_pallas`` —
+    pages DMA'd by table lookup, gather never materialized); elsewhere it
+    gathers the pages and reuses ``attn_decode_step``'s exact einsum
+    discipline — dot in the cache dtype with f32 accumulation — so engine
+    tokens stay bit-identical to the solo scan path on every dtype (a
+    blanket f32 upcast diverges from the contiguous path on bf16 models).
+    """
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    ps = cache["k"].shape[2]
+    npg = page_table.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    k_new = jnp.moveaxis(k_new, 1, 2)[:, :, 0]        # (B, Hkv, hd)
+    v_new = jnp.moveaxis(v_new, 1, 2)[:, :, 0]
+    pages = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    # scatter each row's token into its page; duplicate targets only ever
+    # happen on the trash page (inactive rows), where any value is fine
+    k_cache = cache["k"].at[pages, :, off].set(k_new.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[pages, :, off].set(v_new.astype(cache["v"].dtype))
+
+    Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
+    qg = q.reshape(B, Hkv, g, hd)
+    if kops._default_impl() == "pallas":
+        out = kops.paged_decode_attention(qg, k_cache, v_cache, page_table,
+                                          pos + 1)
+    else:
+        from repro.kernels.ref import paged_gather_ref
+        k_g = paged_gather_ref(k_cache, page_table)   # (B, Hkv, npg*ps, hd)
+        v_g = paged_gather_ref(v_cache, page_table)
+        n_valid = jnp.minimum(pos + 1, npg * ps)
+        valid = jnp.arange(npg * ps)[None, :] < n_valid[:, None]
+        out = _masked_grouped_attn(qg, k_g, v_g, valid)
+    out = out.astype(v_cache.dtype).reshape(B, 1, cfg.n_heads * hd)
     return out @ p["wo"], {"k": k_cache, "v": v_cache}

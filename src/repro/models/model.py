@@ -109,9 +109,12 @@ def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
 
     logits_last_only — serving prefill: only the final position is
     unembedded (avoids a (B,S,V) logits tensor).
-    last_pos — with logits_last_only, a traced scalar index selecting the
+    last_pos — with logits_last_only, a traced index selecting the
     position to unembed instead of S−1: lets the gateway right-pad prompts
-    into shape buckets without recompiling per true length.
+    into shape buckets without recompiling per true length. A scalar
+    selects one position for the whole batch; a (B,) vector selects
+    per-row positions (coalesced prefill: requests of different true
+    lengths batched into one bucket — serve/engine.py).
     return_cache — also emit the decode cache (per-unit KV / SSM state as
     scan ys), i.e. this call doubles as ``prefill``.
     """
@@ -157,8 +160,13 @@ def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
                                    params["blocks"])
     x = _norm(cfg, params["final_norm"], x)
     if logits_last_only:
-        x = (x[:, -1:, :] if last_pos is None else
-             jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1))
+        if last_pos is None:
+            x = x[:, -1:, :]
+        elif jnp.ndim(last_pos) == 1:      # per-row (coalesced prefill)
+            x = x[jnp.arange(B)[:, None],
+                  jnp.asarray(last_pos, jnp.int32)[:, None]]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
     logits = x @ params["embed"]["unembed"]
     logits = constrain(logits, ("batch", "seq", "vocab"))
     if return_cache:
@@ -211,6 +219,23 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
         lambda a: jnp.zeros((n_units,) + a.shape, a.dtype), unit)
 
 
+def init_paged_cache(cfg: ModelConfig, pages: int, page_size: int,
+                     dtype=None) -> dict:
+    """Stacked paged decode cache: leaves (n_units, pages, Hkv, page_size,
+    hd) — one flat page pool per unit, shared by every in-flight request
+    via per-request page tables (see serve/kv_cache). Attention-only: SSM
+    state is not positional, so SSM/hybrid archs cannot be paged (they
+    stay on the per-request gateway path)."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        raise TypeError(f"{cfg.name}: paged KV pools require attention-only "
+                        "archs — SSM state has no per-position pages")
+    n_units, pat = block_pattern(cfg)
+    unit = {f"l{i}": A.init_paged_kv_cache(cfg, pages, page_size, dtype)
+            for i, (mixer, _) in enumerate(pat) if mixer == "attn"}
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_units,) + a.shape, a.dtype), unit)
+
+
 def decode_step(params: dict, cache: dict, cfg: ModelConfig, *,
                 tokens=None, embeds=None, pos, rolling: bool = False,
                 moe_mode: str = "dense"):
@@ -239,6 +264,45 @@ def decode_step(params: dict, cache: dict, cfg: ModelConfig, *,
             else:
                 h, new_cache[f"l{i}"] = S.mamba_decode_step(
                     lp["mixer"], h, unit_cache[f"l{i}"], cfg)
+            x = x + h
+            if ffn is not None:
+                h = _norm(cfg, lp["norm2"], x)
+                if ffn == "moe":
+                    h, _ = M.moe_forward(lp["ffn"], h, cfg, mode=moe_mode)
+                else:
+                    h = L.mlp(lp["ffn"], h, cfg)
+                x = x + h
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(unit, x, (params["blocks"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"]["unembed"]
+    return constrain(logits, ("batch", None, "vocab")), new_cache
+
+
+def decode_step_paged(params: dict, cache: dict, cfg: ModelConfig, *,
+                      tokens=None, embeds=None, page_table, pos,
+                      moe_mode: str = "dense"):
+    """One-token decode against the paged KV pool (init_paged_cache).
+    tokens: (B,1) int or embeds: (B,1,d); page_table: (B, npg) int32 pool
+    page ids per logical block, shared by every unit/layer; pos: (B,)
+    int32 per-row absolute positions. Returns (logits (B,1,V), new_cache).
+    """
+    if embeds is None:
+        embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", None, None))
+    _, pat = block_pattern(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    def unit(x, xs):
+        unit_params, unit_cache = xs
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(pat):
+            lp = unit_params[f"l{i}"]
+            h = _norm(cfg, lp["norm1"], x)
+            h, new_cache[f"l{i}"] = A.attn_decode_step_paged(
+                lp["mixer"], h, unit_cache[f"l{i}"], page_table, pos, cfg)
             x = x + h
             if ffn is not None:
                 h = _norm(cfg, lp["norm2"], x)

@@ -1,35 +1,57 @@
-"""Continuous-batching serving engine with a persistent slot-based KV pool.
+"""Continuous-batching serving engine with a persistent paged KV pool.
 
 The deployment shape the paper targets (§3) is a router in front of a
 model pool serving *many clients concurrently*. The per-request gateway
 path serves one caller's batch at a time and pad-copies a fresh KV cache
 per request; this engine instead keeps, per routed model, one persistent
-cache pool with a fixed number of sequence **slots** and decodes every
-in-flight request together:
+cache pool and decodes every in-flight request together:
 
-  admission  — ``submit()`` queues a request; when a slot frees up the
-               prompt is prefilled in its own pow2 length bucket (cached
-               jit per (config, bucket)) and its K/V written into the slot
-               (``kv_cache.write_slot``, pool buffer donated — no copy).
+  admission  — ``submit()`` queues a request; when capacity frees up it is
+               prefilled in its pow2 length bucket and its K/V written
+               into the pool (buffers donated — no copy). Same-bucket
+               admissions **coalesce** into one (B_b, S_b) prefill
+               dispatch (per-row ``last_pos``) instead of B separate
+               (1, S_b) calls — one trace per (B_b, S_b), and bursty
+               arrivals pay one dispatch instead of a convoy.
   decode     — ``step()`` runs ONE cached jitted ``lax.scan`` chunk of
-               ``chunk`` greedy tokens over the whole slot batch. Each
-               slot carries its own position (a per-slot ``pos`` vector —
-               see ``models.attention.attn_decode_step``), so requests at
-               different depths share the batch; per-slot validity
-               (``pos + 1``) masks whatever an earlier occupant left in
-               the region. New requests join between chunks instead of
+               ``chunk`` greedy tokens over the whole decode batch. Each
+               row carries its own position (a per-row ``pos`` vector),
+               so requests at different depths share the batch; per-row
+               validity (``pos + 1``) masks anything an earlier occupant
+               left behind. New requests join between chunks instead of
                waiting for the batch to drain.
   completion — a request that has emitted ``max_new`` tokens frees its
-               slot at the next chunk boundary; freeing is just returning
-               the slot index — steady-state decode never reallocates.
+               capacity at the next chunk boundary — steady-state decode
+               never reallocates.
+
+KV memory comes in two regimes (``EngineConfig.page_size``):
+
+* **paged** (default, vLLM-style — see ``kv_cache.alloc_page_pool``): one
+  flat pool of fixed-size pages shared by every request. A request
+  reserves only the pages its own prompt + decode budget needs (its page
+  table row maps logical blocks → pool pages; decode gathers by page
+  table — ``models.decode_step_paged``, Pallas scalar-prefetch kernel on
+  TPU, jnp gather on CPU). Long and short requests share the pool with no
+  per-slot worst-case reservation: strictly more in-flight requests per
+  byte of KV pool under long-tail length mixes.
+* **uniform** (``page_size=None`` — the PR 3 engine, kept as baseline and
+  for benchmarks): every slot reserves a full ``max_seq`` region.
 
 Every jitted function is built once per (model config, static shape) and
 cached at module level; warm traffic compiles nothing (appends to
-``TRACE_LOG`` are per jit *trace*, and tests pin them flat).
+``TRACE_LOG`` are per jit *trace*, and tests pin them flat — including
+paged decode across mixed per-request page counts, whose shapes are
+static ``(slots, max_pages)``).
 
 Greedy decode is prefix-stable, so a request's tokens are bit-identical
 to the single-request scan path (``RoutedServer.generate(engine=False)``
-on that prompt alone) — test-enforced in tests/test_engine.py.
+on that prompt alone) — test-enforced in tests/test_engine.py and
+property-tested over random schedules in tests/test_engine_properties.py.
+Caveat: the guarantee is verified on the jnp paths (CPU/interpret). On
+TPU the paged decode dispatches to the f32 online-softmax Pallas kernel,
+whose accumulation discipline differs from the solo path's cache-dtype
+dot — near-tie argmaxes could in principle flip there; running that
+parity on real hardware is a ROADMAP item.
 
 SSM/hybrid archs integrate state over every prefill position and cannot
 share right-padded prompt buckets; they stay on the gateway's per-request
@@ -40,6 +62,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -48,7 +71,9 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import model as mdl
-from repro.serve.kv_cache import alloc_slot_pool, write_slot
+from repro.serve.kv_cache import (PageTable, alloc_page_pool,
+                                  alloc_slot_pool, write_prefill_pages,
+                                  write_slot)
 
 #: one entry appended per jit TRACE of an engine/serve function — bounded
 #: so a long-running server can't leak memory; tests assert its length
@@ -65,14 +90,36 @@ def next_pow2(v: int) -> int:
     return 1 << (max(v, 1) - 1).bit_length()
 
 
+def region_len(n_tokens: int, max_new: int, chunk: int) -> int:
+    """Positions a request writes over its lifetime: the pow2 prefill
+    bucket or prompt + whole decode chunks, whichever is larger. Module
+    level so tests/benchmarks size page pools with the engine's own math
+    instead of re-deriving it."""
+    steps = -(-max_new // chunk) * chunk
+    return max(next_pow2(n_tokens), n_tokens + steps)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Static engine shape — one compiled program set per value of this."""
-    slots: int = 8     #: concurrent sequences per model (pool batch rows)
-    max_seq: int = 256  #: per-slot KV region: prompt bucket + decode room
+    slots: int = 8     #: concurrent sequences per model (decode batch rows)
+    max_seq: int = 256  #: max per-request region: prompt bucket + decode room
     chunk: int = 8     #: decode tokens per jitted chunk (admission period)
     done_buffer: int = 1024  #: finished results kept for drain(); oldest
     #: evicted beyond this, so step()-consuming servers don't leak
+    page_size: Optional[int] = 16  #: paged KV pool page length (positions);
+    #: None selects the uniform slot pool (every slot reserves max_seq)
+    pages: int = 0  #: allocatable pages in the pool; 0 → auto
+    #: (slots * ceil(max_seq / page_size) — worst-case-equivalent, so
+    #: admission is never page-bound; set lower to trade reservation
+    #: headroom for strictly more in-flight requests per byte)
+
+    @property
+    def resolved_pages(self) -> int:
+        """Allocatable pages (excluding the trash page)."""
+        if not self.page_size:
+            return 0
+        return self.pages or self.slots * (-(-self.max_seq // self.page_size))
 
 
 # ---------------------------------------------------------------------------
@@ -85,7 +132,10 @@ def _prefill_fn(cfg: ModelConfig):
     """Prefill one prompt bucket → (first greedy token (B,), KV cache).
     Identical math to the gateway scan path's prefill segment (same
     q_chunk, same last_pos unembed), so engine tokens stay bit-identical
-    to the single-request path."""
+    to the single-request path. ``last_pos`` may be a scalar (uniform
+    lanes admit one request at a time) or a (B,) vector (coalesced paged
+    admission: same-bucket requests of different true lengths batched into
+    one dispatch, each row unembedded at its own last position)."""
     def prefill(params, toks, last_pos):
         TRACE_LOG.append(("engine_prefill", cfg.name, toks.shape))
         logits, _, cache = mdl.forward(params, cfg, tokens=toks,
@@ -107,6 +157,45 @@ def _admit_fn(cfg: ModelConfig):
                           jax.tree.leaves(prefill_cache)[0].shape))
         return write_slot(pool, prefill_cache, slot)
     return jax.jit(admit, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _write_pages_fn(cfg: ModelConfig):
+    """Scatter a coalesced prefill cache into the paged pool. The pool
+    argument is donated: admission mutates the persistent page buffers in
+    place instead of copying the pool per batch. One trace per
+    (B_b, S_b, n_pp) admission shape."""
+    def write(pool, prefill_cache, pages_mat):
+        TRACE_LOG.append(("engine_write_pages", cfg.name,
+                          jax.tree.leaves(prefill_cache)[0].shape,
+                          pages_mat.shape))
+        return write_prefill_pages(pool, prefill_cache, pages_mat)
+    return jax.jit(write, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_paged_fn(cfg: ModelConfig, chunk: int):
+    """One decode chunk over the paged decode batch: ``chunk`` greedy
+    tokens via ``lax.scan`` with per-row positions and the (slots,
+    max_pages) page table. The table's shape is static, so mixed
+    per-request page counts never retrace; the pool is donated —
+    steady-state decode reuses the page buffers."""
+    def run(params, cache, page_table, tok, pos):
+        TRACE_LOG.append(("engine_chunk_paged", cfg.name, tok.shape,
+                          page_table.shape, chunk))
+
+        def body(carry, _):
+            tok, pos, cache = carry
+            logits, cache = mdl.decode_step_paged(
+                params, cache, cfg, tokens=tok[:, None],
+                page_table=page_table, pos=pos)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return (nxt, pos + 1, cache), tok
+
+        (tok, pos, cache), out = jax.lax.scan(body, (tok, pos, cache), None,
+                                              length=chunk)
+        return cache, tok, pos, out.T                     # out: (B, chunk)
+    return jax.jit(run, donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -150,15 +239,25 @@ class _Pending:
     rid: int
     toks: np.ndarray           # (S,) int32 prompt tokens, unpadded
     max_new: int
+    t_submit: float = 0.0      # perf_counter at submit (admission latency)
 
 
 class _Lane:
-    """Per-model engine state: the slot pool + host-side slot bookkeeping."""
+    """Per-model engine state: the KV pool (paged or uniform) + host-side
+    slot/page bookkeeping."""
 
     def __init__(self, pm, ecfg: EngineConfig):
         self.pm = pm
         self.ecfg = ecfg
-        self.pool = alloc_slot_pool(pm.cfg, ecfg.slots, ecfg.max_seq)
+        self.paged = bool(ecfg.page_size)
+        if self.paged:
+            self.pool = alloc_page_pool(pm.cfg, ecfg.resolved_pages,
+                                        ecfg.page_size)
+            self.pt = PageTable(ecfg.slots, ecfg.resolved_pages,
+                                ecfg.page_size, ecfg.max_seq)
+        else:
+            self.pool = alloc_slot_pool(pm.cfg, ecfg.slots, ecfg.max_seq)
+            self.pt = None
         self.free: List[int] = list(range(ecfg.slots))[::-1]
         self.active: Dict[int, _Active] = {}             # slot -> request
         self.queue: Deque[_Pending] = collections.deque()
@@ -179,14 +278,42 @@ class ServeEngine:
         self._lanes: Dict[int, _Lane] = {}
         self._next_rid = 0
         self._done: Dict[int, np.ndarray] = {}
+        #: queue-wait per admitted request (submit → prefill dispatched),
+        #: seconds; bounded like TRACE_LOG so long-running servers don't
+        #: leak. benchmarks/perf_suite.bench_paged reads the p99.
+        self.admission_lat: Deque[float] = collections.deque(maxlen=65536)
+        #: high-water mark of concurrently admitted requests, sampled at
+        #: every chunk boundary between admission and decode (completions
+        #: release capacity before step() returns, so callers can't see
+        #: it). Reset by assigning 0; bench_paged's in-flight-per-byte
+        #: numerator.
+        self.peak_active: int = 0
+
+    def _region_len(self, n_tokens: int, max_new: int) -> int:
+        return region_len(n_tokens, max_new, self.ecfg.chunk)
 
     def fits(self, n_tokens: int, max_new: int) -> bool:
-        """Whether a request fits one slot region: the prefill writes its
-        pow2 length bucket, decode writes whole chunks past the prompt —
-        both must stay inside ``max_seq``."""
-        steps = -(-max_new // self.ecfg.chunk) * self.ecfg.chunk
-        return max(next_pow2(n_tokens),
-                   n_tokens + steps) <= self.ecfg.max_seq
+        """Whether a request can ever be admitted: its written region must
+        stay inside ``max_seq`` (the page-table width on paged lanes, the
+        slot region on uniform ones), and on paged lanes its page count
+        must not exceed the whole pool."""
+        region = self._region_len(n_tokens, max_new)
+        if region > self.ecfg.max_seq:
+            return False
+        if self.ecfg.page_size:
+            need = -(-region // self.ecfg.page_size)
+            return need <= self.ecfg.resolved_pages
+        return True
+
+    def kv_pool_bytes(self) -> int:
+        """Bytes held by every lane's persistent KV pool (paged pools
+        include the trash page)."""
+        return sum(leaf.nbytes for lane in self._lanes.values()
+                   for leaf in jax.tree.leaves(lane.pool))
+
+    def n_active(self) -> int:
+        """Requests currently holding decode capacity (all lanes)."""
+        return sum(len(lane.active) for lane in self._lanes.values())
 
     # ------------------------------------------------------------- submit
     def submit(self, model_idx: int, toks: np.ndarray, max_new: int) -> int:
@@ -201,16 +328,20 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({len(toks)} tokens, pow2 bucket "
                 f"{next_pow2(len(toks))}) + whole decode chunks for "
-                f"max_new={max_new} exceed the per-slot region "
-                f"max_seq={self.ecfg.max_seq} — raise EngineConfig.max_seq "
-                "or shorten the request (RoutedServer.generate falls back "
-                "to the per-call path automatically)")
+                f"max_new={max_new} exceed the per-request region "
+                f"max_seq={self.ecfg.max_seq}"
+                + (f" or the page pool ({self.ecfg.resolved_pages} pages of "
+                   f"{self.ecfg.page_size})" if self.ecfg.page_size else "")
+                + " — raise EngineConfig.max_seq/pages or shorten the "
+                "request (RoutedServer.generate falls back to the per-call "
+                "path automatically)")
         rid = self._next_rid
         self._next_rid += 1
         lane = self._lanes.get(int(model_idx))
         if lane is None:
             lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg)
-        lane.queue.append(_Pending(rid, toks, max_new))
+        lane.queue.append(_Pending(rid, toks, max_new,
+                                   t_submit=time.perf_counter()))
         return rid
 
     # --------------------------------------------------------------- step
@@ -224,6 +355,8 @@ class ServeEngine:
         finished: List[Tuple[int, np.ndarray]] = []
         for lane in self._lanes.values():
             self._admit(lane)
+        self.peak_active = max(self.peak_active, self.n_active())
+        for lane in self._lanes.values():
             if lane.active:
                 finished.extend(self._decode_chunk(lane))
         for rid, out in finished:
@@ -269,6 +402,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------ internals
     def _admit(self, lane: _Lane) -> None:
+        if lane.paged:
+            self._admit_paged(lane)
+            return
         cfg = lane.pm.cfg
         while lane.free and lane.queue:
             req = lane.queue.popleft()
@@ -280,15 +416,71 @@ class ServeEngine:
             tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
                                         jnp.int32(S - 1))
             lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
+            self.admission_lat.append(time.perf_counter() - req.t_submit)
             lane.tok[slot] = int(tok0[0])
             lane.pos[slot] = S          # first decode token writes K/V at S
             lane.active[slot] = _Active(req.rid, req.max_new)
 
+    def _admit_paged(self, lane: _Lane) -> None:
+        """Paged admission: claim a decode slot + exactly the pages each
+        request's own region needs (FIFO — the head waits for pages rather
+        than being overtaken), then COALESCE everything admitted this
+        boundary by prompt bucket: one (B_b, S_b) prefill dispatch per
+        bucket with per-row ``last_pos``, one donated page scatter. Pad
+        rows of a non-pow2 group prefill garbage into the trash page."""
+        ecfg = self.ecfg
+        ps = ecfg.page_size
+        admitted = []                   # (req, slot, S, S_b, pages)
+        while lane.queue and lane.free:
+            req = lane.queue[0]
+            S = len(req.toks)
+            S_b = next_pow2(S)
+            need = lane.pt.pages_needed(self._region_len(S, req.max_new))
+            if need > lane.pt.available:
+                break
+            lane.queue.popleft()
+            slot = lane.free.pop()
+            pages = lane.pt.alloc(slot, need)
+            admitted.append((req, slot, S, S_b, pages))
+        if not admitted:
+            return
+        cfg = lane.pm.cfg
+        groups: Dict[int, list] = {}
+        for item in admitted:
+            groups.setdefault(item[3], []).append(item)
+        for S_b, items in sorted(groups.items()):
+            B = len(items)
+            B_b = next_pow2(B)
+            n_pp = -(-S_b // ps)        # pages the prefill bucket covers
+            toks_p = np.zeros((B_b, S_b), np.int32)
+            last = np.zeros((B_b,), np.int32)
+            pages_mat = np.zeros((B_b, n_pp), np.int32)   # pad rows → trash
+            for r, (req, slot, S, _, pages) in enumerate(items):
+                toks_p[r, :S] = req.toks
+                last[r] = S - 1
+                pages_mat[r] = pages[:n_pp]
+            tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
+                                        jnp.asarray(last))
+            lane.pool = _write_pages_fn(cfg)(lane.pool, kv,
+                                             jnp.asarray(pages_mat))
+            tok0 = np.asarray(tok0)
+            now = time.perf_counter()
+            for r, (req, slot, S, _, pages) in enumerate(items):
+                self.admission_lat.append(now - req.t_submit)
+                lane.tok[slot] = int(tok0[r])
+                lane.pos[slot] = S      # first decode token writes K/V at S
+                lane.active[slot] = _Active(req.rid, req.max_new)
+
     def _decode_chunk(self, lane: _Lane) -> List[Tuple[int, np.ndarray]]:
         cfg, ecfg = lane.pm.cfg, self.ecfg
-        lane.pool, tok, pos, out = _chunk_fn(cfg, ecfg.chunk)(
-            lane.pm.params, lane.pool, jnp.asarray(lane.tok),
-            jnp.asarray(lane.pos))
+        if lane.paged:
+            lane.pool, tok, pos, out = _chunk_paged_fn(cfg, ecfg.chunk)(
+                lane.pm.params, lane.pool, jnp.asarray(lane.pt.table),
+                jnp.asarray(lane.tok), jnp.asarray(lane.pos))
+        else:
+            lane.pool, tok, pos, out = _chunk_fn(cfg, ecfg.chunk)(
+                lane.pm.params, lane.pool, jnp.asarray(lane.tok),
+                jnp.asarray(lane.pos))
         out = np.asarray(out)
         active_mask = np.zeros((ecfg.slots,), bool)
         active_mask[list(lane.active)] = True
@@ -296,7 +488,9 @@ class ServeEngine:
         # by the write-before-validity invariant: a slot's valid region
         # [0, pos+1) is always entirely written by its CURRENT occupant —
         # prefill covers [0, S_b), and each decode step writes position p
-        # before validity reaches p — so stale leftovers are never attended
+        # before validity reaches p — so stale leftovers are never attended.
+        # (Paged lanes scatter free rows' garbage into the trash page, whose
+        # contents no request's page table maps below its validity bound.)
         lane.tok = np.where(active_mask, np.asarray(tok), 0).astype(np.int32)
         lane.pos = np.where(active_mask, np.asarray(pos), 0).astype(np.int32)
         finished = []
@@ -309,6 +503,8 @@ class ServeEngine:
                 finished.append((st.rid, tokens))
                 del lane.active[slot]
                 lane.free.append(slot)
+                if lane.paged:
+                    lane.pt.release(slot)
                 lane.tok[slot] = 0
                 lane.pos[slot] = 0
         return finished

@@ -9,13 +9,17 @@ selection under an accuracy/cost trade-off λ chosen at inference time
 (§3).
 
 Serving runs through the continuous-batching engine by default
-(``repro.serve.engine``): concurrent requests share per-model slot pools
-and decode together in chunked scans, each prompt prefilled in its own
-length bucket. ``generate(engine=False)`` keeps the original per-call
-path — the whole prompt batch group-padded per model and decoded as one
-``lax.scan`` (``scan_decode=False`` further drops to the per-token
-debugging loop). SSM/hybrid archs always take the per-call path (their
-state integrates over pad positions, so prompts are served unpadded).
+(``repro.serve.engine``): concurrent requests share one paged KV pool per
+model (vLLM-style fixed-size pages + per-request page tables — each
+request reserves only what its own length needs), same-bucket admissions
+coalesce into one batched prefill, and everything decodes together in
+chunked scans. ``EngineConfig(page_size=None)`` selects the uniform slot
+pool (every slot reserves ``max_seq``). ``generate(engine=False)`` keeps
+the original per-call path — the whole prompt batch group-padded per
+model and decoded as one ``lax.scan`` (``scan_decode=False`` further
+drops to the per-token debugging loop). SSM/hybrid archs always take the
+per-call path (their state integrates over pad positions, so prompts are
+served unpadded).
 
 Hot-path discipline: every jitted function here is built ONCE per
 (model config, static shape) and cached at module level — nothing is

@@ -1,23 +1,34 @@
 """KV-cache utilities for the serving path.
 
-Two cache regimes live here:
+Three cache regimes live here:
 
 * ``extend_cache`` — the per-request regime: a prefill-produced cache is
   pad-copied up to prompt+max_new so a single batch can decode. Kept as
   the fallback path (``RoutedServer.generate(engine=False)``).
-* the **slot pool** — the continuous-batching regime (serve/engine.py):
-  one persistent cache is allocated per (model config, pool shape) with a
-  fixed number of sequence *slots* (the batch dim) and a fixed per-slot
-  region length. Requests claim a slot at admission, their prefill K/V is
-  written into the slot with ``write_slot``, and steady-state decode does
-  zero cache reallocation — per-slot validity (``pos + 1``) masks whatever
-  a previous occupant left behind, so freeing a slot is just returning its
-  index to the free list.
+* the **slot pool** — the uniform continuous-batching regime: one
+  persistent cache per (model config, pool shape) with a fixed number of
+  sequence *slots* (the batch dim) and a fixed per-slot region length
+  ``max_seq``. Requests claim a slot at admission, their prefill K/V is
+  written with ``write_slot``, and steady-state decode does zero cache
+  reallocation — per-slot validity (``pos + 1``) masks whatever a previous
+  occupant left behind. Every slot reserves worst-case room.
+* the **page pool** — the vLLM-style regime (serve/engine.py's default):
+  one flat pool of fixed-size *pages* shared by every in-flight request.
+  A request holds only the pages its actual length needs (its *page
+  table* row maps logical blocks → pool pages), so long and short
+  requests share the pool with no per-slot worst-case reservation —
+  strictly more in-flight requests per byte of KV memory under mixed
+  lengths. Page index 0 is the **trash page**: never handed out, the
+  scatter target for inactive decode rows and the table filler past a
+  request's reservation — gathers from it are masked by validity.
 """
 from __future__ import annotations
 
+from typing import Dict, List
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def extend_cache(cache, new_len: int):
@@ -55,5 +66,90 @@ def write_slot(pool, prefill_cache, slot):
     def leaf(p, u):
         return jax.lax.dynamic_update_slice(
             p, u.astype(p.dtype), (0, slot) + (0,) * (u.ndim - 2))
+
+    return jax.tree.map(leaf, pool, prefill_cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged pool
+# ---------------------------------------------------------------------------
+
+
+def alloc_page_pool(cfg, pages: int, page_size: int):
+    """Allocate the persistent paged cache for one model: leaves
+    (n_units, pages + 1, Hkv, page_size, hd) — ``pages`` allocatable pages
+    plus the trash page at index 0 (never handed out; absorbs the scatter
+    writes of inactive decode rows and backs unassigned page-table
+    entries). Zero-filled; page contents only become attention-valid once
+    a request's validity frontier (``pos + 1``) covers them."""
+    from repro.models import model as mdl
+    return mdl.init_paged_cache(cfg, pages + 1, page_size)
+
+
+class PageTable:
+    """Host-side page bookkeeping for one engine lane: a free list over
+    pool pages [1, pages] (0 is the trash page) and one table row per
+    decode slot mapping logical blocks → pool pages. Unassigned entries
+    stay 0 — the decode gather reads the trash page there and validity
+    masks it. Recycling a slot is O(pages held): its pages return to the
+    free list and the row zeroes; no data movement, the next holder's
+    write-before-validity discipline masks whatever was left behind."""
+
+    def __init__(self, slots: int, pages: int, page_size: int, max_seq: int):
+        self.page_size = page_size
+        self.pages = pages
+        self.max_pages = -(-max_seq // page_size)    # table width (static)
+        self.table = np.zeros((slots, self.max_pages), np.int32)
+        self.free: List[int] = list(range(pages, 0, -1))   # pop() → page 1
+        self._held: Dict[int, List[int]] = {}              # slot → pages
+
+    def pages_needed(self, region_len: int) -> int:
+        return -(-region_len // self.page_size)
+
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
+    def alloc(self, slot: int, n: int) -> np.ndarray:
+        """Claim n pages for ``slot``; returns their pool indices in
+        logical-block order. Raises if the pool is exhausted (callers gate
+        admission on ``available``)."""
+        if n > len(self.free):
+            raise RuntimeError(f"page pool exhausted: need {n}, "
+                               f"have {len(self.free)}")
+        if slot in self._held:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        got = [self.free.pop() for _ in range(n)]
+        self.table[slot, :n] = got
+        self.table[slot, n:] = 0
+        self._held[slot] = got
+        return np.asarray(got, np.int32)
+
+    def release(self, slot: int) -> None:
+        """Return a slot's pages to the free list and zero its row."""
+        self.free.extend(self._held.pop(slot, ()))
+        self.table[slot] = 0
+
+
+def write_prefill_pages(pool, prefill_cache, pages_mat):
+    """Scatter a batched prefill cache (leaves (L, B, Hkv, S_b, hd)) into
+    the page pool (leaves (L, P, Hkv, ps, hd)): row b's logical positions
+    [i*ps, (i+1)*ps) land in pool page ``pages_mat[b, i]``. ``pages_mat``
+    is (B, n_pp) with n_pp = ceil(S_b / ps); pad rows of a coalesced batch
+    point every entry at the trash page (0). S_b not a multiple of ps is
+    zero-padded up — the tail stays masked until decode overwrites it
+    (write-before-validity, same invariant as the slot pool)."""
+    pages_mat = jnp.asarray(pages_mat, jnp.int32)
+    n_pp = pages_mat.shape[1]
+
+    def leaf(p, u):
+        L, B, Hkv, S_b, hd = u.shape
+        ps = p.shape[3]
+        if S_b < n_pp * ps:
+            u = jnp.pad(u, ((0, 0), (0, 0), (0, 0),
+                            (0, n_pp * ps - S_b), (0, 0)))
+        u = u.reshape(L, B, Hkv, n_pp, ps, hd)
+        u = jnp.moveaxis(u, 3, 2)                # (L, B, n_pp, Hkv, ps, hd)
+        return p.at[:, pages_mat].set(u.astype(p.dtype))
 
     return jax.tree.map(leaf, pool, prefill_cache)

@@ -203,3 +203,110 @@ def test_drain_survives_done_buffer_eviction():
     out = srv.generate(prompts, lam=0.5, max_new_tokens=4)
     for p, r in zip(prompts, out["results"]):
         assert r["tokens"] == _solo(srv, p, 4), p
+
+
+# ---------------------------------------------------------------------------
+# Paged pool (EngineConfig.page_size — the default engine regime)
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_and_paged_engines_same_tokens():
+    """The paged pool is a memory-layout change only: same prompts through
+    a paged and a uniform engine produce identical tokens (both already
+    bit-match solo serving; this pins them to each other directly)."""
+    paged = _make_server(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                      page_size=8))
+    uniform = _make_server(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                        page_size=None))
+    for srv in (paged, uniform):
+        assert srv.engine.ecfg.page_size == (8 if srv is paged else None)
+    outs = []
+    for srv in (paged, uniform):
+        rids = [srv.submit(p, lam=0.5, max_new_tokens=m)
+                for p, m in zip(PROMPTS[:4], [5, 3, 8, 6])]
+        done = srv.drain()
+        outs.append([done[r].tolist() for r in rids])
+    assert outs[0] == outs[1]
+
+
+def test_paged_pages_recycle_and_pool_restores(server):
+    """After drain every page is back on the free list exactly once and
+    the table maps everything to the trash page — no leak, no double
+    free. (ECFG's default page_size makes the module server paged.)"""
+    for _ in range(2):
+        for p in PROMPTS[:4]:
+            server.submit(p, lam=0.5, max_new_tokens=4)
+        server.drain()
+    for lane in server.engine._lanes.values():
+        assert lane.paged
+        assert sorted(lane.pt.free) == \
+            list(range(1, server.engine.ecfg.resolved_pages + 1))
+        assert not lane.pt._held and (lane.pt.table == 0).all()
+
+
+def test_submit_rejects_request_larger_than_page_pool():
+    """A request whose page need exceeds the whole pool can never be
+    admitted and must be rejected at submit (distinct from the max_seq
+    bound — region fits, pages don't)."""
+    srv = _make_server(EngineConfig(slots=2, max_seq=64, chunk=4,
+                                    page_size=16, pages=2))
+    assert not srv.engine.fits(33, 8)        # bucket 64 → 4 pages > 2
+    with pytest.raises(ValueError, match="page pool"):
+        srv.engine.submit(0, np.arange(1, 34, dtype=np.int32), 8)
+
+
+def test_paged_pool_fewer_bytes_same_concurrency():
+    """The acceptance metric in miniature: with pages sized for a
+    short-request mix, the paged pool holds the same number of in-flight
+    requests in strictly fewer KV bytes than uniform max_seq slots."""
+    short = [f"q {i}" for i in range(8)]
+    paged = _make_server(EngineConfig(slots=8, max_seq=64, chunk=4,
+                                      page_size=16, pages=16))
+    uniform = _make_server(EngineConfig(slots=8, max_seq=64, chunk=4,
+                                        page_size=None))
+    outs = []
+    for srv in (paged, uniform):
+        rids = [srv.submit(p, lam=0.5, max_new_tokens=4) for p in short]
+        done = srv.engine.drain(rids)
+        assert srv.engine.peak_active == 8   # both fully concurrent
+        outs.append([done[r].tolist() for r in rids])
+    assert outs[0] == outs[1]
+    assert paged.engine.kv_pool_bytes() < uniform.engine.kv_pool_bytes()
+
+
+def test_admission_latency_instrumented(server):
+    """Every admission appends its queue wait (submit → prefill) to the
+    bounded admission_lat deque — the bench_paged p99 source."""
+    n0 = len(server.engine.admission_lat)
+    for p in PROMPTS[:3]:
+        server.submit(p, lam=0.5, max_new_tokens=4)
+    server.drain()
+    lat = list(server.engine.admission_lat)[n0:]
+    assert len(lat) == 3 and all(v >= 0.0 for v in lat)
+
+
+def test_paged_decode_zero_retrace_mixed_page_counts():
+    """Satellite: warm paged-decode steps trigger ZERO retraces across
+    batches whose rows hold different page counts — the (slots, max_pages)
+    table shape is static, so 1-page and 5-page requests share one
+    compiled chunk program. The whole schedule (coalesced admissions
+    included) is replayed identically after warmup and must not add one
+    TRACE_LOG entry."""
+    srv = _make_server(EngineConfig(slots=4, max_seq=32, chunk=4,
+                                    page_size=4))
+
+    def schedule():
+        mixed = [("tiny", 4),                               # 1-2 pages
+                 (" ".join(f"w{i}" for i in range(20)), 4),  # many pages
+                 ("a b c", 8),
+                 (" ".join(f"v{i}" for i in range(14)), 4)]
+        rids = [srv.submit(p, lam=0.5, max_new_tokens=m) for p, m in mixed]
+        return srv.engine.drain(rids)
+
+    schedule()                                  # warm every program
+    gateway.reset_trace_log()
+    n0 = len(gateway.TRACE_LOG)
+    out = schedule()                            # identical replay
+    assert len(out) == 4
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"paged retrace: {list(gateway.TRACE_LOG)[n0:]}"

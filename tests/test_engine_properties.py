@@ -1,0 +1,185 @@
+"""Property-based engine invariants: random arrival schedules × prompt
+lengths × max_new × page/slot sizes must leave every request bit-identical
+to serving it alone, and must return the pool (slots AND pages) to its
+initial state after drain() — no leaks, no double-frees, no cross-request
+cache contamination.
+
+The schedule checker is plain pytest-parametrized over fixed seeds (always
+runs, including in this hypothesis-less container); the hypothesis
+section behind the usual ``importorskip`` guard drives the same checker
+over drawn schedules (CI runs it with a bounded profile —
+``--hypothesis-seed=0`` and small ``max_examples``, see ci.yml).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.serve.engine import EngineConfig, ServeEngine, region_len
+from repro.serve.gateway import PoolModel, RoutedServer
+
+TINY = ModelConfig(name="tiny-dense-prop", arch_type="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                   head_dim=16)
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def pm():
+    from repro.models import init_params
+    return PoolModel("tiny", TINY, init_params(jax.random.PRNGKey(0), TINY),
+                     0.1)
+
+
+_solo_cache = {}
+
+
+def _solo(pm, toks, max_new):
+    """Reference: the request served alone on the per-request scan path
+    (cached — schedules repeat prompts across examples)."""
+    key = (toks.tobytes(), max_new)
+    if key not in _solo_cache:
+        _solo_cache[key] = RoutedServer._serve_batch(
+            pm, np.asarray(toks)[None], max_new)[0]
+    return _solo_cache[key]
+
+
+def _check_schedule(pm, ecfg: EngineConfig, reqs, gaps):
+    """Run ``reqs`` = [(toks, max_new)] through a fresh engine, stepping
+    ``gaps[i]`` chunks after the i-th submit, then drain and assert the
+    two core properties: per-request solo parity and full pool recovery."""
+    eng = ServeEngine([pm], ecfg)
+    rids = []
+    for (toks, max_new), gap in zip(reqs, gaps):
+        rids.append(eng.submit(0, toks, max_new))
+        for _ in range(gap):
+            eng.step()
+    out = eng.drain()
+    assert sorted(out) == sorted(rids)
+
+    # 1) bit-identical to solo serving, for every request
+    for rid, (toks, max_new) in zip(rids, reqs):
+        np.testing.assert_array_equal(out[rid], _solo(pm, toks, max_new))
+
+    # 2) the pool returns to its initial state: every slot free, every
+    #    page back on the free list exactly once, page table all-trash
+    lane = eng._lanes[0]
+    assert sorted(lane.free) == list(range(ecfg.slots))
+    assert not lane.active and not lane.queue
+    if ecfg.page_size:
+        assert sorted(lane.pt.free) == \
+            list(range(1, ecfg.resolved_pages + 1)), "page leak/double-free"
+        assert not lane.pt._held
+        assert (lane.pt.table == 0).all()
+    assert eng.n_active() == 0 and not eng.busy
+
+
+def _spec_from_seed(seed: int):
+    """One random schedule: engine shape + request mix + interleaving.
+    Kept small so the jit trace set stays bounded across examples."""
+    rng = np.random.default_rng(seed)
+    page_size = int(rng.choice([0, 4, 8, 16]))        # 0 → uniform lane
+    slots = int(rng.integers(2, 4))
+    chunk = int(rng.choice([2, 4]))
+    n_req = int(rng.integers(1, 8))
+    reqs, max_need = [], 1
+    for _ in range(n_req):
+        max_new = int(rng.integers(1, 9))
+        steps = -(-max_new // chunk) * chunk
+        S = int(rng.integers(1, MAX_SEQ - steps + 1))
+        reqs.append((rng.integers(1, TINY.vocab, size=S).astype(np.int32),
+                     max_new))
+        if page_size:        # the engine's own page accounting, not a copy
+            max_need = max(max_need, -(-region_len(S, max_new, chunk)
+                                       // page_size))
+    # half the paged examples run a TIGHT pool: just enough pages for the
+    # hungriest request, so admission stalls on pages (FIFO) mid-schedule
+    pages = 0
+    if page_size and rng.random() < 0.5:
+        pages = int(max_need + rng.integers(0, max_need + 1))
+    ecfg = EngineConfig(slots=slots, max_seq=MAX_SEQ, chunk=chunk,
+                        page_size=page_size or None, pages=pages)
+    gaps = [int(g) for g in rng.integers(0, 3, size=n_req)]
+    return ecfg, reqs, gaps
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 5, 8, 13])
+def test_random_schedules_solo_parity_and_pool_recovery(pm, seed):
+    ecfg, reqs, gaps = _spec_from_seed(seed)
+    _check_schedule(pm, ecfg, reqs, gaps)
+
+
+def test_tight_pool_serialized_long_requests(pm):
+    """Pages force near-serial execution of page-hungry requests while
+    short ones keep flowing — ordering pressure must not corrupt tokens
+    or leak pages."""
+    rng = np.random.default_rng(42)
+    long_toks = [rng.integers(1, TINY.vocab, size=24).astype(np.int32)
+                 for _ in range(3)]
+    short_toks = [rng.integers(1, TINY.vocab, size=3).astype(np.int32)
+                  for _ in range(3)]
+    reqs = [(t, 4) for pair in zip(long_toks, short_toks) for t in pair]
+    ecfg = EngineConfig(slots=3, max_seq=MAX_SEQ, chunk=4, page_size=8,
+                        pages=5)      # one long (4 pages) + one short (1)
+    _check_schedule(pm, ecfg, reqs, gaps=[1, 0, 2, 0, 0, 1])
+
+
+def test_every_request_alone_equals_itself(pm):
+    """Degenerate schedules (single request, every page size) recover the
+    pool and match solo — the base case the batched properties build on."""
+    toks = np.arange(1, 8, dtype=np.int32)
+    for page_size in (None, 4, 16, 32):
+        ecfg = EngineConfig(slots=2, max_seq=MAX_SEQ, chunk=4,
+                            page_size=page_size)
+        _check_schedule(pm, ecfg, [(toks, 5)], gaps=[0])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-drawn schedules — same importorskip discipline as
+# test_properties.py, but scoped to the hypothesis tests only so the
+# fixed-seed drivers above still run in hypothesis-less containers
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+except ImportError:                                   # pragma: no cover
+    st = None
+
+if st is not None:
+    @st.composite
+    def schedules(draw):
+        page_size = draw(st.sampled_from([0, 4, 8, 16]))
+        slots = draw(st.integers(2, 3))
+        chunk = draw(st.sampled_from([2, 4]))
+        n_req = draw(st.integers(1, 6))
+        reqs, max_need = [], 1
+        for _ in range(n_req):
+            max_new = draw(st.integers(1, 8))
+            steps = -(-max_new // chunk) * chunk
+            S = draw(st.integers(1, MAX_SEQ - steps))
+            toks = np.asarray(draw(st.lists(st.integers(1, TINY.vocab - 1),
+                                            min_size=S, max_size=S)),
+                              np.int32)
+            reqs.append((toks, max_new))
+            if page_size:    # the engine's own page accounting, not a copy
+                max_need = max(max_need, -(-region_len(S, max_new, chunk)
+                                           // page_size))
+        pages = 0
+        if page_size and draw(st.booleans()):
+            pages = max_need + draw(st.integers(0, max_need))
+        gaps = [draw(st.integers(0, 2)) for _ in range(n_req)]
+        ecfg = EngineConfig(slots=slots, max_seq=MAX_SEQ, chunk=chunk,
+                            page_size=page_size or None, pages=pages)
+        return ecfg, reqs, gaps
+
+    @given(schedules())
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_schedule_property(pm, spec):
+        ecfg, reqs, gaps = spec
+        _check_schedule(pm, ecfg, reqs, gaps)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_schedule_property():
+        pass

@@ -34,6 +34,36 @@ def test_kmeans_assign(n, d, K, dtype):
                            atol=1e-3)
 
 
+@pytest.mark.parametrize("n,d,K", [(65, 1000, 7), (33, 1536, 5),
+                                   (257, 999, 13)])
+def test_kmeans_assign_wide_d_boundary(n, d, K):
+    """Boundary test for the ROADMAP's missing d-tiling: both kmeans
+    kernels keep full (block, d_pad) rows resident in VMEM, so very wide
+    embeddings only fit because interpret mode has no VMEM ceiling. On a
+    real TPU, d in the thousands with block_n=256 (256·1536·4B ≈ 1.5 MB
+    per x-tile plus the centroid tile) still fits v4/v5 VMEM (~16 MB) —
+    the d-tiling item bites beyond roughly d ≈ 8k. This pins the math
+    (non-pow2 AND wide d) so adding the tiling later cannot change
+    results; it runs as pass today and should flip to exercising the
+    d-tile loop when that lands."""
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(n), 3)
+    x = jax.random.normal(kx, (n, d))
+    c = jax.random.normal(kc, (K, d))
+    w = jax.random.uniform(kw, (n,))
+    np.testing.assert_array_equal(
+        np.asarray(kmeans_assign_pallas(x, c, interpret=True)),
+        np.asarray(ref.kmeans_assign_ref(x, c)))
+    a_got, s_got, n_got = kmeans_assign_reduce_pallas(x, c, w,
+                                                      interpret=True)
+    a_ref, s_ref, n_ref = ref.kmeans_assign_reduce_ref(x, c, w)
+    np.testing.assert_array_equal(np.asarray(a_got), np.asarray(a_ref))
+    # wide-d sums accumulate n terms per coordinate — scale the tolerance
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_got), np.asarray(n_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_kmeans_assign_large_k_tiled():
     """Centroid tables bigger than one block run the block_k tile loop and
     still match the oracle exactly (strict-< merge keeps first-tie order)."""
@@ -196,6 +226,77 @@ def test_decode_attention_per_batch_n_valid():
                                       int(nv[b]), block_s=32, interpret=True)
         np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row[0]),
                                    rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ragged_validity_including_empty_rows():
+    """Ragged per-slot validity with fully-invalid rows (n_valid = 0 — a
+    drained pool slot): valid rows match the per-row scalar runs, empty
+    rows emit exactly 0 in both kernel and oracle (no uniform-softmax
+    garbage average)."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    B, Hkv, g, S, hd = 4, 2, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kc = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    vc = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    nv = jnp.array([0, 1, 37, 64], jnp.int32)
+    got = decode_attention_pallas(q, kc, vc, nv, block_s=32, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+    assert np.all(np.asarray(got)[0] == 0.0)
+    assert np.all(np.asarray(want)[0] == 0.0)
+    for b in range(1, B):
+        row = decode_attention_pallas(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                                      int(nv[b]), block_s=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hkv,g,ps,npg,P", [(2, 2, 2, 8, 4, 12),
+                                              (3, 1, 4, 16, 2, 5),
+                                              (1, 2, 1, 32, 3, 4)])
+def test_paged_decode_attention_matches_oracle(B, Hkv, g, ps, npg, P):
+    """Scalar-prefetch paged kernel == gather oracle over random page
+    tables (trash-page entries included via short validity bounds)."""
+    from repro.kernels.decode_attention import paged_decode_attention_pallas
+    hd = 32
+    ks = jax.random.split(jax.random.PRNGKey(B * ps + npg), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kp = jax.random.normal(ks[1], (P, Hkv, ps, hd))
+    vp = jax.random.normal(ks[2], (P, Hkv, ps, hd))
+    rng = np.random.default_rng(0)
+    pt = jnp.asarray(rng.integers(0, P, size=(B, npg)), jnp.int32)
+    nv = jnp.asarray(rng.integers(0, npg * ps + 1, size=(B,)), jnp.int32)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, nv, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pt, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_paged_decode_attention_equals_contiguous():
+    """A paged pool whose table lays pages out contiguously must equal the
+    contiguous kernel on the equivalent (B, Hkv, S, hd) cache — paging is
+    an addressing change, not a math change."""
+    from repro.kernels.decode_attention import (decode_attention_pallas,
+                                                paged_decode_attention_pallas)
+    B, Hkv, g, ps, npg, hd = 2, 2, 2, 16, 4, 32
+    S = ps * npg
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kc = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    vc = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    # pool rows = each batch row's pages, in order
+    kp = jnp.moveaxis(kc.reshape(B, Hkv, npg, ps, hd), 2, 1) \
+            .reshape(B * npg, Hkv, ps, hd)
+    vp = jnp.moveaxis(vc.reshape(B, Hkv, npg, ps, hd), 2, 1) \
+            .reshape(B * npg, Hkv, ps, hd)
+    pt = jnp.arange(B * npg, dtype=jnp.int32).reshape(B, npg)
+    nv = jnp.array([23, 64], jnp.int32)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, nv, interpret=True)
+    want = decode_attention_pallas(q, kc, vc, nv, block_s=ps, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
 
 
 def test_decode_attention_matches_model_decode():

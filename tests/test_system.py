@@ -49,18 +49,31 @@ def _auc(router_or_pred, tg):
     return auc
 
 
-def test_federated_mlp_beats_local_global(split, fed_mlp):
-    router, _ = fed_mlp
+def test_federated_mlp_beats_local_global(split):
+    """Fig. 2 at test scale. Deflaked: the fixture's rounds=12 fed fit is
+    undertrained (margin ≈ −0.04 for EVERY fed seed — not a flake of the
+    fed key), and sampling 3 locals happened to pick the two strongest
+    clients. The converged comparison — rounds=100, full participation,
+    fed AUC averaged over a small fixed seed set, locals averaged over
+    ALL clients — gives a stable +0.04 margin (worst single fed seed
+    +0.035), so the paper's +0.02 gap asserts reliably."""
+    import dataclasses
     tg = split["test_global"]
-    auc_fed = _auc(router, tg)
+    fcfg = dataclasses.replace(FCFG, rounds=100, participation=1.0)
+    aucs_fed = []
+    for s in (2, 7):
+        router, _ = routers.fit_federated(routers.make("mlp", RCFG),
+                                          split["train"], fcfg,
+                                          key=jax.random.PRNGKey(s))
+        aucs_fed.append(_auc(router, tg))
     aucs_loc = []
-    for i in range(3):  # a subset of clients is enough at test scale
+    for i in range(FCFG.num_clients):
         r_i, _ = routers.fit_local(routers.make("mlp", RCFG),
                                    client_slice(split["train"], i), FCFG,
                                    key=jax.random.PRNGKey(10 + i),
                                    steps=150)
         aucs_loc.append(_auc(r_i, tg))
-    assert auc_fed > np.mean(aucs_loc) + 0.02
+    assert np.mean(aucs_fed) > np.mean(aucs_loc) + 0.02
 
 
 def test_federated_kmeans_beats_local_global(split):
