@@ -91,15 +91,31 @@ def client_update(params, data_i, key, rcfg: RouterConfig, fcfg: FedConfig,
     return params, jnp.mean(losses)
 
 
+def _default_aggregator(dp_sigma: float):
+    """The pre-refactor behaviour as a strategy object: plain weighted
+    FedAvg, wrapped in central-DP noise when dp_sigma > 0 (bit-for-bit the
+    old inline branch — same tensordot, same noise keys). Imported lazily:
+    repro.fed is the higher layer."""
+    from repro.fed.aggregators import FedAvgAggregator, GaussianDPAggregator
+    if dp_sigma > 0.0:
+        return GaussianDPAggregator(sigma=dp_sigma)
+    return FedAvgAggregator()
+
+
 def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
                  opt, max_steps: int, *, full_batch=False, freeze=None,
-                 distill=None, client_mask=None, dp_sigma: float = 0.0):
-    """One communication round: local updates on active clients + weighted
-    aggregation (Alg. 1 lines 3–11). dp_sigma > 0 adds server-side Gaussian
-    noise to the aggregate (central-DP flavour of the paper's privacy
-    motivation; composes with secure aggregation, which is orthogonal)."""
+                 distill=None, client_mask=None, dp_sigma: float = 0.0,
+                 aggregator=None):
+    """One communication round: local updates on active clients + server
+    aggregation (Alg. 1 lines 3–11) through a pluggable strategy
+    (``repro.fed.aggregators``). The default is plain weighted FedAvg;
+    pass ``aggregator=`` for secure-agg masking or custom strategies.
+    dp_sigma > 0 wraps whichever strategy runs in server-side Gaussian
+    noise on the aggregate (central-DP flavour of the paper's privacy
+    motivation — bit-for-bit the old inline branch on the default path,
+    and composing over explicit strategies instead of being dropped)."""
     N = data["x"].shape[0]
-    key, k_sel, k_cli, k_dp = jax.random.split(key, 4)
+    key, k_sel, k_cli, k_agg = jax.random.split(key, 4)
     n_active = max(1, int(round(fcfg.participation * N)))
     perm = jax.random.permutation(k_sel, N)
     active = jnp.zeros((N,)).at[perm[:n_active]].set(1.0)
@@ -114,25 +130,25 @@ def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
         params, data, jax.random.split(k_cli, N))
 
     wts = dataset_sizes(data) * active
-    wts = wts / jnp.maximum(jnp.sum(wts), 1e-12)
-    new_params = jax.tree.map(
-        lambda stacked: jnp.tensordot(wts, stacked.astype(jnp.float32),
-                                      axes=1).astype(stacked.dtype),
-        client_params)
-    if dp_sigma > 0.0:
-        leaves, treedef = jax.tree.flatten(new_params)
-        keys = jax.random.split(k_dp, len(leaves))
-        leaves = [l + dp_sigma * jax.random.normal(k, l.shape, l.dtype)
-                  for l, k in zip(leaves, keys)]
-        new_params = jax.tree.unflatten(treedef, leaves)
-    avg_loss = jnp.sum(client_loss * wts)
+    if aggregator is None:
+        agg = _default_aggregator(dp_sigma)
+    elif dp_sigma > 0.0:
+        # dp composes over any strategy (it is server-side noise on the
+        # aggregate) — never silently drop the privacy knob
+        from repro.fed.aggregators import GaussianDPAggregator
+        agg = GaussianDPAggregator(sigma=dp_sigma, inner=aggregator)
+    else:
+        agg = aggregator
+    new_params = agg(client_params, wts, k_agg)
+    wn = wts / jnp.maximum(jnp.sum(wts), 1e-12)
+    avg_loss = jnp.sum(client_loss * wn)
     return new_params, avg_loss
 
 
 def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            rounds: Optional[int] = None, optimizer: str = "adamw",
            init=None, full_batch: bool = False, freeze=None, distill=None,
-           client_mask=None, dp_sigma: float = 0.0,
+           client_mask=None, dp_sigma: float = 0.0, aggregator=None,
            eval_fn: Optional[Callable] = None, eval_every: int = 1):
     """Run T rounds of Algorithm 1. Returns (params, history dict).
 
@@ -145,6 +161,11 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     keeping a round-level loss curve and an every-E eval curve). Params
     and losses stay bit-for-bit identical to the per-round loop; the eval
     list gets one entry per chunk boundary (after rounds E, 2E, ..., T).
+
+    ``aggregator`` selects the server aggregation strategy
+    (``repro.fed.aggregators``); None keeps the plain-FedAvg (+ optional
+    dp_sigma noise) default. Hashable strategies (the built-in frozen
+    dataclasses) ride the module-level compiled-fit caches.
     """
     rounds = rounds if rounds is not None else fcfg.rounds
     D_max = data["x"].shape[1]
@@ -155,10 +176,18 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
                                                              cfg=rcfg)
     # Hashable-config fits reuse module-level compiled functions (repeated
     # fits — restarts, sweeps, benchmarks — compile once per config+shape);
-    # pytree-carrying knobs (freeze/distill/client_mask) build a fresh jit.
+    # pytree-carrying knobs (freeze/distill/client_mask) and unhashable
+    # custom aggregators build a fresh jit.
     # Keep `simple`/`cfg_key` in sync with _round_partial's signature.
-    simple = freeze is None and distill is None and client_mask is None
-    cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma)
+    try:
+        hash(aggregator)
+        agg_hashable = True
+    except TypeError:
+        agg_hashable = False
+    simple = (freeze is None and distill is None and client_mask is None
+              and agg_hashable)
+    cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
+               aggregator)
 
     if eval_fn is None:
         if simple:
@@ -240,28 +269,30 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
 
 
 def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                   freeze=None, distill=None, client_mask=None):
+                   aggregator, freeze=None, distill=None, client_mask=None):
     """The one place a fedavg_round closure is built — every fit path
     (cached or not) goes through it, so a new knob can't silently diverge
     between the cached and fresh-jit variants."""
     return functools.partial(
         fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=_make_opt(fcfg, optimizer),
         max_steps=max_steps, full_batch=full_batch, freeze=freeze,
-        distill=distill, client_mask=client_mask, dp_sigma=dp_sigma)
+        distill=distill, client_mask=client_mask, dp_sigma=dp_sigma,
+        aggregator=aggregator)
 
 
 @functools.lru_cache(maxsize=64)
-def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma):
+def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
+                     aggregator):
     return jax.jit(_round_partial(rcfg, fcfg, optimizer, max_steps,
-                                  full_batch, dp_sigma))
+                                  full_batch, dp_sigma, aggregator))
 
 
 @functools.lru_cache(maxsize=64)
 def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     rounds, donate):
+                     aggregator, rounds, donate):
     return _make_scan_fit(
         _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch,
-                       dp_sigma),
+                       dp_sigma, aggregator),
         rounds, donate=donate)
 
 

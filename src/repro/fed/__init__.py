@@ -1,0 +1,48 @@
+"""Online federation runtime: serve → harvest → federate → hot-swap.
+
+The paper's premise is that query–model evaluations are born at clients,
+during serving. This subsystem closes that loop around the serving stack:
+
+  * ``aggregators`` — pluggable server-side aggregation strategies for the
+    FedAvg round (plain weighted FedAvg, pairwise-masked secure
+    aggregation, central-DP noise) — ``core/federated.py`` dispatches
+    every fit path through them.
+  * ``harvest``     — bounded per-client ``EvalBuffer``s fed by live
+    serving: every routed request appends (query embedding, chosen model,
+    outcome, cost) to the submitting client's local log, producing exactly
+    the sparse, non-uniform-coverage evaluation matrices the paper assumes.
+  * ``loop``        — the ``FedLoop`` scheduler: federated refits over the
+    harvested buffers interleaved with engine decode chunks, hot-swapping
+    versioned router state into the route path with zero retraces.
+  * ``scenarios``   — traffic simulators (client heterogeneity, drift,
+    stragglers, mid-run model onboarding) and the online-vs-frozen
+    comparison behind ``BENCH_fedloop.json``.
+
+``loop`` and ``scenarios`` import the serving stack, so they are exposed
+lazily — ``core/federated.py`` importing ``repro.fed.aggregators`` for its
+default strategy stays cycle-free.
+"""
+from repro.fed.aggregators import (Aggregator, FedAvgAggregator,
+                                   GaussianDPAggregator, SecureAggAggregator)
+from repro.fed.harvest import EvalBuffer, HarvestStore
+
+__all__ = [
+    "Aggregator", "FedAvgAggregator", "GaussianDPAggregator",
+    "SecureAggAggregator", "EvalBuffer", "HarvestStore",
+    "FedLoop", "FedLoopConfig", "personalize_client",
+    "ScenarioConfig", "TrafficScenario", "run_online_vs_frozen",
+]
+
+_LAZY = {
+    "FedLoop": "loop", "FedLoopConfig": "loop", "personalize_client": "loop",
+    "ScenarioConfig": "scenarios", "TrafficScenario": "scenarios",
+    "run_online_vs_frozen": "scenarios",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.fed' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.fed.{mod}"), name)

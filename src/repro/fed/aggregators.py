@@ -1,0 +1,135 @@
+"""Pluggable server-side aggregation strategies (Alg. 1 line 11).
+
+``core/federated.fedavg_round`` dispatches its aggregation step through one
+of these instead of a hard-coded branch, so secure aggregation and DP noise
+ride the same scan-fused/cached fit paths as plain FedAvg. Every strategy
+implements
+
+    aggregator(client_params, wts, key) -> new_params
+
+where ``client_params`` is the stacked (N-leading) client-update pytree,
+``wts`` the raw per-client aggregation weights (dataset sizes × the round's
+active mask — zero for inactive clients), and ``key`` the round's
+aggregation PRNG key (the same stream the legacy ``dp_sigma`` path drew
+noise from).
+
+Strategies are frozen dataclasses: hashable, so the compiled-fit caches in
+``core/federated.py`` can key on them — a fit with the same aggregator
+reuses its compiled scan. An unhashable custom strategy still works; it
+just gets a fresh jit per fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secure_agg as SA
+
+
+def _normalize(wts: jnp.ndarray) -> jnp.ndarray:
+    """The legacy fedavg weight normalization, verbatim — every strategy
+    shares it so the plain path stays bit-for-bit the pre-refactor code."""
+    return wts / jnp.maximum(jnp.sum(wts), 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """Base strategy; subclass and implement ``__call__``."""
+
+    def __call__(self, client_params, wts, key):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgAggregator(Aggregator):
+    """Plain weighted FedAvg — bit-for-bit the pre-refactor aggregation
+    (normalize, f32 tensordot over the client axis, cast back)."""
+
+    def __call__(self, client_params, wts, key):
+        wn = _normalize(wts)
+        return jax.tree.map(
+            lambda s: jnp.tensordot(wn, s.astype(jnp.float32),
+                                    axes=1).astype(s.dtype),
+            client_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggAggregator(Aggregator):
+    """Pairwise-masked FedAvg (Bonawitz et al. 2016, via
+    ``core/secure_agg``): every pair of round participants derives a shared
+    mask from the round key; each client folds its pair masks (+ below the
+    partner id, − above) into its upload, so the server's weighted sum
+    carries every mask once with each sign and learns only the aggregate.
+
+    Simulation notes: masks are gated by the round's participant set
+    (``wts > 0`` — in the real protocol the key-agreement round fixes the
+    participants before masking, so a dropped client's masks are never
+    sent), and each client folds its net mask into the update it uploads so
+    the server-side reduction is the *same tensordot* as plain FedAvg. That
+    makes cancellation structural: with ``scale=0`` the masks are exact
+    zeros and the result is bit-identical to ``FedAvgAggregator``
+    (test-enforced); with ``scale>0`` the masks cancel to float rounding
+    (~1e-6·scale per parameter).
+
+    Mask generation is O(N²) in the client count — fine for the simulated
+    cohorts this repo runs; the real protocol's key agreement amortizes it.
+    """
+
+    scale: float = 10.0
+
+    def __call__(self, client_params, wts, key):
+        N = int(wts.shape[0])
+        wn = _normalize(wts)
+        active = (wts > 0).astype(jnp.float32)       # the participant set
+        unit = jax.tree.map(lambda s: s[0], client_params)
+        nets = []
+        for i in range(N):
+            net = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), unit)
+            for j in range(N):
+                if j == i:
+                    continue
+                m = SA._mask_like(SA._pair_key(key, i, j), unit, self.scale)
+                sign = 1.0 if i < j else -1.0
+                net = jax.tree.map(
+                    lambda n, mm: n + sign * active[j] * mm, net, m)
+            nets.append(net)
+        net_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *nets)
+        # Client i uploads θ_i + net_i/w̃_i (it knows its own round weight),
+        # so the server's weighted tensordot carries exactly w̃_i·θ_i +
+        # net_i — the masked weighted sum — through the identical reduction
+        # the plain path uses. Inactive clients (w̃ = 0) upload nothing.
+        inv = jnp.where(wn > 0, 1.0 / jnp.maximum(wn, 1e-30), 0.0)
+
+        def leaf(s, m):
+            shape = (N,) + (1,) * (s.ndim - 1)
+            upload = s.astype(jnp.float32) + inv.reshape(shape) * m
+            return jnp.tensordot(wn, upload, axes=1).astype(s.dtype)
+
+        return jax.tree.map(leaf, client_params, net_stack)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianDPAggregator(Aggregator):
+    """Server-side Gaussian noise on the aggregate (the central-DP flavour
+    of the paper's privacy motivation), composing over any inner strategy.
+    With the default FedAvg inner this is bit-for-bit the legacy
+    ``fedavg(dp_sigma=...)`` path: the noise is keyed by the round's
+    aggregation key exactly as before, and the inner strategy receives a
+    folded key so its own randomness (e.g. secure-agg masks) never
+    correlates with the noise."""
+
+    sigma: float = 0.0
+    inner: Aggregator = FedAvgAggregator()
+
+    def __call__(self, client_params, wts, key):
+        out = self.inner(client_params, wts, jax.random.fold_in(key, 1))
+        if self.sigma <= 0.0:
+            return out
+        leaves, treedef = jax.tree.flatten(out)
+        keys = jax.random.split(key, len(leaves))
+        leaves = [l + self.sigma * jax.random.normal(k, l.shape, l.dtype)
+                  for l, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,141 @@
+"""Harvest layer: bounded per-client evaluation logs fed by live serving.
+
+Every routed request appends (query embedding, chosen model id, outcome
+score, cost) to the submitting client's ``EvalBuffer`` — producing exactly
+the sparse, non-uniform-coverage evaluation matrices the paper assumes
+(clients only ever observe the models they were routed to). The
+``HarvestStore`` groups buffers by client and exposes the stacked, padded
+federated view ``core/federated.py`` trains on.
+
+Memory discipline: an ``EvalBuffer`` is a fixed-capacity numpy ring (the
+deque-style cap the engine's ``TRACE_LOG`` uses) — sustained traffic
+overwrites the oldest entries and host memory stays constant, test-pinned
+in tests/test_fedloop.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EvalBuffer:
+    """One client's bounded local (x, m, acc, cost) log, oldest-evicting."""
+
+    def __init__(self, d_emb: int, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError("EvalBuffer capacity must be >= 1")
+        self.d_emb = int(d_emb)
+        self.capacity = int(capacity)
+        self._x = np.zeros((self.capacity, self.d_emb), np.float32)
+        self._m = np.zeros((self.capacity,), np.int32)
+        self._acc = np.zeros((self.capacity,), np.float32)
+        self._cost = np.zeros((self.capacity,), np.float32)
+        self._total = 0  # lifetime appends; write head is _total % capacity
+
+    def append(self, x, m: int, acc: float, cost: float) -> None:
+        i = self._total % self.capacity
+        self._x[i] = np.asarray(x, np.float32).reshape(self.d_emb)
+        self._m[i] = int(m)
+        self._acc[i] = float(acc)
+        self._cost[i] = float(cost)
+        self._total += 1
+
+    def __len__(self) -> int:
+        return min(self._total, self.capacity)
+
+    @property
+    def total_seen(self) -> int:
+        """Lifetime appends (>= len once the ring has wrapped)."""
+        return self._total
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held — constant for the buffer's lifetime."""
+        return (self._x.nbytes + self._m.nbytes + self._acc.nbytes
+                + self._cost.nbytes)
+
+    def _order(self) -> np.ndarray:
+        """Row indices in chronological (oldest → newest) order."""
+        n = len(self)
+        if self._total <= self.capacity:
+            return np.arange(n)
+        return (np.arange(n) + self._total) % self.capacity
+
+    def as_client_data(self, pad_to: int | None = None) -> Dict[str, np.ndarray]:
+        """Flat ``{"x","m","acc","cost","w"}`` in chronological order,
+        zero-padded to ``pad_to`` rows (w marks real rows) — the layout
+        ``fit_local`` and one client row of the federated stack expect."""
+        n = len(self)
+        D = int(pad_to) if pad_to is not None else max(n, 1)
+        if n > D:
+            raise ValueError(f"buffer holds {n} rows > pad_to={D}")
+        order = self._order()
+        out = {"x": np.zeros((D, self.d_emb), np.float32),
+               "m": np.zeros((D,), np.int32),
+               "acc": np.zeros((D,), np.float32),
+               "cost": np.zeros((D,), np.float32),
+               "w": np.zeros((D,), np.float32)}
+        out["x"][:n] = self._x[order]
+        out["m"][:n] = self._m[order]
+        out["acc"][:n] = self._acc[order]
+        out["cost"][:n] = self._cost[order]
+        out["w"][:n] = 1.0
+        return out
+
+
+class HarvestStore:
+    """client id → ``EvalBuffer``, plus the stacked federated view.
+
+    Pre-registering the expected clients (``clients=range(N)``) keeps the
+    federated stack's client dimension — and therefore the compiled scan
+    fit's shapes — stable from the very first sync."""
+
+    def __init__(self, d_emb: int, capacity: int = 1024,
+                 clients: Iterable[int] = ()):
+        self.d_emb = int(d_emb)
+        self.capacity = int(capacity)
+        self._buffers: Dict[int, EvalBuffer] = {}
+        for c in clients:
+            self.buffer(c)
+
+    def buffer(self, client_id: int) -> EvalBuffer:
+        b = self._buffers.get(int(client_id))
+        if b is None:
+            b = self._buffers[int(client_id)] = EvalBuffer(self.d_emb,
+                                                           self.capacity)
+        return b
+
+    def record(self, client_id: int, x, m: int, acc: float,
+               cost: float) -> None:
+        self.buffer(client_id).append(x, m, acc, cost)
+
+    def client_ids(self) -> list[int]:
+        return sorted(self._buffers)
+
+    def __len__(self) -> int:
+        """Samples currently held across every client buffer."""
+        return sum(len(b) for b in self._buffers.values())
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._buffers.values())
+
+    def as_federated_data(self, pad_to: int | None = None) -> Dict[str, jnp.ndarray]:
+        """Stacked, padded ``(N, D, ...)`` arrays over sorted client ids —
+        exactly ``core/federated.py``'s client dataset layout, in
+        deterministic (client id, chronological) order so an offline
+        ``fit_federated`` over the same buffers reproduces an online sync
+        bit-for-bit. ``pad_to=None`` pads to the fullest buffer;
+        ``pad_to=capacity`` keeps D static so the compiled scan fit never
+        retraces across syncs."""
+        ids = self.client_ids()
+        if not ids:
+            raise ValueError("no harvested clients — nothing to federate")
+        D = (int(pad_to) if pad_to is not None
+             else max(max(len(self._buffers[c]) for c in ids), 1))
+        rows = [self._buffers[c].as_client_data(D) for c in ids]
+        stacked = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+        return jax.tree.map(jnp.asarray, stacked)

@@ -1,0 +1,146 @@
+"""Loop layer: the FedLoop scheduler — serve → harvest → federate → swap.
+
+A ``FedLoop`` wraps a ``RoutedServer`` (with a ``HarvestStore`` attached)
+and interleaves federated refits over the harvested client buffers with the
+engine's decode chunks:
+
+  * ``step()`` advances every busy engine lane one chunk (exactly
+    ``RoutedServer.step``) and, at ``sync_every``-chunk boundaries with
+    enough harvested samples, runs a federated sync.
+  * ``sync()`` is literally ``routers.fit_federated`` over
+    ``harvest.as_federated_data()`` starting from the live router's state —
+    so an offline fit over the same buffers with the same key reproduces an
+    online sync bit-for-bit (test-enforced) — followed by
+    ``server.swap_router_state``: the refit state enters the cached route
+    jit as a traced argument, ZERO retraces, while decode keeps running.
+  * ``onboard_model()`` admits a new ``PoolModel`` mid-run (§6.3): new head
+    columns trained on calibration evals, pool extended, expanded router
+    installed (one route retrace for the new head shape — decode programs
+    untouched).
+
+Padding harvested data to the buffer capacity (``pad_to_capacity``, the
+default) keeps the federated stack's shapes static across syncs, so the
+compiled scan fit from ``core/federated.py`` is built once and every later
+sync is a pure cache hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import routers
+from repro.config import FedConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FedLoopConfig:
+    sync_every: int = 16      #: engine chunks between federated syncs
+    rounds_per_sync: int = 4  #: FedAvg rounds per sync (ignored by one-shot
+    #: families, which refit from scratch each sync)
+    min_samples: int = 16     #: total harvested samples required to sync
+    pad_to_capacity: bool = True  #: pad the federated stack to the buffer
+    #: capacity — static shapes, one compile for every sync
+
+
+class FedLoop:
+    """Online federation runtime over one ``RoutedServer``.
+
+    Owns the PRNG stream for the online refits, so a loop run is exactly
+    reproducible from its seed; ``history`` records one entry per sync
+    (router version, per-round losses, harvested sample count).
+    """
+
+    def __init__(self, server, fcfg: FedConfig, *, key,
+                 aggregator=None, cfg: Optional[FedLoopConfig] = None):
+        if server.harvest is None:
+            raise ValueError("FedLoop needs a RoutedServer with a "
+                             "HarvestStore attached (harvest=...)")
+        self.server = server
+        self.fcfg = fcfg
+        self.aggregator = aggregator
+        self.cfg = cfg or FedLoopConfig()
+        self._key = key
+        self._chunks = 0
+        self.history: List[Dict[str, Any]] = []
+
+    @property
+    def version(self) -> int:
+        """The served router version (bumped by syncs and onboarding)."""
+        return self.server.router_version
+
+    # ------------------------------------------------------------- serving
+    def step(self) -> List[Tuple[int, np.ndarray]]:
+        """One engine chunk on every busy lane; a federated sync fires at
+        ``sync_every`` boundaries once ``min_samples`` are harvested.
+        Returns the requests finished this chunk, like ``server.step``."""
+        finished = self.server.step()
+        self._chunks += 1
+        if self._chunks % self.cfg.sync_every == 0:
+            self.maybe_sync()
+        return finished
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Step (with sync boundaries) until every lane is idle."""
+        out: Dict[int, np.ndarray] = {}
+        while self.server.engine.busy:
+            out.update(self.step())
+        return out
+
+    # ---------------------------------------------------------- federation
+    def maybe_sync(self):
+        """Sync iff enough evaluations are harvested; None otherwise."""
+        if len(self.server.harvest) < self.cfg.min_samples:
+            return None
+        return self.sync()
+
+    def sync(self, *, key=None) -> dict:
+        """One federated refit over the harvested buffers + hot-swap.
+
+        Exactly ``routers.fit_federated(server.router, harvested, fcfg)``
+        from the live router's state — deterministically harvested buffers
+        therefore reproduce an offline fit bit-for-bit (test-enforced).
+        Returns the fit history."""
+        harvest = self.server.harvest
+        if len(harvest) == 0:
+            raise ValueError("sync() with empty harvest buffers would "
+                             "aggregate zero-weight clients — serve some "
+                             "traffic first (maybe_sync gates on "
+                             "min_samples)")
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        data = harvest.as_federated_data(
+            pad_to=harvest.capacity if self.cfg.pad_to_capacity else None)
+        kw = {} if self.aggregator is None else {
+            "aggregator": self.aggregator}
+        new_router, hist = routers.fit_federated(
+            self.server.router, data, self.fcfg, key=key,
+            rounds=self.cfg.rounds_per_sync, **kw)
+        self.server.swap_router_state(new_router.state)
+        self.history.append({"version": self.version,
+                             "loss": hist["loss"],
+                             "samples": len(harvest)})
+        return hist
+
+    def onboard_model(self, pm, calib: dict, *, key,
+                      steps: int = 100) -> None:
+        """Mid-run pool expansion (§6.3): train the new model's head
+        column on the calibration evals, then install model + expanded
+        router. One model per call — ``server.add_model`` admits exactly
+        one PoolModel."""
+        router = self.server.router.onboard_model(
+            calib, key=key, fcfg=self.fcfg, n_new=1, steps=steps)
+        self.server.add_model(pm, router)
+
+
+def personalize_client(fed_router, local_router, data_i: dict):
+    """§6.4 composed with the loop: mix the FedLoop-produced global router
+    with a client's locally fitted router, weighted per model by
+    calibration errors on the client's own harvested samples
+    (``EvalBuffer.as_client_data()``). Returns (predict_fn, (w_acc,
+    w_cost)) exactly like ``core.personalization.make_personalized``."""
+    from repro.core import personalization as P
+    return P.make_personalized(fed_router.predict, local_router.predict,
+                               data_i, fed_router.num_models)

@@ -1,0 +1,292 @@
+"""Scenario layer: traffic simulators driving the online federation runtime.
+
+A ``TrafficScenario`` owns a synthetic evaluation corpus (the RouterBench
+anatomy from ``data/synthetic.py``) and generates deterministic arrival
+schedules over heterogeneous clients:
+
+  * **query heterogeneity** — per-client Dirichlet mixtures over the
+    corpus task clusters (the paper's §6 partition, but arriving live);
+  * **distribution drift** — client mixtures re-drawn (interpolated by
+    ``drift``) at every phase boundary, so a frozen router's world moves
+    from under it;
+  * **stragglers / partial participation** — a fraction of clients submits
+    only a fraction of its turns, so its buffers stay thin and its
+    federated weight small;
+  * **mid-run model onboarding** — a reserved corpus model column joins
+    the pool mid-run (§6.3) through ``FedLoop.onboard_model``.
+
+Everything is seed-deterministic: arrivals, outcomes and test sets never
+consult the wall clock, so ``run_online_vs_frozen`` produces identical
+metrics on every run — CI can enforce the online-vs-frozen AUC floor
+(``BENCH_fedloop.json``) without a statistical fudge factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import routers
+from repro.config import FedConfig, ModelConfig, RouterConfig
+from repro.core import policy
+from repro.data.synthetic import make_eval_corpus
+from repro.fed.harvest import HarvestStore
+from repro.fed.loop import FedLoop, FedLoopConfig
+
+_WORDS = ("route the query to a model that answers well and cheaply "
+          "summarize prove draft review plan code data chart essay").split()
+
+#: tiny attention arch shared by every simulated pool entry — one compiled
+#: program set serves the whole pool (names/costs differ per PoolModel).
+SIM_MODEL = ModelConfig(name="sim-tiny", arch_type="dense", n_layers=2,
+                        d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                        vocab=101, head_dim=16, dtype="float32")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    n_clients: int = 6
+    n_tasks: int = 6
+    n_models: int = 3          #: pool size at t=0
+    d_emb: int = 32
+    n_queries: int = 1500      #: corpus size the traffic samples from
+    queries_per_phase: int = 96
+    phases: int = 2
+    dirichlet_alpha: float = 0.35  #: client task concentration (lower =
+    #: more heterogeneous)
+    drift: float = 1.0         #: 0 = static mixtures, 1 = fully re-drawn
+    straggler_frac: float = 0.34   #: fraction of clients that straggle
+    straggler_rate: float = 0.25   #: a straggler submits this share of turns
+    lam_choices: Tuple[float, ...] = (0.2, 0.5, 2.0)
+    max_new: int = 4
+    test_queries: int = 64     #: per (client, phase) evaluation draw
+    seed: int = 0
+
+
+class TrafficScenario:
+    """Deterministic heterogeneous traffic over a synthetic eval corpus."""
+
+    def __init__(self, cfg: ScenarioConfig, *, n_reserved_models: int = 0):
+        self.cfg = cfg
+        self.n_reserved = int(n_reserved_models)
+        m_total = cfg.n_models + self.n_reserved
+        self.corpus = make_eval_corpus(
+            jax.random.PRNGKey(cfg.seed), n_queries=cfg.n_queries,
+            n_tasks=cfg.n_tasks, n_models=m_total, d_emb=cfg.d_emb)
+        task = np.asarray(self.corpus["task"])
+        self._task_idx = [np.where(task == t)[0] for t in range(cfg.n_tasks)]
+        rng = np.random.default_rng(cfg.seed)
+        mix = rng.dirichlet(np.full(cfg.n_tasks, cfg.dirichlet_alpha),
+                            size=cfg.n_clients)
+        self.mixtures = [mix]
+        for _ in range(1, cfg.phases):
+            fresh = rng.dirichlet(np.full(cfg.n_tasks, cfg.dirichlet_alpha),
+                                  size=cfg.n_clients)
+            mix = (1.0 - cfg.drift) * mix + cfg.drift * fresh
+            mix = mix / mix.sum(axis=1, keepdims=True)
+            self.mixtures.append(mix)
+        n_strag = int(round(cfg.straggler_frac * cfg.n_clients))
+        self.stragglers = set(
+            rng.choice(cfg.n_clients, size=n_strag, replace=False).tolist())
+        self._outcome_rng = np.random.default_rng(cfg.seed + 7919)
+
+    # ------------------------------------------------------------- traffic
+    def events(self, phase: int) -> List[Tuple[int, int, float]]:
+        """Deterministic arrival list for one phase: (client, query idx,
+        λ). Stragglers skip most of their turns — their buffers stay thin
+        and their federated weight small (the paper's partial-coverage
+        clients)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed * 1000 + 13 * phase + 1)
+        out = []
+        for _ in range(cfg.queries_per_phase):
+            c = int(rng.integers(cfg.n_clients))
+            if c in self.stragglers and rng.random() > cfg.straggler_rate:
+                continue
+            t = int(rng.choice(cfg.n_tasks, p=self.mixtures[phase][c]))
+            q = int(rng.choice(self._task_idx[t]))
+            lam = float(rng.choice(np.asarray(cfg.lam_choices)))
+            out.append((c, q, lam))
+        return out
+
+    def x(self, q: int) -> np.ndarray:
+        return np.asarray(self.corpus["x"][q], np.float32)
+
+    def prompt(self, q: int) -> str:
+        """Deterministic filler text (the routing decision rides the
+        embedding passed via submit(x=...); the prompt only feeds the stub
+        tokenizer)."""
+        return " ".join(_WORDS[(q + i) % len(_WORDS)]
+                        for i in range(3 + q % 5))
+
+    def observe(self, q: int, m: int) -> Tuple[float, float]:
+        """The (acc, cost) the client logs for its routed model — a
+        Bernoulli draw of the latent success probability plus the true
+        cost, like ``data/synthetic.observe`` but host-side and sequential
+        (deterministic given the arrival order)."""
+        p = float(self.corpus["acc_table"][q, m])
+        acc = float(self._outcome_rng.random() < p)
+        return acc, float(self.corpus["cost_table"][q, m])
+
+    # ----------------------------------------------------------- pool/eval
+    def make_pool(self, n_models: Optional[int] = None) -> list:
+        """PoolModels for the first ``n_models`` corpus columns — one
+        shared tiny arch (single compiled program set), per-model costs
+        from the corpus economics."""
+        from repro.models import init_params
+        from repro.serve.gateway import PoolModel
+        n = self.cfg.n_models if n_models is None else n_models
+        params = init_params(jax.random.PRNGKey(self.cfg.seed + 1),
+                             SIM_MODEL)
+        return [PoolModel(f"sim-m{i}", SIM_MODEL, params,
+                          float(self.corpus["model_cost"][i]))
+                for i in range(n)]
+
+    def pool_model(self, m_idx: int):
+        """One more PoolModel (a reserved corpus column) for onboarding."""
+        return self.make_pool(n_models=m_idx + 1)[m_idx]
+
+    def calib_for_model(self, m_idx: int, n: int = 128) -> Dict[str, np.ndarray]:
+        """Calibration evals for onboarding model ``m_idx``: n corpus
+        queries scored against that model — flat {"x","m","acc","cost","w"}
+        with m == m_idx (the expanded pool's new column)."""
+        rng = np.random.default_rng(self.cfg.seed * 31 + m_idx)
+        qs = rng.integers(0, self.cfg.n_queries, size=n)
+        acc = (rng.random(n) < np.asarray(self.corpus["acc_table"])[qs, m_idx])
+        return {"x": np.asarray(self.corpus["x"])[qs].astype(np.float32),
+                "m": np.full((n,), m_idx, np.int32),
+                "acc": acc.astype(np.float32),
+                "cost": np.asarray(self.corpus["cost_table"])[qs, m_idx]
+                .astype(np.float32),
+                "w": np.ones((n,), np.float32)}
+
+    def test_set(self, phase: int, client: int) -> Dict[str, np.ndarray]:
+        """Held-out queries drawn from the client's CURRENT (phase)
+        mixture, with the true acc/cost tables for frontier scoring."""
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed * 4931 + 97 * phase + client)
+        tasks = rng.choice(cfg.n_tasks, size=cfg.test_queries,
+                           p=self.mixtures[phase][client])
+        qs = np.array([rng.choice(self._task_idx[t]) for t in tasks])
+        return {"x": np.asarray(self.corpus["x"])[qs],
+                "acc_table": np.asarray(self.corpus["acc_table"])[qs],
+                "cost_table": np.asarray(self.corpus["cost_table"])[qs]}
+
+
+def _frontier_auc(predict_fn, test: Dict[str, np.ndarray],
+                  n_models: int) -> float:
+    """Frontier AUC of a router on one test draw, scored on the true
+    tables restricted to the models that router can actually route to
+    (a frozen pre-onboarding router never uses a later-joined model)."""
+    *_, auc = policy.eval_router(predict_fn, test["x"],
+                                 test["acc_table"][:, :n_models],
+                                 test["cost_table"][:, :n_models])
+    return float(auc)
+
+
+def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
+                         fcfg: Optional[FedConfig] = None,
+                         lcfg: Optional[FedLoopConfig] = None,
+                         engine_cfg=None, rcfg: Optional[RouterConfig] = None,
+                         aggregator=None, onboard_phase: Optional[int] = None,
+                         local_steps: int = 200, capacity: int = 256,
+                         seed: int = 0) -> dict:
+    """The headline experiment behind ``BENCH_fedloop.json``: live traffic
+    through the serving engine, evaluations harvested per client, and two
+    deployments compared under drift —
+
+      * **online**: one global router maintained by the ``FedLoop``
+        (federated syncs over the harvested buffers, hot-swapped under
+        traffic);
+      * **frozen client-local**: each client fits its own router on its
+        phase-0 harvest and never updates it (the no-federation baseline).
+
+    Both are scored at every phase end as the mean frontier AUC over the
+    clients' current (drifted) query mixtures. Returns the per-phase AUC
+    curves plus loop/serving accounting. Fully deterministic in its seeds.
+    """
+    from repro.serve.engine import EngineConfig
+    from repro.serve.gateway import RoutedServer
+
+    scenario = TrafficScenario(
+        cfg, n_reserved_models=1 if onboard_phase is not None else 0)
+    fcfg = fcfg or FedConfig(num_clients=cfg.n_clients, participation=0.75,
+                             batch_size=32, lr=3e-3)
+    lcfg = lcfg or FedLoopConfig(sync_every=16, rounds_per_sync=4,
+                                 min_samples=24)
+    rcfg = rcfg or RouterConfig(d_emb=cfg.d_emb, num_models=cfg.n_models,
+                                hidden=(32, 32), dropout=0.0)
+    engine_cfg = engine_cfg or EngineConfig(slots=8, max_seq=32, chunk=4,
+                                            page_size=8)
+
+    pool = scenario.make_pool()
+    router0 = routers.make("mlp", rcfg).init(jax.random.PRNGKey(seed + 11))
+    harvest = HarvestStore(cfg.d_emb, capacity=capacity,
+                           clients=range(cfg.n_clients))
+    srv = RoutedServer(pool, router0, engine_cfg=engine_cfg,
+                       harvest=harvest)
+    loop = FedLoop(srv, fcfg, key=jax.random.PRNGKey(seed + 13),
+                   aggregator=aggregator, cfg=lcfg)
+
+    frozen: List = []
+    auc_online: List[float] = []
+    auc_frozen: List[float] = []
+    served = 0
+    for phase in range(cfg.phases):
+        if onboard_phase is not None and phase == onboard_phase:
+            new_idx = cfg.n_models  # the reserved corpus column joins
+            loop.onboard_model(scenario.pool_model(new_idx),
+                               scenario.calib_for_model(new_idx),
+                               key=jax.random.PRNGKey(seed + 17),
+                               steps=150)
+        for (c, q, lam) in scenario.events(phase):
+            rid = srv.submit(scenario.prompt(q), lam=lam,
+                             max_new_tokens=cfg.max_new, client_id=c,
+                             x=scenario.x(q))
+            m = srv.routed_model(rid)
+            srv.report_outcome(rid, *scenario.observe(q, m))
+            loop.step()
+            served += 1
+        loop.drain()
+        loop.maybe_sync()  # absorb the phase tail before scoring
+        if phase == 0:
+            # the no-federation deployment: client-local fits on exactly
+            # what each client harvested in phase 0, frozen forever after.
+            # A straggler with (almost) no data keeps the cold-start
+            # router — the same init both deployments began serving with —
+            # so both AUC means always average the SAME client population.
+            for c in range(cfg.n_clients):
+                data_c = harvest.buffer(c).as_client_data()
+                if float(data_c["w"].sum()) < 2:
+                    frozen.append(router0)
+                    continue
+                r, _ = routers.fit_local(
+                    routers.make("mlp", rcfg), data_c, fcfg,
+                    key=jax.random.PRNGKey(seed + 100 + c),
+                    steps=local_steps)
+                frozen.append(r)
+        on, fr = [], []
+        for c in range(cfg.n_clients):
+            test = scenario.test_set(phase, c)
+            on.append(_frontier_auc(srv.router.predict, test,
+                                    srv.router.num_models))
+            fr.append(_frontier_auc(frozen[c].predict, test,
+                                    frozen[c].num_models))
+        auc_online.append(float(np.mean(on)))
+        auc_frozen.append(float(np.mean(fr)))
+
+    return {
+        "auc_online": auc_online,
+        "auc_frozen_local": auc_frozen,
+        "auc_online_final": auc_online[-1],
+        "auc_frozen_local_final": auc_frozen[-1],
+        "auc_gap_final": auc_online[-1] - auc_frozen[-1],
+        "syncs": len(loop.history),
+        "router_version": srv.router_version,
+        "requests_served": served,
+        "harvested_samples": len(harvest),
+        "harvest_bytes": harvest.nbytes,
+        "num_models_final": srv.router.num_models,
+    }

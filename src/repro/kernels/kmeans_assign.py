@@ -7,6 +7,12 @@ never overflows VMEM); −2·x·μᵀ runs on the MXU and the rank-1 ‖μ‖²
 correction + argmin run on the VPU. ‖x‖² is dropped (argmin-invariant), so
 assignment is one matmul + a lane reduction per (query, centroid) tile.
 
+Very wide embeddings additionally tile the feature dimension: beyond
+``block_d`` columns (default 2048 — full rows of d ≈ 8k would blow VMEM on
+real hardware) the grid grows an innermost d axis that accumulates the
+x·μᵀ partials and ‖μ‖² in VMEM scratch, deferring the argmin merge to the
+last d tile. d ≤ block_d keeps the original single-pass kernels.
+
 ``kmeans_assign_reduce_pallas`` additionally fuses the Lloyd's-step update
 into the same pass: the per-tile one-hot of the argmin feeds a second MXU
 matmul that accumulates per-cluster weighted coordinate sums and counts
@@ -67,23 +73,93 @@ def _assign_kernel(x_ref, c_ref, bias_ref, out_ref, min_s):
         min_s[...] = jnp.minimum(blk_min[:, None], min_s[...])
 
 
+def _assign_kernel_dtiled(x_ref, c_ref, bias_ref, out_ref, min_s, xc_s,
+                          c2_s, *, nd: int):
+    """d-tiled variant: grid (query tile, centroid tile, d tile) with d
+    innermost. Each d step accumulates this (query, centroid) pair's x·μᵀ
+    partial and the centroid-norm partial into VMEM scratch; the last d
+    step forms the distances and merges the block argmin into the running
+    (min, argmin) exactly like the single-pass kernel."""
+    k = pl.program_id(1)
+    dt = pl.program_id(2)
+    bk = c_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)          # (BN, BD)
+    c = c_ref[...].astype(jnp.float32)          # (BK, BD)
+    part = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BN, BK) — MXU
+    pc2 = jnp.sum(c * c, axis=1)[None, :]       # (1, BK)
+
+    @pl.when(dt == 0)
+    def _():
+        xc_s[...] = part
+        c2_s[...] = pc2
+
+    @pl.when(dt > 0)
+    def _():
+        xc_s[...] += part
+        c2_s[...] += pc2
+
+    # merge only once the full-d distance is assembled (the reduction work
+    # is gated on the last d tile — earlier tiles only accumulate); the
+    # block stays VMEM-resident across its consecutive (k, d) revisits
+    @pl.when(dt == nd - 1)
+    def _():
+        dist = c2_s[...] - 2.0 * xc_s[...] + bias_ref[...]
+        blk_min = jnp.min(dist, axis=1)
+        blk_arg = jnp.argmin(dist, axis=1).astype(jnp.int32) + k * bk
+        # strict < keeps the earlier tile on ties — global argmin
+        # semantics; the first centroid tile takes unconditionally (the
+        # carry holds the previous query block's leftovers)
+        better = (blk_min < min_s[..., 0]) | (k == 0)
+        out_ref[...] = jnp.where(better, blk_arg, out_ref[...])
+        min_s[...] = jnp.where(better[:, None], blk_min[:, None],
+                               min_s[...])
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_k", "interpret"))
+                   static_argnames=("block_n", "block_k", "block_d",
+                                    "interpret"))
 def kmeans_assign_pallas(x: jnp.ndarray, cents: jnp.ndarray, *,
                          block_n: int = 256, block_k: int = 512,
-                         interpret: bool = True):
+                         block_d: int = 2048, interpret: bool = True):
     """x: (n, d), cents: (K, d) → (n,) int32."""
     n, d = x.shape
     K = cents.shape[0]
     assert block_k % 128 == 0, "block_k must be lane-aligned (multiple of 128)"
+    assert block_d % 128 == 0, "block_d must be lane-aligned (multiple of 128)"
 
     n_p, d_p = _rup(n, block_n), _rup(d, 128)
     bk = min(block_k, _rup(max(K, 8), 128))
     k_p = _rup(max(K, 8), bk)
-    x_p = _pad2(x, n_p, d_p)
-    c_p = _pad2(cents, k_p, d_p)
     bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]  # (1, k_p)
 
+    if d_p > block_d:                           # wide-d: tile the features
+        d_p = _rup(d, block_d)
+        nd = d_p // block_d
+        x_p = _pad2(x, n_p, d_p)
+        c_p = _pad2(cents, k_p, d_p)
+        out = pl.pallas_call(
+            functools.partial(_assign_kernel_dtiled, nd=nd),
+            grid=(n_p // block_n, k_p // bk, nd),   # d innermost
+            in_specs=[
+                pl.BlockSpec((block_n, block_d), lambda i, k, dt: (i, dt)),
+                pl.BlockSpec((bk, block_d), lambda i, k, dt: (k, dt)),
+                pl.BlockSpec((1, bk), lambda i, k, dt: (0, k)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i, k, dt: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
+            scratch_shapes=[
+                pltpu.VMEM((block_n, 1), jnp.float32),   # running min carry
+                pltpu.VMEM((block_n, bk), jnp.float32),  # x·μᵀ accumulator
+                pltpu.VMEM((1, bk), jnp.float32),        # ‖μ‖² accumulator
+            ],
+            interpret=interpret,
+        )(x_p, c_p, bias)
+        return out[:n]
+
+    x_p = _pad2(x, n_p, d_p)
+    c_p = _pad2(cents, k_p, d_p)
     grid = (n_p // block_n, k_p // bk)  # centroid tiles innermost
     out = pl.pallas_call(
         _assign_kernel,
@@ -172,38 +248,113 @@ def _reduce_tiled_kernel(x_ref, w_ref, assign_ref, sums_ref, cnts_ref, *,
         cnts_ref[...] += part_cnts
 
 
+def _reduce_tiled_kernel_d(x_ref, w_ref, assign_ref, sums_ref, cnts_ref, *,
+                           bk: int):
+    """Weighted one-hot reduction for one (centroid tile, d tile) output
+    block, streaming query tiles innermost: grid (nk, nd, nq). The sums
+    block stays VMEM-resident across its consecutive query steps; counts
+    are d-independent, so only the dt == 0 sweep accumulates them (their
+    block is resident across the whole (dt, nq) revisit run)."""
+    kt = pl.program_id(0)
+    dt = pl.program_id(1)
+    i = pl.program_id(2)
+    x = x_ref[...].astype(jnp.float32)          # (BN, BD)
+    local = assign_ref[...] - kt * bk           # in [0, bk) iff in this tile
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], bk), 1)
+              == local[:, None]).astype(jnp.float32)
+    wv = onehot * w_ref[...][:, None]           # (BN, BK)
+    part_sums = jax.lax.dot_general(
+        wv, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BK, BD) — MXU
+    part_cnts = jnp.sum(wv, axis=0)             # (BK,)
+
+    @pl.when(i == 0)
+    def _():
+        sums_ref[...] = part_sums
+
+    @pl.when(i > 0)
+    def _():
+        sums_ref[...] += part_sums
+
+    @pl.when((dt == 0) & (i == 0))
+    def _():
+        cnts_ref[...] = part_cnts
+
+    @pl.when((dt == 0) & (i > 0))
+    def _():
+        cnts_ref[...] += part_cnts
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_k", "interpret"))
+                   static_argnames=("block_n", "block_k", "block_d",
+                                    "interpret"))
 def kmeans_assign_reduce_pallas(x: jnp.ndarray, cents: jnp.ndarray,
                                 w: jnp.ndarray, *, block_n: int = 256,
-                                block_k: int = 512,
+                                block_k: int = 512, block_d: int = 2048,
                                 interpret: bool = True):
     """x: (n, d), cents: (K, d), w: (n,) →
     (assign (n,) int32, sums (K, d) f32, counts (K,) f32) where
     sums[k] = Σ_{i: assign_i=k} w_i·x_i and counts[k] = Σ w_i.
 
-    When the centroid table fits one ``block_k`` tile (Lloyd's usual K),
-    assignment and reduction run as ONE fused pass sharing the x·μᵀ
-    matmul. Larger tables tile along K: the shared ``_assign_kernel``
-    block_k loop produces the global argmin, then a reduction kernel with
-    query tiles innermost accumulates each centroid tile's sums/counts —
-    both passes only ever accumulate into VMEM-resident blocks across
-    consecutive grid steps (compiled Pallas TPU does not support
-    non-consecutive output revisits), at the cost of streaming x twice.
+    When the centroid table fits one ``block_k`` tile (Lloyd's usual K)
+    and the rows fit one ``block_d`` tile, assignment and reduction run as
+    ONE fused pass sharing the x·μᵀ matmul. Larger tables tile along K:
+    the shared ``_assign_kernel`` block_k loop produces the global argmin,
+    then a reduction kernel with query tiles innermost accumulates each
+    centroid tile's sums/counts. Rows wider than ``block_d`` additionally
+    tile the feature dimension in both phases (d-tiled assign, then a
+    (centroid, d, query) reduction grid). All variants only ever
+    accumulate into VMEM-resident blocks across consecutive grid steps
+    (compiled Pallas TPU does not support non-consecutive output
+    revisits), at the cost of streaming x twice in the tiled regimes.
     """
     n, d = x.shape
     K = cents.shape[0]
     assert block_k % 128 == 0, "block_k must be lane-aligned (multiple of 128)"
+    assert block_d % 128 == 0, "block_d must be lane-aligned (multiple of 128)"
 
     n_p, d_p = _rup(n, block_n), _rup(d, 128)
     bk = min(block_k, _rup(max(K, 8), 128))
     k_p = _rup(max(K, 8), bk)
     nk = k_p // bk
+    nq = n_p // block_n
+
+    if d_p > block_d:                   # wide-d: d-tiled assign + reduce
+        assign = kmeans_assign_pallas(x, cents, block_n=block_n,
+                                      block_k=block_k, block_d=block_d,
+                                      interpret=interpret)
+        d_p = _rup(d, block_d)
+        nd = d_p // block_d
+        x_p = _pad2(x, n_p, d_p)
+        w_p = (jnp.asarray(w, jnp.float32) if n_p == n
+               else jnp.zeros((n_p,), jnp.float32).at[:n].set(w))
+        assign_p = (assign if n_p == n
+                    else jnp.zeros((n_p,), jnp.int32).at[:n].set(assign))
+        sums, cnts = pl.pallas_call(
+            functools.partial(_reduce_tiled_kernel_d, bk=bk),
+            grid=(nk, nd, nq),                  # query tiles innermost
+            in_specs=[
+                pl.BlockSpec((block_n, block_d),
+                             lambda kt, dt, i: (i, dt)),
+                pl.BlockSpec((block_n,), lambda kt, dt, i: (i,)),
+                pl.BlockSpec((block_n,), lambda kt, dt, i: (i,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bk, block_d), lambda kt, dt, i: (kt, dt)),
+                pl.BlockSpec((bk,), lambda kt, dt, i: (kt,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((k_p, d_p), jnp.float32),
+                jax.ShapeDtypeStruct((k_p,), jnp.float32),
+            ],
+            interpret=interpret,
+        )(x_p, w_p, assign_p)
+        return assign, sums[:K, :d], cnts[:K]
+
     x_p = _pad2(x, n_p, d_p)
     w_p = (jnp.asarray(w, jnp.float32) if n_p == n
            else jnp.zeros((n_p,), jnp.float32).at[:n].set(w))
     bias = jnp.where(jnp.arange(k_p) < K, 0.0, jnp.inf)[None, :]
-    nq = n_p // block_n
 
     if nk == 1:                                 # fused single pass
         c_p = _pad2(cents, k_p, d_p)

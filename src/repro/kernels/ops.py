@@ -31,22 +31,27 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def kmeans_assign(x, cents, *, impl: str | None = None):
+def kmeans_assign(x, cents, *, impl: str | None = None,
+                  block_d: int = 2048):
     impl = impl or _default_impl()
     if impl == "pallas":
-        return kmeans_assign_pallas(x, cents, interpret=_interpret())
+        return kmeans_assign_pallas(x, cents, block_d=block_d,
+                                    interpret=_interpret())
     return ref.kmeans_assign_ref(x, cents)
 
 
 def kmeans_assign_reduce(x, cents, w, *, impl: str | None = None,
-                         block_k: int = 512):
+                         block_k: int = 512, block_d: int = 2048):
     """Fused Lloyd's-step op: nearest-centroid assignment + per-cluster
     weighted coordinate sums and counts in one pass over x. The centroid
     table is streamed through VMEM in ``block_k`` tiles (K in the
-    thousands stays resident)."""
+    thousands stays resident); rows wider than ``block_d`` stream their
+    features in tiles too (very wide embeddings never hold a full row in
+    VMEM)."""
     impl = impl or _default_impl()
     if impl == "pallas":
         return kmeans_assign_reduce_pallas(x, cents, w, block_k=block_k,
+                                           block_d=block_d,
                                            interpret=_interpret())
     return ref.kmeans_assign_reduce_ref(x, cents, w)
 

@@ -200,12 +200,27 @@ def attn_decode_step(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     # Validity: before the window wraps, only slots [0, pos] are filled —
     # per row when pos is a vector ((B, W)), shared otherwise ((1, W)).
     n_valid = jnp.minimum(pos + 1, W)
-    valid = (jnp.arange(W)[None, :] < n_valid[:, None] if per_slot
-             else jnp.arange(W)[None, :] < n_valid)
 
     Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
     qg = q.reshape(B, Hkv, g, hd)
-    out = _masked_grouped_attn(qg, k_cache, v_cache, valid)
+    from repro.kernels import ops as kops
+    if (kops._default_impl() == "pallas" and W % 8 == 0
+            and W % min(512, W) == 0):
+        # TPU: stream the cache through the flash-decoding kernel (online
+        # softmax, f32 accumulation, no f32 cache copy) — the same kernel
+        # the paged path dispatches to; the engine's uniform decode scan
+        # rides this too. The guards keep odd extend_cache lengths (e.g.
+        # S_bucket + max_new = 12: not sublane-aligned; 544: not a
+        # multiple of the 512 seq block) on the jnp path — pool caches
+        # are pow2 and always qualify. Caveat (ROADMAP): the kernel
+        # upcasts k/v tiles to f32 while the jnp path dots in the cache
+        # dtype, so near-tie argmaxes could differ on bf16 on hardware.
+        out = kops.decode_attention(qg, k_cache, v_cache, n_valid)
+        out = out.astype(v_cache.dtype)
+    else:
+        valid = (jnp.arange(W)[None, :] < n_valid[:, None] if per_slot
+                 else jnp.arange(W)[None, :] < n_valid)
+        out = _masked_grouped_attn(qg, k_cache, v_cache, valid)
     out = out.reshape(B, 1, cfg.n_heads * hd)
     return out @ p["wo"], {"k": k_cache, "v": v_cache}
 

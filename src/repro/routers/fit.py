@@ -36,9 +36,10 @@ def fit_federated(router: Router, data: dict, fcfg: FedConfig, *, key,
     iterative families, once for one-shot families). ``mesh`` selects the
     shard_map path for families that support it. ``family_kw`` forwards
     family-specific knobs (optimizer=, distill=, client_mask=, dp_sigma=,
-    ...). With a fixed ``key`` the parametric path reproduces the legacy
-    ``core.federated.fedavg`` results bit-for-bit, and the nonparametric
-    path ``core.kmeans_router.fed_kmeans_router``.
+    aggregator= — a ``repro.fed.aggregators`` strategy for the server
+    aggregation step, ...). With a fixed ``key`` the parametric path
+    reproduces the legacy ``core.federated.fedavg`` results bit-for-bit,
+    and the nonparametric path ``core.kmeans_router.fed_kmeans_router``.
     """
     new_router, hist = router._fit_federated(key, data, fcfg, rounds=rounds,
                                              eval_fn=eval_fn, mesh=mesh,

@@ -114,8 +114,9 @@ class MLPRouter(Router):
                        mesh=None, **kw):
         """Alg. 1. mesh=None → in-process vmap simulation (≡ legacy
         ``fedavg``; kw forwards optimizer/full_batch/freeze/distill/
-        client_mask/dp_sigma). mesh=Mesh(..., ("clients",)) → shard_map
-        across devices; that path supports only optimizer= of the kw."""
+        client_mask/dp_sigma/aggregator). mesh=Mesh(..., ("clients",)) →
+        shard_map across devices; that path supports only optimizer= of
+        the kw (its aggregation is a fixed weighted psum)."""
         init = self._init_for_fit(key)
         wrapped = (None if eval_fn is None
                    else lambda p: eval_fn(self.with_state(p)))

@@ -75,9 +75,11 @@ from repro.serve.kv_cache import (PageTable, alloc_page_pool,
                                   alloc_slot_pool, write_prefill_pages,
                                   write_slot)
 
-#: one entry appended per jit TRACE of an engine/serve function — bounded
-#: so a long-running server can't leak memory; tests assert its length
-#: stays flat after warmup. gateway.py re-exports this same object.
+#: one entry appended per jit TRACE of an engine/serve function (including
+#: the gateway's route program — hot-swapped router state must enter it as
+#: a traced argument, never a retrace) — bounded so a long-running server
+#: can't leak memory; tests assert its length stays flat after warmup and
+#: across router hot-swaps. gateway.py re-exports this same object.
 TRACE_LOG: Deque[tuple] = collections.deque(maxlen=4096)
 
 

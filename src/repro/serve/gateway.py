@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import zlib
-from typing import Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,9 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.data.encoder import encode
 from repro.models import model as mdl
+
+if TYPE_CHECKING:  # repro.fed is the higher layer — type-only import keeps
+    from repro.fed.harvest import HarvestStore  # serve → fed one-directional
 from repro.routers import Router
 # TRACE_LOG lives in engine.py (bounded deque) and is re-exported here so
 # `gateway.TRACE_LOG` keeps working for tests and callers; same for
@@ -50,6 +53,10 @@ from repro.serve.engine import EngineConfig, ServeEngine, TRACE_LOG
 from repro.serve.engine import next_pow2 as _next_pow2
 from repro.serve.engine import reset_trace_log  # noqa: F401
 from repro.serve.kv_cache import extend_cache
+
+#: un-reported harvest entries kept per server (submit → report_outcome);
+#: oldest evicted beyond this so feedback-less traffic can't grow memory.
+PENDING_EVAL_CAP = 8192
 
 
 @dataclasses.dataclass
@@ -116,7 +123,8 @@ class RoutedServer:
 
     def __init__(self, pool: List[PoolModel], router: Router,
                  d_emb: Optional[int] = None,
-                 engine_cfg: Optional[EngineConfig] = None):
+                 engine_cfg: Optional[EngineConfig] = None,
+                 harvest: "Optional[HarvestStore]" = None):
         if not isinstance(router, Router):
             raise TypeError(
                 "RoutedServer takes a repro.routers.Router — build one with "
@@ -149,18 +157,32 @@ class RoutedServer:
         # One continuous-batching engine per server: per-model slot pools
         # are allocated lazily on first traffic to that model.
         self.engine = ServeEngine(pool, engine_cfg)
+        # Harvest layer (repro.fed): per-client EvalBuffers fed by routed
+        # traffic. Outcome scores arrive asynchronously via
+        # report_outcome(); un-reported entries wait (bounded) in
+        # _pending_evals.
+        self.harvest = harvest
+        self._pending_evals: Dict[int, tuple] = {}
+        #: bumped by every swap_router_state/add_model — the "versioned
+        #: router state" the FedLoop publishes into the route path.
+        self.router_version = 0
 
     @staticmethod
     def _make_route_fn(router: Router):
-        return jax.jit(lambda state, x, lam:
-                       router.with_state(state).route(x, lam))
+        def route_fn(state, x, lam):
+            TRACE_LOG.append(("route", type(router).__name__, x.shape))
+            return router.with_state(state).route(x, lam)
+        return jax.jit(route_fn)
 
-    def route(self, prompts: List[str], lam: float) -> np.ndarray:
+    def _route_x(self, x: np.ndarray, lam: float) -> np.ndarray:
+        """Route pre-encoded query embeddings x: (B, d_emb) → (B,) model
+        indices. The jitted decision fn takes state and λ as traced
+        arguments, so hot-swapped router state and per-request λ hit the
+        same compiled program (TRACE_LOG-pinned)."""
         if self.router is not self._route_fn_router:
             self._route_fn = self._make_route_fn(self.router)
             self._route_fn_router = self.router
-        B = len(prompts)
-        x = encode(prompts, self.d_emb)
+        B = x.shape[0]
         B_b = _next_pow2(B)
         if B_b != B:
             x = np.concatenate([x, np.zeros((B_b - B, x.shape[1]),
@@ -169,17 +191,109 @@ class RoutedServer:
                                 jnp.float32(lam))
         return np.asarray(choice)[:B]
 
+    def route(self, prompts: List[str], lam: float) -> np.ndarray:
+        return self._route_x(encode(prompts, self.d_emb), lam)
+
+    # ----------------------------------------------------- router lifecycle
+    def swap_router_state(self, state) -> None:
+        """Hot-swap fitted router state under live traffic. The new state
+        must be the same family and pytree structure (same-shape buffers),
+        so it enters the cached route jit as a traced argument — ZERO
+        retraces, no decode interruption; in-flight requests keep decoding
+        against their already-routed models. Bumps ``router_version``."""
+        new_router = self.router.with_state(state)
+        old_l, old_s = jax.tree.flatten(self.router.state)
+        new_l, new_s = jax.tree.flatten(state)
+        shapes_match = (old_s == new_s and len(old_l) == len(new_l) and all(
+            getattr(a, "shape", None) == getattr(b, "shape", None)
+            and getattr(a, "dtype", None) == getattr(b, "dtype", None)
+            for a, b in zip(old_l, new_l)))
+        if not shapes_match:
+            raise ValueError(
+                "swap_router_state got a different state structure or "
+                "buffer shapes — a structural change (new family, expanded "
+                "pool) is an add_model/replacement, not a hot swap")
+        self.router = new_router
+        # keep the cached jit: the route fn closes over the old router
+        # object only for with_state(), which rebuilds by class + rcfg —
+        # identical for a same-family swap.
+        self._route_fn_router = new_router
+        self.router_version += 1
+
+    def add_model(self, pm: PoolModel, router: Router) -> None:
+        """Onboard a new pool model mid-run (§6.3): append it to the pool
+        (the engine shares the list — its lane and compiled programs build
+        lazily on first traffic) and install the expanded router. The route
+        program re-traces ONCE for the new head shape; every decode
+        program of existing models is untouched."""
+        if router.num_models != len(self.pool) + 1:
+            raise ValueError(
+                f"add_model expects a router expanded to M={len(self.pool) + 1}"
+                f" (got M={router.num_models}) — onboard the router first "
+                "(router.onboard_model)")
+        self.pool.append(pm)
+        self.router = router
+        # rebuild the route program for the new router object — the head
+        # shape changed, so a retrace is due anyway, and a replacement of a
+        # different family must not run through the old closure
+        self._route_fn = self._make_route_fn(router)
+        self._route_fn_router = router
+        self.router_version += 1
+
     # -------------------------------------------------- engine streaming API
     def submit(self, prompt: str, *, lam: float = 0.5,
                max_new_tokens: int = 16,
-               tokenize: Optional[Callable] = None) -> int:
+               tokenize: Optional[Callable] = None,
+               client_id: Optional[int] = None,
+               x: Optional[np.ndarray] = None) -> int:
         """Route one prompt and enqueue it on the continuous-batching
         engine; returns a request id. The request joins the routed model's
         shared decode batch at the next free slot — call ``step()`` to
-        advance in-flight decoding or ``drain()`` to run to completion."""
-        m_idx = int(self.route([prompt], lam)[0])
+        advance in-flight decoding or ``drain()`` to run to completion.
+
+        ``x`` supplies a pre-computed query embedding (simulators, callers
+        with a real encoder) instead of the stub ``encode``. With a
+        ``harvest`` store attached and ``client_id`` given, the request is
+        registered for evaluation harvesting: ``routed_model(rid)`` exposes
+        the choice and ``report_outcome(rid, ...)`` appends the completed
+        (x, model, outcome, cost) observation to that client's EvalBuffer."""
+        x_arr = (encode([prompt], self.d_emb)[0] if x is None
+                 else np.asarray(x, np.float32).reshape(self.d_emb))
+        m_idx = int(self._route_x(x_arr[None], lam)[0])
         toks = self._tokenize([prompt], self.pool[m_idx].cfg, tokenize)[0]
-        return self.engine.submit(m_idx, toks, max_new_tokens)
+        rid = self.engine.submit(m_idx, toks, max_new_tokens)
+        if self.harvest is not None and client_id is not None:
+            cost_est = self.pool[m_idx].cost_per_token * max_new_tokens
+            self._pending_evals[rid] = (int(client_id), x_arr, m_idx,
+                                        cost_est)
+            while len(self._pending_evals) > PENDING_EVAL_CAP:
+                self._pending_evals.pop(next(iter(self._pending_evals)))
+        return rid
+
+    def routed_model(self, rid: int) -> int:
+        """Model index a harvest-registered request was routed to."""
+        try:
+            return self._pending_evals[rid][2]
+        except KeyError:
+            raise KeyError(
+                f"request {rid} has no pending evaluation — submit() it "
+                "with client_id= (and attach a HarvestStore) to track "
+                "routing outcomes") from None
+
+    def report_outcome(self, rid: int, score: float,
+                       cost: Optional[float] = None) -> None:
+        """Client feedback closes the harvest loop: append the completed
+        (query embedding, routed model, outcome score, cost) observation to
+        the submitting client's EvalBuffer. ``cost`` defaults to the
+        submit-time estimate (cost_per_token × max_new)."""
+        try:
+            client_id, x_arr, m_idx, cost_est = self._pending_evals.pop(rid)
+        except KeyError:
+            raise KeyError(
+                f"request {rid} has no pending evaluation (never "
+                "harvest-registered, already reported, or evicted)") from None
+        self.harvest.record(client_id, x_arr, m_idx, float(score),
+                            float(cost if cost is not None else cost_est))
 
     def step(self):
         """Advance every busy engine lane one chunk (admissions happen at

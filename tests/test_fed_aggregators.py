@@ -1,0 +1,195 @@
+"""Pluggable Aggregator strategies (repro.fed.aggregators): the refactored
+fit must be bit-for-bit the pre-refactor FedAvg on every cached path,
+secure-agg masking must cancel (bit-identically at scale=0, to float
+rounding at scale>0), and the legacy dp_sigma sugar must equal the explicit
+DP strategy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, RouterConfig
+from repro.core import federated as F
+from repro.core import secure_agg as SA
+from repro.data.partition import federated_split
+from repro.data.synthetic import make_eval_corpus
+from repro.fed.aggregators import (Aggregator, FedAvgAggregator,
+                                   GaussianDPAggregator, SecureAggAggregator)
+
+RCFG = RouterConfig(d_emb=16, num_models=5, hidden=(32, 32))
+FCFG = FedConfig(num_clients=4, rounds=3, batch_size=32, seed=1)
+
+
+@pytest.fixture(scope="module")
+def split():
+    corpus = make_eval_corpus(jax.random.PRNGKey(0), n_queries=600,
+                              n_tasks=4, n_models=5, d_emb=16)
+    return federated_split(jax.random.PRNGKey(1), corpus, FCFG)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _max_diff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------- refactor is bit-for-bit
+
+def test_default_fit_equals_explicit_fedavg_aggregator(split):
+    """aggregator=None and FedAvgAggregator() must be the same scan-fused
+    fit bit-for-bit — the Aggregator refactor cannot move the default."""
+    p0, h0 = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG)
+    p1, h1 = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                      aggregator=FedAvgAggregator())
+    _trees_equal(p0, p1)
+    assert h0["loss"] == h1["loss"]
+
+
+def test_aggregator_rides_scan_and_loop_paths(split):
+    """An explicit strategy rides both the scan-fused and per-round fit
+    paths with the same key and round schedule. A single round compiles
+    bit-identically in both contexts; across a multi-round fit XLA may
+    fuse the N² mask arithmetic differently inside the scan body than in
+    the standalone round jit, so the guarantee for mask-heavy strategies
+    is to-rounding (the DEFAULT FedAvg path stays bit-for-bit — pinned in
+    test_perf_paths)."""
+    agg = SecureAggAggregator(scale=5.0)
+    p_scan, h_scan = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
+                              FCFG, aggregator=agg)
+    p_loop, h_loop = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG,
+                              FCFG, aggregator=agg, eval_fn=lambda p: None)
+    assert _max_diff(p_scan, p_loop) < 1e-5
+    np.testing.assert_allclose(h_scan["loss"], h_loop["loss"], rtol=1e-5)
+
+
+def test_unified_api_forwards_aggregator(split):
+    """routers.fit_federated(..., aggregator=) reaches the fit path."""
+    r, _ = routers.fit_federated(
+        routers.make("mlp", RCFG), split["train"], FCFG,
+        key=jax.random.PRNGKey(2), aggregator=FedAvgAggregator())
+    legacy, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG)
+    _trees_equal(r.state, legacy)
+
+
+def test_unhashable_custom_aggregator_still_fits(split):
+    """A custom (unhashable) strategy can't ride the lru-cached compiled
+    fits — it must still train through the fresh-jit branch, and a plain
+    pass-through strategy must equal the default bit-for-bit."""
+    class PassThrough(Aggregator):
+        __hash__ = None                 # explicitly unhashable
+
+        def __call__(self, client_params, wts, key):
+            return FedAvgAggregator()(client_params, wts, key)
+
+    agg = PassThrough()
+    with pytest.raises(TypeError):
+        hash(agg)
+    p, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                    aggregator=agg)
+    p0, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG)
+    _trees_equal(p, p0)
+
+
+# -------------------------------------------------------------- secure agg
+
+def test_secure_agg_scale0_bit_identical_to_fedavg(split):
+    """When the masks cancel exactly (scale=0 → exact-zero masks folded
+    through the identical tensordot), the masked fit IS the plain fit."""
+    p0, h0 = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG)
+    p1, h1 = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                      aggregator=SecureAggAggregator(scale=0.0))
+    _trees_equal(p0, p1)
+    assert h0["loss"] == h1["loss"]
+
+
+def test_secure_agg_masks_cancel_to_rounding(split):
+    """With real masks (scale ≫ parameter magnitudes) the pairwise masks
+    must cancel in the server sum down to float rounding — the whole fit
+    stays within ~1e-4 of plain FedAvg while no client's unmasked update
+    ever reaches the server."""
+    p0, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG)
+    p1, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     aggregator=SecureAggAggregator(scale=10.0))
+    assert 0.0 < _max_diff(p0, p1) < 1e-4
+
+
+def test_secure_agg_single_round_masking(split):
+    """One aggregation in isolation: the strategy's masked tensordot must
+    match plain FedAvg to rounding for any participant subset, including a
+    partially active round (masks are gated by the participant set — a
+    dropped client's pair masks are never applied)."""
+    key = jax.random.PRNGKey(0)
+    N = 4
+    cp = {"w": jax.random.normal(key, (N, 6, 3)),
+          "b": jax.random.normal(jax.random.fold_in(key, 1), (N, 3))}
+    for wts in (jnp.array([3.0, 1.0, 2.0, 4.0]),
+                jnp.array([3.0, 0.0, 2.0, 0.0])):      # partial round
+        plain = FedAvgAggregator()(cp, wts, key)
+        masked = SecureAggAggregator(scale=20.0)(cp, wts, key)
+        assert _max_diff(plain, masked) < 1e-4
+
+
+def test_secure_agg_core_simulation_consistency():
+    """The strategy reuses core/secure_agg's pair-key/mask machinery: the
+    classic mask_update → secure_aggregate roundtrip must agree with the
+    unmasked weighted mean (mask cancellation in the reference sim)."""
+    key = jax.random.PRNGKey(3)
+    updates = [jax.random.normal(jax.random.fold_in(key, i), (5, 2))
+               for i in range(3)]
+    wts = [1.0, 2.0, 3.0]
+    masked = [SA.mask_update(key, i, 3, updates[i], wts[i], scale=10.0)
+              for i in range(3)]
+    agg = SA.secure_aggregate(masked, sum(wts))
+    want = sum(w * u for w, u in zip(wts, updates)) / sum(wts)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- dp
+
+def test_dp_sigma_sugar_equals_explicit_strategy(split):
+    """fedavg(dp_sigma=σ) must be bit-for-bit
+    fedavg(aggregator=GaussianDPAggregator(σ)) — the legacy knob is now
+    sugar over the strategy, same noise keys and all."""
+    p0, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     dp_sigma=0.3)
+    p1, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     aggregator=GaussianDPAggregator(sigma=0.3))
+    _trees_equal(p0, p1)
+
+
+def test_dp_sigma_auto_wraps_explicit_aggregator(split):
+    """dp_sigma>0 alongside aggregator= must not silently drop the
+    privacy noise: the fit auto-composes GaussianDP over the given
+    strategy (bit-for-bit the explicit composition)."""
+    inner = SecureAggAggregator(scale=2.0)
+    p0, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     aggregator=inner, dp_sigma=0.1)
+    p1, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     aggregator=GaussianDPAggregator(sigma=0.1,
+                                                     inner=inner))
+    _trees_equal(p0, p1)
+    p2, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                     aggregator=inner)
+    assert _max_diff(p0, p2) > 1e-4        # the noise really was applied
+
+
+def test_dp_composes_over_secure_agg(split):
+    """Central-DP noise over masked aggregation (the paper's privacy
+    stack): trains to finite params, and differs from the noiseless
+    masked fit (the noise is real)."""
+    agg = GaussianDPAggregator(sigma=0.05, inner=SecureAggAggregator())
+    p, h = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                    aggregator=agg)
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(p))
+    assert np.isfinite(h["loss"]).all()
+    p_nless, _ = F.fedavg(jax.random.PRNGKey(2), split["train"], RCFG, FCFG,
+                          aggregator=SecureAggAggregator())
+    assert _max_diff(p, p_nless) > 1e-4

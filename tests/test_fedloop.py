@@ -1,0 +1,314 @@
+"""Online federation runtime (repro.fed): harvest-from-serving, FedLoop
+sync ≡ offline fit bit-for-bit, router hot-swap with zero retraces under
+live traffic, mid-run model onboarding, bounded harvest memory, and §6.4
+personalization composed with a FedLoop-produced router."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, ModelConfig, RouterConfig
+from repro.fed.harvest import EvalBuffer, HarvestStore
+from repro.fed.loop import FedLoop, FedLoopConfig, personalize_client
+from repro.models import init_params
+from repro.serve import gateway
+from repro.serve.engine import EngineConfig
+from repro.serve.gateway import PoolModel, RoutedServer
+
+TINY = ModelConfig(name="fedloop-tiny", arch_type="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                   head_dim=16, dtype="float32")
+D_EMB = 8
+N_CLIENTS = 3
+CAP = 32
+RCFG = RouterConfig(d_emb=D_EMB, num_models=2, hidden=(16, 16), dropout=0.0)
+FCFG = FedConfig(num_clients=N_CLIENTS, participation=1.0, batch_size=16,
+                 lr=3e-3)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def make_server():
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    pool = [PoolModel("m0", TINY, params, 0.1),
+            PoolModel("m1", TINY, params, 0.5)]
+    router = routers.make("mlp", RCFG).init(jax.random.PRNGKey(1))
+    harvest = HarvestStore(D_EMB, capacity=CAP, clients=range(N_CLIENTS))
+    return RoutedServer(pool, router, harvest=harvest,
+                        engine_cfg=EngineConfig(slots=4, max_seq=32,
+                                                chunk=4, page_size=8))
+
+
+def drive_traffic(srv, loop, n, *, seed=0, max_new=4):
+    """Deterministic routed traffic: submit, read the choice, report a
+    deterministic outcome, advance the loop one chunk."""
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        c = i % N_CLIENTS
+        x = rng.normal(size=(D_EMB,)).astype(np.float32)
+        rid = srv.submit("three word prompt", lam=0.5,
+                         max_new_tokens=max_new, client_id=c, x=x)
+        m = srv.routed_model(rid)
+        srv.report_outcome(rid, float(rng.random() < 0.4 + 0.3 * m),
+                           0.1 + 0.4 * m)
+        loop.step()
+    loop.drain()
+
+
+@pytest.fixture()
+def loop_setup():
+    srv = make_server()
+    loop = FedLoop(srv, FCFG, key=jax.random.PRNGKey(7),
+                   cfg=FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=3,
+                                     min_samples=1))
+    return srv, loop
+
+
+# ----------------------------------------------------------------- harvest
+
+def test_harvest_populates_client_buffers(loop_setup):
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 9)
+    h = srv.harvest
+    assert len(h) == 9 and h.client_ids() == [0, 1, 2]
+    for c in range(N_CLIENTS):
+        buf = h.buffer(c)
+        assert len(buf) == 3
+        data = buf.as_client_data()
+        assert float(data["w"].sum()) == 3
+        # clients only ever observe the models they were routed to
+        assert set(np.unique(data["m"][:3]).tolist()) <= {0, 1}
+    stacked = h.as_federated_data(pad_to=CAP)
+    assert stacked["x"].shape == (N_CLIENTS, CAP, D_EMB)
+    assert float(jnp.sum(stacked["w"])) == 9
+
+
+def test_eval_buffer_is_bounded_ring():
+    """Deque-style cap: sustained appends never grow host memory; the
+    survivors are the newest entries in chronological order."""
+    buf = EvalBuffer(D_EMB, capacity=8)
+    bytes0 = buf.nbytes
+    for i in range(100):
+        buf.append(np.full(D_EMB, i, np.float32), i % 2, 1.0, float(i))
+    assert len(buf) == 8 and buf.total_seen == 100
+    assert buf.nbytes == bytes0
+    data = buf.as_client_data()
+    np.testing.assert_array_equal(data["cost"], np.arange(92, 100))
+
+
+def test_harvest_memory_bounded_under_sustained_traffic(loop_setup,
+                                                        monkeypatch):
+    """Serve far more traffic than the buffers hold: harvest bytes stay
+    flat and the pending-outcome map stays capped even when outcomes are
+    never reported."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 6)
+    bytes0 = srv.harvest.nbytes
+    drive_traffic(srv, loop, 3 * CAP + 9, seed=1)
+    assert srv.harvest.nbytes == bytes0
+    for c in range(N_CLIENTS):
+        assert len(srv.harvest.buffer(c)) == CAP
+    monkeypatch.setattr(gateway, "PENDING_EVAL_CAP", 5)
+    for i in range(12):  # submit without ever reporting an outcome
+        srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                   client_id=0, x=np.zeros(D_EMB, np.float32))
+    assert len(srv._pending_evals) <= 5
+    srv.drain()
+
+
+def test_report_outcome_unknown_rid_raises(loop_setup):
+    srv, _ = loop_setup
+    with pytest.raises(KeyError, match="no pending evaluation"):
+        srv.report_outcome(12345, 1.0)
+    with pytest.raises(KeyError, match="no pending evaluation"):
+        srv.routed_model(12345)
+
+
+# ----------------------------------------------- sync ≡ offline fit exactly
+
+def test_fedloop_sync_reproduces_offline_fit(loop_setup):
+    """A FedLoop sync over deterministically harvested buffers must be
+    EXACTLY routers.fit_federated on the same stacked data, same init,
+    same key — the online path adds scheduling, not math."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 15)
+    data = srv.harvest.as_federated_data(pad_to=CAP)
+    pre = routers.make("mlp", RCFG, state=srv.router.state)
+    v0 = srv.router_version
+    loop.sync(key=jax.random.PRNGKey(42))
+    offline, _ = routers.fit_federated(pre, data, FCFG,
+                                       key=jax.random.PRNGKey(42),
+                                       rounds=loop.cfg.rounds_per_sync)
+    _trees_equal(srv.router.state, offline.state)
+    assert srv.router_version == v0 + 1
+    assert loop.history[-1]["version"] == srv.router_version
+
+
+def test_sync_with_aggregator_reproduces_offline(loop_setup):
+    """The loop's aggregator knob reaches the fit: secure-agg syncs equal
+    the offline secure-agg fit bit-for-bit."""
+    from repro.fed.aggregators import SecureAggAggregator
+    srv, _ = loop_setup
+    agg = SecureAggAggregator(scale=5.0)
+    loop = FedLoop(srv, FCFG, key=jax.random.PRNGKey(7), aggregator=agg,
+                   cfg=FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=2,
+                                     min_samples=1))
+    drive_traffic(srv, loop, 9)
+    data = srv.harvest.as_federated_data(pad_to=CAP)
+    pre = routers.make("mlp", RCFG, state=srv.router.state)
+    loop.sync(key=jax.random.PRNGKey(5))
+    offline, _ = routers.fit_federated(pre, data, FCFG,
+                                       key=jax.random.PRNGKey(5), rounds=2,
+                                       aggregator=agg)
+    _trees_equal(srv.router.state, offline.state)
+
+
+def test_empty_harvest_never_syncs(loop_setup):
+    srv, loop = loop_setup
+    assert loop.maybe_sync() is None           # min_samples gate
+    with pytest.raises(ValueError, match="empty harvest"):
+        loop.sync()
+
+
+# ------------------------------------------------------- hot swap: retraces
+
+def test_hot_swap_zero_retraces_under_traffic(loop_setup):
+    """Swapping refit router state under live traffic must not retrace the
+    route program or any engine decode/prefill program (same-shape state
+    enters the cached jit as a traced argument) — TRACE_LOG-pinned."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 8)                # warm every program + sync fit
+    loop.sync(key=jax.random.PRNGKey(3))
+    drive_traffic(srv, loop, 4, seed=2)        # warm post-swap shapes too
+    gateway.reset_trace_log()
+    n0 = len(gateway.TRACE_LOG)
+    v0 = srv.router_version
+    loop.sync(key=jax.random.PRNGKey(4))       # hot swap #2
+    drive_traffic(srv, loop, 6, seed=3)        # same buckets, new router
+    loop.sync(key=jax.random.PRNGKey(5))       # and once more mid-stream
+    drive_traffic(srv, loop, 6, seed=4)
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"hot swap retraced: {list(gateway.TRACE_LOG)[n0:]}"
+    assert srv.router_version == v0 + 2
+
+
+def test_swap_preserves_in_flight_decode(loop_setup):
+    """A request already decoding when the router is swapped finishes with
+    the same tokens as without any swap (the swap touches routing state
+    only, never the engine's KV pools or programs)."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 6)                # warm + harvest
+    toks = np.arange(1, 6, dtype=np.int32)
+    base_rid = srv.engine.submit(0, toks, 8)
+    baseline = srv.engine.drain([base_rid])[base_rid]
+
+    rid = srv.engine.submit(0, toks, 8)
+    srv.step()                                 # half the chunks decoded
+    loop.sync(key=jax.random.PRNGKey(9))       # swap mid-decode
+    out = srv.engine.drain([rid])[rid]
+    np.testing.assert_array_equal(out, baseline)
+
+
+def test_swap_rejects_structural_change(loop_setup):
+    srv, _ = loop_setup
+    bigger = routers.make("mlp", RCFG, num_models=3).init(
+        jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="not a hot swap"):
+        srv.swap_router_state(bigger.state)
+
+
+# ------------------------------------------------------------- onboarding
+
+def test_onboard_model_mid_run(loop_setup):
+    """A new PoolModel joins mid-run: head columns trained on calibration
+    evals, pool extended, router expanded (one route retrace is expected —
+    the head shape changed), and the loop keeps syncing with post-onboard
+    harvest that covers the new model."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 9)
+    rng = np.random.default_rng(5)
+    calib = {"x": rng.normal(size=(40, D_EMB)).astype(np.float32),
+             "m": np.full(40, 2, np.int32),
+             "acc": (rng.random(40) < 0.8).astype(np.float32),
+             "cost": np.full(40, 0.05, np.float32),
+             "w": np.ones(40, np.float32)}
+    pm = PoolModel("m2", TINY, srv.pool[0].params, 0.05)
+    loop.onboard_model(pm, calib, key=jax.random.PRNGKey(11), steps=5)
+    assert len(srv.pool) == 3 and srv.router.num_models == 3
+    assert srv.engine.pool is srv.pool         # engine sees the new model
+
+    # the cheap new model with high calibration accuracy should now win
+    # cost-sensitive routing for at least some queries
+    x = rng.normal(size=(16, D_EMB)).astype(np.float32)
+    choice = srv._route_x(x, lam=2.0)
+    assert choice.shape == (16,) and choice.max() <= 2
+
+    # serving + harvesting + syncing continue across the expansion
+    drive_traffic(srv, loop, 9, seed=6)
+    loop.sync(key=jax.random.PRNGKey(12))
+    assert srv.router.num_models == 3
+
+
+def test_add_model_validates_router_m(loop_setup):
+    srv, _ = loop_setup
+    pm = PoolModel("m2", TINY, srv.pool[0].params, 0.05)
+    with pytest.raises(ValueError, match="onboard the router first"):
+        srv.add_model(pm, srv.router)          # still M=2
+
+
+# -------------------------------------------------------- personalization
+
+def test_personalization_composes_with_fedloop_router(loop_setup):
+    """§6.4 over the runtime: mix the FedLoop-produced federated router
+    with a client-local fit on that client's own EvalBuffer."""
+    srv, loop = loop_setup
+    drive_traffic(srv, loop, 18)
+    loop.sync(key=jax.random.PRNGKey(21))
+    data_0 = srv.harvest.buffer(0).as_client_data()
+    local, _ = routers.fit_local(routers.make("mlp", RCFG), data_0, FCFG,
+                                 key=jax.random.PRNGKey(22), steps=30)
+    mixed_fn, (w_a, w_c) = personalize_client(srv.router, local, data_0)
+    assert w_a.shape == (2,) and w_c.shape == (2,)
+    assert np.all((np.asarray(w_a) >= 0) & (np.asarray(w_a) <= 1))
+    x = np.asarray(data_0["x"][:5])
+    A, C = mixed_fn(x)
+    assert A.shape == (5, 2) and C.shape == (5, 2)
+    Af, Cf = srv.router.predict(x)
+    Al, Cl = local.predict(x)
+    # the mixture lies between the two estimators, per model
+    lo = np.minimum(np.asarray(Af), np.asarray(Al))
+    hi = np.maximum(np.asarray(Af), np.asarray(Al))
+    assert np.all(np.asarray(A) >= lo - 1e-6)
+    assert np.all(np.asarray(A) <= hi + 1e-6)
+    # a model this client never logged mixes entirely from the fed side
+    unlogged = sorted({0, 1} - set(np.asarray(data_0["m"])
+                                   [np.asarray(data_0["w"]) > 0].tolist()))
+    for m in unlogged:
+        assert float(w_a[m]) == 0.0
+
+
+# ------------------------------------------------------------ end-to-end
+
+def test_online_scenario_smoke():
+    """Tiny end-to-end drift scenario with mid-run onboarding: the full
+    serve → harvest → federate → hot-swap loop runs deterministically and
+    reports sane metrics (the online-vs-frozen AUC floor itself is
+    enforced on the bigger CI bench, BENCH_fedloop.smoke.json)."""
+    from repro.fed.scenarios import ScenarioConfig, run_online_vs_frozen
+    cfg = ScenarioConfig(n_clients=4, n_tasks=4, n_models=2, d_emb=16,
+                         n_queries=400, queries_per_phase=24, phases=2,
+                         test_queries=24, seed=0)
+    m = run_online_vs_frozen(cfg, onboard_phase=1, local_steps=60,
+                             capacity=64)
+    assert len(m["auc_online"]) == 2 and len(m["auc_frozen_local"]) == 2
+    assert all(0.0 <= a <= 1.0 for a in m["auc_online"])
+    assert all(0.0 <= a <= 1.0 for a in m["auc_frozen_local"])
+    assert m["syncs"] >= 1
+    assert m["num_models_final"] == 3          # the onboarded model joined
+    assert m["harvested_samples"] > 0

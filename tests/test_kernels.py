@@ -37,15 +37,10 @@ def test_kmeans_assign(n, d, K, dtype):
 @pytest.mark.parametrize("n,d,K", [(65, 1000, 7), (33, 1536, 5),
                                    (257, 999, 13)])
 def test_kmeans_assign_wide_d_boundary(n, d, K):
-    """Boundary test for the ROADMAP's missing d-tiling: both kmeans
-    kernels keep full (block, d_pad) rows resident in VMEM, so very wide
-    embeddings only fit because interpret mode has no VMEM ceiling. On a
-    real TPU, d in the thousands with block_n=256 (256·1536·4B ≈ 1.5 MB
-    per x-tile plus the centroid tile) still fits v4/v5 VMEM (~16 MB) —
-    the d-tiling item bites beyond roughly d ≈ 8k. This pins the math
-    (non-pow2 AND wide d) so adding the tiling later cannot change
-    results; it runs as pass today and should flip to exercising the
-    d-tile loop when that lands."""
+    """Wide-d boundary: below ``block_d`` (default 2048) both kmeans
+    kernels still run their original single-pass paths and must match the
+    oracle exactly — pinned here so the d-tiling dispatch can never perturb
+    the narrow/medium regime it leaves alone."""
     kx, kc, kw = jax.random.split(jax.random.PRNGKey(n), 3)
     x = jax.random.normal(kx, (n, d))
     c = jax.random.normal(kc, (K, d))
@@ -62,6 +57,91 @@ def test_kmeans_assign_wide_d_boundary(n, d, K):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(n_got), np.asarray(n_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def _assert_assign_equiv(x, c, got, want):
+    """Tiled accumulation reorders float sums, so an argmin may legally
+    flip between equidistant (to rounding) centroids; anything else is a
+    real mismatch."""
+    got, want = np.asarray(got), np.asarray(want)
+    neq = got != want
+    if neq.any():
+        xf, cf = np.asarray(x, np.float32), np.asarray(c, np.float32)
+        d2 = ((xf[:, None] - cf[None]) ** 2).sum(-1)
+        rows = np.where(neq)[0]
+        assert np.allclose(d2[rows, got[rows]], d2[rows, want[rows]],
+                           rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,K,bd", [(65, 300, 7, 128), (33, 1536, 5, 512),
+                                      (257, 999, 13, 256),
+                                      (100, 4096, 40, 2048)])
+def test_kmeans_assign_block_d_tiled(n, d, K, bd):
+    """d wider than ``block_d`` runs the d-tile accumulation loop (VMEM
+    scratch holds the x·μᵀ and ‖μ‖² partials; the argmin merge waits for
+    the last d tile) — same assignment as the oracle up to float ties,
+    including non-pow2 d with padding and the block_k × block_d combined
+    grid."""
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(n), 3)
+    x = jax.random.normal(kx, (n, d))
+    c = jax.random.normal(kc, (K, d))
+    w = jax.random.uniform(kw, (n,))
+    got = kmeans_assign_pallas(x, c, block_n=64, block_d=bd, interpret=True)
+    _assert_assign_equiv(x, c, got, ref.kmeans_assign_ref(x, c))
+
+    a_got, s_got, n_got = kmeans_assign_reduce_pallas(
+        x, c, w, block_n=64, block_d=bd, interpret=True)
+    # reduce must be self-consistent with the kernel's own assignment
+    # (ties may legally route a point to an equidistant cluster)
+    np.testing.assert_array_equal(np.asarray(a_got), np.asarray(got))
+    onehot = jax.nn.one_hot(a_got, K, dtype=jnp.float32) * w[:, None]
+    np.testing.assert_allclose(np.asarray(s_got),
+                               np.asarray(onehot.T @ x), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_got),
+                               np.asarray(onehot.sum(0)), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_kmeans_assign_block_d_shape_independence():
+    """The assignment must not depend on the d tiling (up to exact-tie
+    flips, checked by distance)."""
+    kx, kc = jax.random.split(jax.random.PRNGKey(17))
+    x = jax.random.normal(kx, (70, 900))
+    c = jax.random.normal(kc, (9, 900))
+    base = kmeans_assign_pallas(x, c, block_n=64, interpret=True)
+    for bd in (128, 256, 512):
+        got = kmeans_assign_pallas(x, c, block_n=64, block_d=bd,
+                                   interpret=True)
+        _assert_assign_equiv(x, c, got, base)
+
+
+def test_attn_decode_step_kernel_dispatch(monkeypatch):
+    """REPRO_KERNELS=pallas routes the uniform decode step (and therefore
+    the engine's uniform decode scan) through the flash-decoding kernel —
+    interpret mode on CPU — matching the jnp path for scalar and per-slot
+    positions, with identical cache writes."""
+    from repro.config import ModelConfig
+    from repro.models import attention as A
+    cfg = ModelConfig(name="dispatch-tiny", arch_type="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab=97, head_dim=16, dtype="float32")
+    p = A.init_attn(jax.random.PRNGKey(0), cfg)
+    B, W = 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (B, 1, cfg.d_model))
+    cache = {"k": jax.random.normal(ks[1], (B, 1, W, 16)),
+             "v": jax.random.normal(ks[2], (B, 1, W, 16))}
+    for pos in (jnp.int32(5), jnp.array([3, 17, 31], jnp.int32)):
+        monkeypatch.delenv("REPRO_KERNELS", raising=False)
+        o_ref, c_ref_ = A.attn_decode_step(p, x, cache, pos, cfg,
+                                           rolling=False)
+        monkeypatch.setenv("REPRO_KERNELS", "pallas")
+        o_k, c_k = A.attn_decode_step(p, x, cache, pos, cfg, rolling=False)
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_k),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(c_ref_["k"]),
+                                      np.asarray(c_k["k"]))
 
 
 def test_kmeans_assign_large_k_tiled():
