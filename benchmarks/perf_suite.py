@@ -590,6 +590,103 @@ def bench_fedloop(smoke: bool) -> None:
     })
 
 
+# ---------------------------------------------------------------------------
+# routerbench: the router zoo under the RouterBench-style harness —
+# federated vs client-local AIQ per family, clean and perturbed, offline
+# and live through the FedLoop
+# ---------------------------------------------------------------------------
+
+
+def bench_routerbench(smoke: bool) -> None:
+    """Every registered router family fit federated vs per-client-local on
+    one many-model pool, scored as frontier AIQ (normalized frontier AUC)
+    under the clean, paraphrase-drift and adversarial routing-flip
+    scenarios — plus the same comparison live (a FedLoop-maintained router
+    vs frozen client-local fits under embedding drift). Deterministic in
+    its seeds, so the CI floor — federated AIQ ≥ client-local AIQ for the
+    mf family on EVERY scenario of the smoke run — is exact accounting,
+    not a wall-clock race (see ci.yml)."""
+    import time
+
+    from repro.evalbench.harness import (offline_routerbench,
+                                         online_routerbench)
+    from repro.evalbench.pools import make_pool_corpus
+    from repro.fed.scenarios import ScenarioConfig
+
+    if smoke:
+        rcfg = RouterConfig(d_emb=16, num_models=6, hidden=(48, 48),
+                            dropout=0.0, k_local=5, k_global=8, mf_rank=12)
+        fcfg = FedConfig(num_clients=4, rounds=30, batch_size=32, lr=3e-3,
+                         seed=0)
+        corpus = make_pool_corpus(jax.random.PRNGKey(1), n_models=6,
+                                  n_queries=800, d_emb=16, n_tasks=5)
+        local_steps, online_families = 200, ("mf",)
+    else:
+        rcfg = RouterConfig(d_emb=24, num_models=8, hidden=(48, 48),
+                            dropout=0.0, k_local=6, k_global=10, mf_rank=16)
+        fcfg = FedConfig(num_clients=6, rounds=40, batch_size=32, lr=3e-3,
+                         seed=0)
+        corpus = make_pool_corpus(jax.random.PRNGKey(1), n_models=8,
+                                  n_queries=1200, d_emb=24, n_tasks=6)
+        local_steps, online_families = 300, ("mf", "elo")
+
+    t0 = time.perf_counter()
+    off = offline_routerbench(jax.random.PRNGKey(0), rcfg=rcfg, fcfg=fcfg,
+                              corpus=corpus, local_steps=local_steps)
+    off_wall = time.perf_counter() - t0
+    per_family_us = off_wall * 1e6 / max(len(off["families"]), 1)
+    for name in sorted(off["families"]):
+        fam = off["families"][name]
+        fed, loc = fam["federated"], fam["client_local"]
+        C.emit(f"routerbench_offline_{name}", per_family_us,
+               "AIQ fed/local — " + "; ".join(
+                   f"{sc} {fed[sc]['aiq']:.3f}/{loc[sc]['aiq']:.3f}"
+                   for sc in ("clean", "paraphrase", "adversarial")),
+               speedup_vs_baseline=(fed["clean"]["aiq"]
+                                    / max(loc["clean"]["aiq"], 1e-9)))
+
+    scen = ScenarioConfig(n_clients=4, n_models=3, d_emb=24, n_queries=800,
+                          queries_per_phase=96, phases=2, embed_sigma=0.9,
+                          test_queries=48, seed=0)
+    online = {}
+    for fam in online_families:
+        t1 = time.perf_counter()
+        res = online_routerbench(family=fam, cfg=scen, local_steps=150,
+                                 capacity=256)
+        wall = time.perf_counter() - t1
+        C.emit(f"routerbench_online_{fam}",
+               wall * 1e6 / max(res["requests_served"], 1),
+               f"us per served request; final-phase AIQ online "
+               f"{res['auc_online_final']:.3f} vs frozen client-local "
+               f"{res['auc_frozen_local_final']:.3f} under embedding drift",
+               speedup_vs_baseline=(res["auc_online_final"]
+                                    / max(res["auc_frozen_local_final"],
+                                          1e-9)))
+        online[fam] = {
+            "embed_sigma": res["embed_sigma"],
+            "auc_online_final": round(res["auc_online_final"], 4),
+            "auc_frozen_local_final": round(res["auc_frozen_local_final"],
+                                            4),
+            "auc_gap_final": round(res["auc_gap_final"], 4),
+            "syncs": res["syncs"],
+            "requests_served": res["requests_served"],
+        }
+
+    C.write_bench(_bench_file("routerbench", smoke), meta={
+        "smoke": smoke,
+        "n_models": off["n_models"],
+        "n_clients": off["n_clients"],
+        "rounds": fcfg.rounds,
+        "local_steps": local_steps,
+        "pool": off["pool"],
+        "reference": {k: round(v, 4) for k, v in off["reference"].items()
+                      if k != "models"},
+        "families": off["families"],
+        "online": online,
+        "offline_wall_seconds": round(off_wall, 2),
+    })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -602,10 +699,11 @@ def main() -> None:
     bench_engine(args.smoke)
     bench_paged(args.smoke)
     bench_fedloop(args.smoke)
+    bench_routerbench(args.smoke)
 
     for f in (_bench_file(s, args.smoke)
               for s in ("train", "route", "serve", "engine", "paged",
-                        "fedloop")):
+                        "fedloop", "routerbench")):
         blob = json.loads((C.REPO_ROOT / f).read_text())
         assert blob["records"], f"{f}: no records"
         assert all(np.isfinite(r["us_per_call"]) for r in blob["records"])

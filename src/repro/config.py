@@ -132,6 +132,11 @@ class RouterConfig:
     n_init: int = 3
     kmeans_iters: int = 30
     c_max: float = 1.0             # costs normalized to [0, c_max]
+    # Matrix-factorization router (query-embedding × model-id factors)
+    mf_rank: int = 32
+    # Elo/ranking router (similarity-weighted one-shot ratings)
+    elo_tau: float = 0.15          # kernel bandwidth, units of sqrt(d_emb)
+    elo_prior: float = 4.0         # pseudo-count shrinkage to global mean
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,189 @@
+"""Similarity-weighted Elo/ranking router — nonparametric, one-shot (Alg. 2).
+
+Anchors come from the same two-stage federated K-means as the
+K-Means-Router (local K-means uploads → server size-weighted K-means,
+``kmeans_router.fed_centroids``). Each client then uploads, per
+(anchor k, model m), similarity-weighted evaluation sums
+
+    n[k,m] = Σ_i s_k(x_i) · w_i · 1[m_i = m]
+    a[k,m] = Σ_i s_k(x_i) · w_i · acc_i · 1[m_i = m]
+    c[k,m] = Σ_i s_k(x_i) · w_i · cost_i · 1[m_i = m]
+
+where s_k(x) is a softmax similarity kernel over anchors. The sums are
+linear in the samples, so server aggregation is plain addition — exactly
+the one-shot statistics protocol of Alg. 2, with soft anchor assignment in
+place of hard cluster membership.
+
+The server turns shrunk win-rates into Elo-style ratings,
+
+    R[k,m] = s_elo · logit(p̃),  p̃ = (a + n0·p_glob[m]) / (n + n0),
+
+the Bradley–Terry strength model m would need to produce its observed score
+against a par opponent near anchor k (n0 pseudo-counts shrink sparse cells
+toward the model's global mean — the regularization classic Elo gets from
+its update rate). Inference interpolates in *rating space* — a
+similarity-weighted mean of per-anchor ratings mapped back through the
+logistic link — i.e. geometric rather than arithmetic pooling of
+win-rates, which is what makes this a ranking router instead of a soft
+mean-value table.
+
+State θ = {"anchors" (K,d), "rating" (K,M), "C" (K,M), raw sums
+"a"/"c"/"n" (K,M), "tau" ()}. Raw sums are kept so onboarding merges stay
+exact; "tau" rides in the state so a checkpoint is self-describing.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+from repro.core.kmeans import kmeans
+from repro.core.kmeans_router import fed_centroids
+
+# classic Elo logistic scale: 400 rating points per decade of odds
+ELO_SCALE = 400.0 / math.log(10.0)
+_P_CLIP = 1e-3
+
+
+def _tau(rcfg: RouterConfig) -> float:
+    """Kernel bandwidth. Squared distances between unit-scale embeddings
+    grow linearly with d, so the config knob is in units of sqrt(d_emb)."""
+    return rcfg.elo_tau * math.sqrt(rcfg.d_emb)
+
+
+def kernel_weights(x: jnp.ndarray, anchors: jnp.ndarray,
+                   tau) -> jnp.ndarray:
+    """Softmax similarity kernel s_k(x) over anchors: (Q, d) → (Q, K)."""
+    d2 = (jnp.sum(x * x, -1)[:, None] +
+          jnp.sum(anchors * anchors, -1)[None, :] - 2.0 * x @ anchors.T)
+    return jax.nn.softmax(-d2 / (2.0 * tau * tau), axis=-1)
+
+
+def _anchor_stats(anchors, data_i, M: int, tau):
+    """Similarity-weighted sums per (anchor, model) for one client —
+    linear in the samples, hence one-shot aggregable (Alg. 2 lines 9–12)."""
+    s = kernel_weights(data_i["x"], anchors, tau)        # (D, K)
+    sw = s * data_i["w"][:, None]                        # (D, K)
+    onehot = jax.nn.one_hot(data_i["m"], M)              # (D, M)
+    n = jnp.einsum("dk,dm->km", sw, onehot)
+    a = jnp.einsum("dk,dm->km", sw * data_i["acc"][:, None], onehot)
+    c = jnp.einsum("dk,dm->km", sw * data_i["cost"][:, None], onehot)
+    return a, c, n
+
+
+def _finalize(a_sum, c_sum, n, rcfg: RouterConfig):
+    """Aggregate sums → per-anchor ratings + cost estimates, with
+    pseudo-count shrinkage toward each model's global mean (a model never
+    observed anywhere backs off to the pessimistic (acc 0, cost c_max))."""
+    n0 = max(rcfg.elo_prior, 1e-6)
+    tot_n = jnp.sum(n, axis=0)                           # (M,)
+    p_glob = jnp.where(tot_n > 0,
+                       jnp.sum(a_sum, 0) / jnp.maximum(tot_n, 1e-12), 0.0)
+    c_glob = jnp.where(tot_n > 0,
+                       jnp.sum(c_sum, 0) / jnp.maximum(tot_n, 1e-12),
+                       rcfg.c_max)
+    p = (a_sum + n0 * p_glob[None, :]) / (n + n0)
+    p = jnp.clip(p, _P_CLIP, 1.0 - _P_CLIP)
+    rating = ELO_SCALE * (jnp.log(p) - jnp.log1p(-p))
+    C = (c_sum + n0 * c_glob[None, :]) / (n + n0)
+    return rating, C
+
+
+def _build_state(anchors, a, c, n, rcfg: RouterConfig) -> dict:
+    rating, C = _finalize(a, c, n, rcfg)
+    return {"anchors": anchors, "rating": rating, "C": C,
+            "a": a, "c": c, "n": n, "tau": jnp.asarray(_tau(rcfg))}
+
+
+def fed_elo_router(key, data, rcfg: RouterConfig, *, num_models=None,
+                   client_mask=None) -> dict:
+    """One-shot federated fit. data: stacked padded client arrays
+    (see federated.py)."""
+    M = num_models if num_models is not None else rcfg.num_models
+    anchors = fed_centroids(key, data, rcfg, client_mask=client_mask)
+    tau = _tau(rcfg)
+    a, c, n = jax.vmap(lambda di: _anchor_stats(anchors, di, M, tau))(data)
+    if client_mask is not None:
+        m3 = client_mask[:, None, None]
+        a, c, n = a * m3, c * m3, n * m3
+    return _build_state(anchors, jnp.sum(a, 0), jnp.sum(c, 0),
+                        jnp.sum(n, 0), rcfg)
+
+
+def local_elo_router(key, data_i, rcfg: RouterConfig, *, num_models=None,
+                     k=None) -> dict:
+    """Client-local (no-FL) baseline: own K-means anchors + own ratings."""
+    M = num_models if num_models is not None else rcfg.num_models
+    K = k if k is not None else rcfg.k_local
+    anchors, _ = kmeans(key, data_i["x"], K, iters=rcfg.kmeans_iters,
+                        n_init=rcfg.n_init, mask=data_i["w"] > 0)
+    a, c, n = _anchor_stats(anchors, data_i, M, _tau(rcfg))
+    return _build_state(anchors, a, c, n, rcfg)
+
+
+def predict(router: dict, x: jnp.ndarray):
+    """x: (Q, d) → (A (Q,M) in [0,1], C (Q,M)): similarity-weighted rating
+    interpolation, mapped back through the logistic link."""
+    s = kernel_weights(x, router["anchors"], router["tau"])  # (Q, K)
+    A = jax.nn.sigmoid((s @ router["rating"]) / ELO_SCALE)
+    return A, s @ router["C"]
+
+
+def prior_state(key, rcfg: RouterConfig, *, num_models=None) -> dict:
+    """An uninformative cold-start state: random anchors, near-flat
+    ratings, mid-scale costs, zero counts. Shapes match any fitted state
+    with the same (k_global, num_models), so a live service can hot-swap a
+    real fit in without retracing.
+
+    The ratings carry a small per-(anchor, model) jitter (±~10 Elo points,
+    A within 0.5 ± 0.01): an exactly flat prior would tie every utility
+    argmax and route ALL cold-start traffic to model 0, so the harvest
+    would never cover the rest of the pool and refits could never learn it
+    — the same role the random output heads play for the parametric
+    families' cold starts."""
+    M = num_models if num_models is not None else rcfg.num_models
+    K = rcfg.k_global
+    ka, kr, kc = jax.random.split(key, 3)
+    anchors = jax.random.normal(ka, (K, rcfg.d_emb))
+    z = jnp.zeros((K, M))
+    rating = 10.0 * jax.random.normal(kr, (K, M))
+    C = jnp.clip(rcfg.c_max / 2.0 *
+                 (1.0 + 0.05 * jax.random.normal(kc, (K, M))),
+                 0.0, rcfg.c_max)
+    return {"anchors": anchors, "rating": rating, "C": C,
+            "a": z, "c": z, "n": z, "tau": jnp.asarray(_tau(rcfg))}
+
+
+# ---------------------------------------------------------------------------
+# §6.3 model onboarding / App. D.3 client onboarding (training-free)
+# ---------------------------------------------------------------------------
+
+
+def add_model_stats(router: dict, calib, rcfg: RouterConfig) -> dict:
+    """Onboard one new model from calibration evaluations
+    calib = {"x": (D,d), "acc": (D,), "cost": (D,), "w": (D,)}: append its
+    similarity-weighted sums as a new column and re-finalize the ratings."""
+    s = kernel_weights(calib["x"], router["anchors"], router["tau"])
+    sw = s * calib["w"][:, None]                         # (D, K)
+    n_new = jnp.sum(sw, axis=0)                          # (K,)
+    a_new = jnp.sum(sw * calib["acc"][:, None], axis=0)
+    c_new = jnp.sum(sw * calib["cost"][:, None], axis=0)
+    a = jnp.concatenate([router["a"], a_new[:, None]], axis=1)
+    c = jnp.concatenate([router["c"], c_new[:, None]], axis=1)
+    n = jnp.concatenate([router["n"], n_new[:, None]], axis=1)
+    return _build_state(router["anchors"], a, c, n, rcfg)
+
+
+def merge_client_stats(router: dict, data_new, rcfg: RouterConfig,
+                       num_models=None) -> dict:
+    """New clients join (App. D.3): add their similarity-weighted sums
+    against the *existing* anchors — exact, because the state keeps raw
+    sums rather than only the finalized ratings."""
+    M = num_models if num_models is not None else rcfg.num_models
+    a, c, n = jax.vmap(lambda di: _anchor_stats(router["anchors"], di, M,
+                                                router["tau"]))(data_new)
+    return _build_state(router["anchors"], router["a"] + jnp.sum(a, 0),
+                        router["c"] + jnp.sum(c, 0),
+                        router["n"] + jnp.sum(n, 0), rcfg)

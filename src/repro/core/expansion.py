@@ -1,13 +1,13 @@
 """Pool evolution (paper §6.3 + App. D.3).
 
-MLP-Router:
-  * model onboarding — append fresh head columns and train ONLY those
-    columns (trunk + existing heads frozen) on a small calibration subset.
+Gradient-trained families (MLP, MF):
+  * model onboarding — append fresh head/factor columns and train ONLY
+    those columns (everything else frozen) on a small calibration subset.
   * client onboarding — continued FedAvg restricted to the new clients with
     a distillation regularizer toward the frozen pre-join router.
 
-K-Means-Router equivalents are training-free and live in kmeans_router.py
-(add_model_stats / merge_client_stats).
+One-shot family equivalents are training-free and live beside their math
+(kmeans_router.py / elo_router.py: add_model_stats / merge_client_stats).
 """
 from __future__ import annotations
 
@@ -16,18 +16,22 @@ import jax.numpy as jnp
 
 from repro.config import FedConfig, RouterConfig
 from repro.core import federated as F
+from repro.core import mf_router as MF
 from repro.core import mlp_router as R
 
 
-def add_models(params: dict, key, n_new: int) -> dict:
+def add_models(params: dict, key, n_new: int, add_fn=None) -> dict:
+    add_fn = add_fn if add_fn is not None else R.add_model_head
     for _ in range(n_new):
         key, sub = jax.random.split(key)
-        params = R.add_model_head(params, sub)
+        params = add_fn(params, sub)
     return params
 
 
 def new_head_freeze_mask(params: dict, n_new: int) -> dict:
-    """Gradient mask: 1 only on the last n_new head columns."""
+    """Gradient mask: 1 only on the last n_new head columns. Works for any
+    family whose params carry the {"heads": {acc_w, acc_b, cost_w, cost_b}}
+    layout (MLP trunk features or MF latent factors alike)."""
     def zeros_like(t):
         return jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), t)
 
@@ -64,3 +68,28 @@ def onboard_clients_mlp(key, params, data_new, rcfg: RouterConfig,
     theta0 = jax.tree.map(lambda a: a, params)  # frozen copy
     return F.fedavg(key, data_new, rcfg, fcfg, rounds=rounds, init=params,
                     distill=(theta0, beta))
+
+
+def onboard_models_mf(key, params, calib_data, rcfg: RouterConfig,
+                      fcfg: FedConfig, n_new: int, *, steps: int = 300):
+    """§6.3 for the MF family: append fresh factor columns, train only
+    those columns on the calibration subset (projection + old factors
+    frozen)."""
+    key, k_add = jax.random.split(key)
+    params = add_models(params, k_add, n_new, add_fn=MF.add_model_factor)
+    freeze = new_head_freeze_mask(params, n_new)
+    params, losses = F.sgd_train(key, calib_data, rcfg, fcfg, steps=steps,
+                                 init=params, freeze=freeze,
+                                 loss_fn=MF.mf_loss)
+    return params, losses
+
+
+def onboard_clients_mf(key, params, data_new, rcfg: RouterConfig,
+                       fcfg: FedConfig, *, rounds: int = 15,
+                       beta: float = 1.0):
+    """App. D.3 for the MF family: continued FedAvg on the new clients,
+    anchored by distillation toward the frozen pre-join factorization."""
+    theta0 = jax.tree.map(lambda a: a, params)  # frozen copy
+    return F.fedavg(key, data_new, rcfg, fcfg, rounds=rounds, init=params,
+                    distill=(theta0, beta, MF.apply_mf_router),
+                    loss_fn=MF.mf_loss)

@@ -36,30 +36,44 @@ def _make_opt(fcfg: FedConfig, optimizer: str):
     raise ValueError(optimizer)
 
 
-def _distill_loss(params, theta0, x, w):
-    """App. D.3 regularizer: match the frozen base router's predictions."""
-    A, C = R.apply_mlp_router(params, x)
-    A0, C0 = R.apply_mlp_router(theta0, x)
+def _distill_loss(params, theta0, x, w, apply_fn=None):
+    """App. D.3 regularizer: match the frozen base router's predictions.
+    ``apply_fn(params, x) -> (A, C)`` selects the family's forward pass
+    (default: the MLP router)."""
+    apply_fn = apply_fn if apply_fn is not None else R.apply_mlp_router
+    A, C = apply_fn(params, x)
+    A0, C0 = apply_fn(theta0, x)
     per = jnp.mean((A - A0) ** 2 + (C - C0) ** 2, axis=-1)  # mean over models
     return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 def client_update(params, data_i, key, rcfg: RouterConfig, fcfg: FedConfig,
                   opt, max_steps: int, *, full_batch: bool = False,
-                  freeze=None, distill: Optional[tuple] = None):
-    """τ local steps (≈1 epoch: ⌈D_i/batch⌉ active steps) on one client."""
+                  freeze=None, distill: Optional[tuple] = None,
+                  loss_fn: Optional[Callable] = None):
+    """τ local steps (≈1 epoch: ⌈D_i/batch⌉ active steps) on one client.
+
+    ``loss_fn(params, batch, rcfg, rng=...)`` selects the family's training
+    loss — None keeps the MLP router loss (bit-for-bit the legacy path),
+    so any parametric family rides the same FedAvg machinery.
+    ``distill`` is ``(theta0, beta)`` or ``(theta0, beta, apply_fn)``; the
+    3-tuple form points the App. D.3 regularizer at a non-MLP forward pass.
+    """
+    base_loss = loss_fn if loss_fn is not None else R.router_loss
     D_i = jnp.sum(data_i["w"]).astype(jnp.int32)
     n_steps_i = jnp.ceil(D_i / fcfg.batch_size).astype(jnp.int32)
     opt_state = opt.init(params)
 
-    def loss_fn(p, batch, rng):
-        loss = R.router_loss(p, batch, rcfg, rng=rng)
+    def loss_fn(p, batch, rng):  # noqa: F811 — resolved family loss
+        loss = base_loss(p, batch, rcfg, rng=rng)
         if distill is not None:
-            theta0, beta = distill
+            theta0, beta = distill[0], distill[1]
+            apply_fn = distill[2] if len(distill) > 2 else None
             w = batch.get("w")
             if w is None:  # don't build the all-ones fallback eagerly
                 w = jnp.ones(batch["x"].shape[0])
-            loss = loss + beta * _distill_loss(p, theta0, batch["x"], w)
+            loss = loss + beta * _distill_loss(p, theta0, batch["x"], w,
+                                               apply_fn)
         return loss
 
     def step(carry, s):
@@ -105,7 +119,7 @@ def _default_aggregator(dp_sigma: float):
 def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
                  opt, max_steps: int, *, full_batch=False, freeze=None,
                  distill=None, client_mask=None, dp_sigma: float = 0.0,
-                 aggregator=None):
+                 aggregator=None, loss_fn=None):
     """One communication round: local updates on active clients + server
     aggregation (Alg. 1 lines 3–11) through a pluggable strategy
     (``repro.fed.aggregators``). The default is plain weighted FedAvg;
@@ -125,7 +139,7 @@ def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
 
     upd = functools.partial(client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
                             max_steps=max_steps, full_batch=full_batch,
-                            freeze=freeze, distill=distill)
+                            freeze=freeze, distill=distill, loss_fn=loss_fn)
     client_params, client_loss = jax.vmap(upd, in_axes=(None, 0, 0))(
         params, data, jax.random.split(k_cli, N))
 
@@ -149,6 +163,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            rounds: Optional[int] = None, optimizer: str = "adamw",
            init=None, full_batch: bool = False, freeze=None, distill=None,
            client_mask=None, dp_sigma: float = 0.0, aggregator=None,
+           loss_fn: Optional[Callable] = None,
            eval_fn: Optional[Callable] = None, eval_every: int = 1):
     """Run T rounds of Algorithm 1. Returns (params, history dict).
 
@@ -166,6 +181,10 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     (``repro.fed.aggregators``); None keeps the plain-FedAvg (+ optional
     dp_sigma noise) default. Hashable strategies (the built-in frozen
     dataclasses) ride the module-level compiled-fit caches.
+
+    ``loss_fn`` selects the family's training loss (see ``client_update``);
+    module-level functions are hashable, so non-default families ride the
+    same compiled-fit caches as the MLP default.
     """
     rounds = rounds if rounds is not None else fcfg.rounds
     D_max = data["x"].shape[1]
@@ -187,7 +206,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     simple = (freeze is None and distill is None and client_mask is None
               and agg_hashable)
     cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-               aggregator)
+               aggregator, loss_fn)
 
     if eval_fn is None:
         if simple:
@@ -269,7 +288,8 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
 
 
 def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                   aggregator, freeze=None, distill=None, client_mask=None):
+                   aggregator, loss_fn=None, freeze=None, distill=None,
+                   client_mask=None):
     """The one place a fedavg_round closure is built — every fit path
     (cached or not) goes through it, so a new knob can't silently diverge
     between the cached and fresh-jit variants."""
@@ -277,22 +297,22 @@ def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
         fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=_make_opt(fcfg, optimizer),
         max_steps=max_steps, full_batch=full_batch, freeze=freeze,
         distill=distill, client_mask=client_mask, dp_sigma=dp_sigma,
-        aggregator=aggregator)
+        aggregator=aggregator, loss_fn=loss_fn)
 
 
 @functools.lru_cache(maxsize=64)
 def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator):
+                     aggregator, loss_fn):
     return jax.jit(_round_partial(rcfg, fcfg, optimizer, max_steps,
-                                  full_batch, dp_sigma, aggregator))
+                                  full_batch, dp_sigma, aggregator, loss_fn))
 
 
 @functools.lru_cache(maxsize=64)
 def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator, rounds, donate):
+                     aggregator, loss_fn, rounds, donate):
     return _make_scan_fit(
         _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch,
-                       dp_sigma, aggregator),
+                       dp_sigma, aggregator, loss_fn),
         rounds, donate=donate)
 
 
@@ -302,9 +322,12 @@ def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
 
 
 def sgd_train(key, data_i, rcfg: RouterConfig, fcfg: FedConfig, *,
-              steps: int, optimizer: str = "adamw", init=None, freeze=None):
+              steps: int, optimizer: str = "adamw", init=None, freeze=None,
+              loss_fn: Optional[Callable] = None):
     """Plain minibatch training on a single (flat) dataset
-    {"x": (D,d), "m", "acc", "cost", "w"} — the no-FL baseline."""
+    {"x": (D,d), "m", "acc", "cost", "w"} — the no-FL baseline.
+    ``loss_fn`` selects the family loss (None → MLP, the legacy path)."""
+    base_loss = loss_fn if loss_fn is not None else R.router_loss
     opt = _make_opt(fcfg, optimizer)
     key, k_init = jax.random.split(key)
     params = init if init is not None else R.init_mlp_router(key=k_init,
@@ -320,7 +343,7 @@ def sgd_train(key, data_i, rcfg: RouterConfig, fcfg: FedConfig, *,
                                  jnp.maximum(D_i, 1))
         batch = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data_i)
         loss, grads = jax.value_and_grad(
-            lambda p: R.router_loss(p, batch, rcfg, rng=k_drop))(params)
+            lambda p: base_loss(p, batch, rcfg, rng=k_drop))(params)
         if freeze is not None:
             grads = jax.tree.map(lambda g, f: g * f, grads, freeze)
         new_params, opt_state = opt.update(grads, opt_state, params)

@@ -51,11 +51,13 @@ def _finalize(a_sum, c_sum, n, c_max: float):
     return A, C
 
 
-def fed_kmeans_router(key, data, rcfg: RouterConfig, *, num_models=None,
-                      client_mask=None) -> dict:
-    """Algorithm 2. data: stacked padded client arrays (see federated.py)."""
+def fed_centroids(key, data, rcfg: RouterConfig, *, client_mask=None
+                  ) -> jnp.ndarray:
+    """Alg. 2 stages (i)+(ii): local K-means per client (centroid, size
+    uploads) → server size-weighted K-means → (k_global, d) centers.
+    Shared by every one-shot family that anchors statistics to a federated
+    partition of embedding space (K-means, Elo)."""
     N, D, d = data["x"].shape
-    M = num_models if num_models is not None else rcfg.num_models
     kl, kg = jax.random.split(key)
 
     # (i) local K-means per client
@@ -77,6 +79,14 @@ def fed_kmeans_router(key, data, rcfg: RouterConfig, *, num_models=None,
     centroids, _ = kmeans(kg, flat_c, rcfg.k_global,
                           iters=rcfg.kmeans_iters, n_init=rcfg.n_init,
                           weights=flat_w)
+    return centroids
+
+
+def fed_kmeans_router(key, data, rcfg: RouterConfig, *, num_models=None,
+                      client_mask=None) -> dict:
+    """Algorithm 2. data: stacked padded client arrays (see federated.py)."""
+    M = num_models if num_models is not None else rcfg.num_models
+    centroids = fed_centroids(key, data, rcfg, client_mask=client_mask)
 
     # (iii) clients → per-(cluster, model) stats; (iv) weighted aggregation
     a, c, n = jax.vmap(lambda di: _cluster_stats(centroids, di,

@@ -1,0 +1,97 @@
+"""Parametric matrix-factorization router (RouterBench / RouteLLM style).
+
+Factorizes the sparse (query × model) evaluation matrix: a learned linear
+map projects the query embedding into a rank-r latent space, and each model
+carries a learned r-dim factor per head, so
+
+    A(x, m) = sigmoid(<phi(x), v_m^acc> + b_m^acc),   phi(x) = x W + b
+    C(x, m) =        <phi(x), v_m^cost> + b_m^cost
+
+Compared to the MLP router this is the most direct instantiation of the
+paper's non-uniform-coverage setting: every observed (query, model, score)
+triple updates one row × one column of the factorization, and models a
+client never logged are reached purely through the shared latent space.
+
+The params pytree mirrors the MLP head layout ({"heads": {"acc_w", ...}}),
+so head-wise machinery — the fused Pallas utility kernel, the onboarding
+freeze mask — applies unchanged with the latent phi(x) in place of the
+trunk features.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RouterConfig
+
+
+def init_mf_router(key, cfg: RouterConfig,
+                   num_models: Optional[int] = None) -> dict:
+    M = num_models if num_models is not None else cfg.num_models
+    r = cfg.mf_rank
+    kq, ka, kc = jax.random.split(key, 3)
+    return {
+        "proj": {
+            "w": jax.random.normal(kq, (cfg.d_emb, r)) * (cfg.d_emb ** -0.5),
+            "b": jnp.zeros((r,)),
+        },
+        "heads": {
+            "acc_w": jax.random.normal(ka, (r, M)) * (r ** -0.5),
+            "acc_b": jnp.zeros((M,)),
+            "cost_w": jax.random.normal(kc, (r, M)) * (r ** -0.5),
+            "cost_b": jnp.zeros((M,)),
+        },
+    }
+
+
+def factor_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, d_emb) → latent query factors phi(x): (B, r)."""
+    return x @ params["proj"]["w"] + params["proj"]["b"]
+
+
+def apply_mf_router(params: dict, x: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, d_emb) → (A (B, M) in [0,1], C (B, M))."""
+    z = factor_apply(params, x)
+    hd = params["heads"]
+    A = jax.nn.sigmoid(z @ hd["acc_w"] + hd["acc_b"])
+    C = z @ hd["cost_w"] + hd["cost_b"]
+    return A, C
+
+
+def mf_loss(params: dict, batch: dict, cfg: RouterConfig, *,
+            rng=None) -> jnp.ndarray:
+    """Eq. 3 MSE on the single logged model per sample — same contract as
+    ``mlp_router.router_loss`` so it plugs straight into the shared FedAvg
+    machinery (``rng`` is accepted but unused: the model is deterministic).
+
+    batch: {"x": (B,d), "m": (B,), "acc": (B,), "cost": (B,),
+            optional "w": (B,) sample weights (0 for padding)}.
+    """
+    A, C = apply_mf_router(params, batch["x"])
+    m = batch["m"][:, None]
+    a_hat = jnp.take_along_axis(A, m, axis=1)[:, 0]
+    c_hat = jnp.take_along_axis(C, m, axis=1)[:, 0]
+    err = (a_hat - batch["acc"]) ** 2 + (c_hat - batch["cost"]) ** 2
+    w = batch.get("w")
+    if w is None:
+        return jnp.mean(err)
+    return jnp.sum(err * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def add_model_factor(params: dict, key) -> dict:
+    """§6.3 model onboarding: append a fresh factor column to each head."""
+    hd = params["heads"]
+    r = hd["acc_w"].shape[0]
+    ka, kc = jax.random.split(key)
+    new = {
+        "acc_w": jnp.concatenate(
+            [hd["acc_w"], jax.random.normal(ka, (r, 1)) * r ** -0.5], axis=1),
+        "acc_b": jnp.concatenate([hd["acc_b"], jnp.zeros((1,))]),
+        "cost_w": jnp.concatenate(
+            [hd["cost_w"], jax.random.normal(kc, (r, 1)) * r ** -0.5], axis=1),
+        "cost_b": jnp.concatenate([hd["cost_b"], jnp.zeros((1,))]),
+    }
+    return {"proj": params["proj"], "heads": new}

@@ -1,0 +1,36 @@
+"""``repro.evalbench`` — RouterBench-style evaluation harness.
+
+The paper's headline claim (federation widens effective model coverage and
+improves the accuracy–cost frontier) needs more than hand-rolled frontier
+plots to be credible. This package supplies the RouterBench-style
+evidence chain:
+
+  * **many-model pools** (``pools``) — corpora with enough models that no
+    single one dominates the frontier;
+  * **frontier sweeps + AIQ** (``metrics``) — λ-swept accuracy–cost
+    frontiers collapsed to a scalar (Average Improvement in Quality:
+    normalized area under the frontier's upper envelope), plus the
+    zero-router / best-single / random / oracle reference points;
+  * **robustness scenarios** (``perturb``) — seed-deterministic
+    paraphrase-style embedding drift and adversarial queries that flip
+    routing decisions within a norm budget;
+  * **harness** (``harness``) — runs every registered router family
+    federated vs client-local over the scenarios, offline over splits or
+    online through the ``FedLoop`` — the engine behind
+    ``BENCH_routerbench.json``.
+"""
+from repro.evalbench.harness import (  # noqa: F401
+    eval_scenarios,
+    offline_routerbench,
+    online_routerbench,
+)
+from repro.evalbench.metrics import (  # noqa: F401
+    aiq,
+    reference_points,
+    sweep,
+)
+from repro.evalbench.perturb import (  # noqa: F401
+    adversarial_queries,
+    paraphrase_drift,
+)
+from repro.evalbench.pools import make_pool_corpus, pool_table  # noqa: F401

@@ -1,0 +1,140 @@
+"""The RouterBench-style harness: every family, federated vs client-local,
+clean vs perturbed — offline over splits or online through the FedLoop.
+
+Offline protocol (``offline_routerbench``): one many-model corpus, one
+federated split; per router family, fit once federated over all clients
+and once per client on its own slice (the no-federation deployment), then
+score both on the global test draw under each robustness scenario. The
+paper's claim is the gap: sparse per-client coverage starves the local
+fits on models they never logged, while federation pools the coverage —
+and the gap should *survive perturbation* (a router that only memorized
+exact embeddings loses its frontier under drift).
+
+Online protocol (``online_routerbench``): the same comparison live —
+``fed.scenarios.run_online_vs_frozen`` with embedding-perturbation drift
+switched on, any cold-startable family.
+
+Everything is keyed, so both protocols are bit-deterministic: CI enforces
+"federated AIQ ≥ client-local AIQ" on the smoke run without tolerance
+fudge (see benchmarks/perf_suite.py and ci.yml).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro import routers
+from repro.config import FedConfig, RouterConfig
+from repro.data.partition import client_slice, federated_split
+from repro.evalbench.metrics import reference_points, sweep
+from repro.evalbench.perturb import adversarial_queries, paraphrase_drift
+from repro.evalbench.pools import make_pool_corpus, pool_table
+
+SCENARIOS = ("clean", "paraphrase", "adversarial")
+
+
+def eval_scenarios(router, test: dict, key, *, sigma: float = 0.25,
+                   adv_budget: float = 0.35, adv_lam: float = 0.5,
+                   lams=None) -> dict:
+    """Score one fitted router on one test draw under every scenario.
+
+    Routing always runs on the scenario's view of the embeddings; scoring
+    always uses the clean queries' true tables (the task didn't change —
+    its representation did). Returns {scenario: {"aiq", ...}} with the
+    full frontier curves included per scenario.
+    """
+    out = {"clean": sweep(router.predict, test, lams=lams)}
+    xp = paraphrase_drift(key, test["x"], sigma)
+    out["paraphrase"] = sweep(router.predict, test, x=xp, lams=lams)
+    x_adv, info = adversarial_queries(router, test["x"], adv_lam,
+                                      budget=adv_budget)
+    out["adversarial"] = {**sweep(router.predict, test, x=x_adv, lams=lams),
+                          **info}
+    return out
+
+
+def _aiq_only(res: dict) -> dict:
+    """Strip the frontier curves down to JSON-friendly scalars."""
+    keep = ("aiq", "flip_rate", "mean_rel_norm")
+    return {sc: {k: v for k, v in d.items() if k in keep}
+            for sc, d in res.items()}
+
+
+def offline_routerbench(key, *, rcfg: RouterConfig, fcfg: FedConfig,
+                        families: Optional[Sequence[str]] = None,
+                        corpus: Optional[dict] = None,
+                        sigma: float = 0.25, adv_budget: float = 0.35,
+                        adv_lam: float = 0.5, local_steps: int = 400,
+                        lams=None) -> dict:
+    """The offline benchmark: {family: {"federated": {scenario: {"aiq"}},
+    "client_local": {scenario: {"aiq"}}}} plus pool/reference context.
+
+    ``client_local`` scenario AIQs are means over the per-client fits,
+    each scored on the same global test draw — the deployment where every
+    client is on its own. The paraphrase perturbation is drawn once per
+    benchmark (same drifted embeddings for every router, fair comparison);
+    the adversarial scenario attacks each router at its *own* decision
+    boundary (per-router worst case, the robustness-audit convention).
+    """
+    k_corpus, k_split, k_pert, k_fit = jax.random.split(key, 4)
+    if corpus is None:
+        corpus = make_pool_corpus(k_corpus, n_models=rcfg.num_models,
+                                  d_emb=rcfg.d_emb)
+    split = federated_split(k_split, corpus, fcfg)
+    test = split["test_global"]
+    results = {
+        "n_models": int(corpus["n_models"]),
+        "n_clients": int(fcfg.num_clients),
+        "pool": pool_table(corpus),
+        "reference": reference_points(test, lams=lams),
+        "families": {},
+    }
+    for name in (families if families is not None else routers.available()):
+        # crc32, not hash(): str hashing is salted per process and would
+        # break run-to-run determinism
+        k_fed, k_loc = jax.random.split(
+            jax.random.fold_in(k_fit, zlib.crc32(name.encode()) % (2 ** 31)))
+        fed, _ = routers.fit_federated(routers.make(name, rcfg),
+                                       split["train"], fcfg, key=k_fed)
+        fed_res = eval_scenarios(fed, test, k_pert, sigma=sigma,
+                                 adv_budget=adv_budget, adv_lam=adv_lam,
+                                 lams=lams)
+        local_kw = ({"steps": local_steps}
+                    if routers.get(name).parametric else {})
+        per_client = []
+        for c in range(fcfg.num_clients):
+            data_c = client_slice(split["train"], c)
+            if float(np.asarray(data_c["w"]).sum()) < 2:
+                continue  # a starved client has nothing to fit on
+            loc, _ = routers.fit_local(routers.make(name, rcfg), data_c,
+                                       fcfg, key=jax.random.fold_in(k_loc, c),
+                                       **local_kw)
+            per_client.append(eval_scenarios(loc, test, k_pert, sigma=sigma,
+                                             adv_budget=adv_budget,
+                                             adv_lam=adv_lam, lams=lams))
+        local_mean = {sc: {"aiq": float(np.mean([r[sc]["aiq"]
+                                                 for r in per_client]))}
+                      for sc in SCENARIOS}
+        results["families"][name] = {
+            "federated": _aiq_only(fed_res),
+            "client_local": local_mean,
+            "clients_fit": len(per_client),
+        }
+    return results
+
+
+def online_routerbench(*, family: str = "mf", embed_sigma: float = 0.5,
+                       cfg=None, seed: int = 0, **kw) -> dict:
+    """The online benchmark: live traffic with embedding-perturbation
+    drift (phases ≥ 1 route on a moved representation), FedLoop-maintained
+    router vs frozen client-local fits. Thin front-end over
+    ``fed.scenarios.run_online_vs_frozen`` — AUC ≡ AIQ here (both are the
+    normalized frontier area)."""
+    from repro.fed.scenarios import ScenarioConfig, run_online_vs_frozen
+    if cfg is None:
+        cfg = ScenarioConfig(embed_sigma=embed_sigma)
+    res = run_online_vs_frozen(cfg, family=family, seed=seed, **kw)
+    return {"family": family, "embed_sigma": float(cfg.embed_sigma), **res}

@@ -1,0 +1,66 @@
+"""Frontier sweeps and AIQ-style scalar summaries (RouterBench, Hu et al.).
+
+AIQ here is the normalized area under the non-decreasing upper envelope of
+the λ-swept accuracy–cost frontier — ``core.policy.frontier_auc`` — i.e.
+the average quality a router buys per unit of the observed cost range.
+A single point (a fixed model, a random router) degenerates to its
+accuracy, so every reference point lives on the same scale as the routers.
+
+Reference points (RouterBench's "zero router" analysis):
+  * ``zero_router`` — the frontier of the *models themselves*: each model
+    is one (mean cost, mean acc) point; routing must beat the upper
+    envelope of linear interpolations between them to be worth running;
+  * ``best_single`` — the highest-accuracy single model;
+  * ``random`` — uniform-random routing (mean of the model means);
+  * ``oracle`` — routing with the true tables (the ceiling).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import policy
+
+
+def aiq(costs, accs) -> float:
+    """Scalar frontier summary: normalized area under the upper envelope
+    of accuracy as a function of cost (degenerates to the accuracy itself
+    for a single point)."""
+    return policy.frontier_auc(costs, accs)
+
+
+def sweep(predict_fn, test: dict, *, lams=None, x=None) -> dict:
+    """λ-swept frontier of one router on one test draw.
+
+    test: {"x": (Q,d), "acc_table": (Q,M), "cost_table": (Q,M)} — route
+    with the router's *estimates*, score with the *true* tables. ``x``
+    overrides the routed embeddings (perturbation scenarios route on the
+    perturbed view while scoring keeps following the true per-query
+    tables). Returns {"costs", "accs", "aiq"}.
+    """
+    x_in = test["x"] if x is None else x
+    costs, accs, auc = policy.eval_router(
+        predict_fn, x_in, test["acc_table"], test["cost_table"], lams)
+    return {"costs": costs, "accs": accs, "aiq": float(auc)}
+
+
+def reference_points(test: dict, *, lams=None) -> dict:
+    """The router-free reference points for one test draw (see module
+    docstring). Returns {"zero_router_aiq", "best_single_aiq",
+    "random_aiq", "oracle_aiq", "models": [(cost, acc), ...]}."""
+    acc_t = np.asarray(test["acc_table"], np.float64)
+    cost_t = np.asarray(test["cost_table"], np.float64)
+    m_acc = acc_t.mean(axis=0)                      # (M,)
+    m_cost = cost_t.mean(axis=0)
+    zero = aiq(m_cost, m_acc)
+    best_single = float(m_acc.max())
+    random = float(m_acc.mean())
+    o_costs, o_accs = policy.frontier(test["acc_table"], test["cost_table"],
+                                      test["acc_table"], test["cost_table"],
+                                      lams)
+    return {
+        "zero_router_aiq": zero,
+        "best_single_aiq": best_single,
+        "random_aiq": random,
+        "oracle_aiq": aiq(o_costs, o_accs),
+        "models": [(float(c), float(a)) for c, a in zip(m_cost, m_acc)],
+    }

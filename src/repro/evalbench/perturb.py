@@ -1,0 +1,74 @@
+"""Robustness scenarios: perturbed and adversarial queries.
+
+"How Robust Are Router-LLMs?" shows routing decisions are brittle under
+paraphrase and adversarial rephrasing. The real text channel is stubbed in
+this repro (queries arrive as embeddings), so both scenarios act in
+embedding space:
+
+  * ``paraphrase_drift`` — Gaussian jitter of the query embedding: the
+    encoder-space effect of a meaning-preserving rewrite (sentence-encoder
+    neighborhoods are locally isotropic at small radii). Scoring keeps the
+    query's true tables: the router sees a moved representation of the
+    same underlying task.
+  * ``adversarial_queries`` — minimal interpolations toward a "donor"
+    query that the router sends elsewhere, binary-searched to the decision
+    boundary and kept only within a relative norm budget. Family-agnostic
+    (needs only ``route``), fully deterministic, and measures exactly the
+    failure RouterBench-style robustness audits probe: how small a
+    representation change flips the routing decision.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def paraphrase_drift(key, x, sigma: float):
+    """Seed-deterministic embedding perturbation: x + σ·ε, ε ~ N(0, I)."""
+    return x + sigma * jax.random.normal(key, np.shape(x))
+
+
+def adversarial_queries(router, x, lam: float, *, budget: float = 0.35,
+                        steps: int = 10) -> tuple[np.ndarray, dict]:
+    """Adversarial routing-flip queries within a relative L2 budget.
+
+    For every query, take the nearest donor query the router routes to a
+    *different* model at the same λ, binary-search the smallest
+    interpolation toward it that still flips the decision (the donor
+    endpoint flips by construction), and keep the perturbed query iff
+    ‖δ‖ ≤ budget·‖x‖. Queries with no donor or over budget stay clean.
+
+    Returns (x_adv (Q,d), {"flip_rate", "mean_rel_norm"}). Deterministic:
+    no randomness, only the router's own decision boundary.
+    """
+    x = np.asarray(x, np.float64)
+    Q = x.shape[0]
+    m0 = np.asarray(router.route(x, lam))
+
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    same = m0[:, None] == m0[None, :]
+    d2 = np.where(same, np.inf, d2)
+    donor = d2.argmin(axis=1)
+    has_donor = np.isfinite(d2[np.arange(Q), donor])
+    xd = x[donor]
+
+    lo = np.zeros(Q)
+    hi = np.ones(Q)
+    for _ in range(steps):
+        mid = 0.5 * (lo + hi)
+        xm = x + mid[:, None] * (xd - x)
+        flips = np.asarray(router.route(xm, lam)) != m0
+        hi = np.where(flips, mid, hi)
+        lo = np.where(flips, lo, mid)
+
+    delta = hi[:, None] * (xd - x)
+    rel = np.linalg.norm(delta, axis=1) / np.maximum(
+        np.linalg.norm(x, axis=1), 1e-12)
+    keep = has_donor & (rel <= budget)
+    x_adv = np.where(keep[:, None], x + delta, x)
+    flipped = keep & (np.asarray(router.route(x_adv, lam)) != m0)
+    x_adv = np.where(flipped[:, None], x_adv, x)
+    return x_adv.astype(np.float32), {
+        "flip_rate": float(flipped.mean()),
+        "mean_rel_norm": float(rel[flipped].mean()) if flipped.any() else 0.0,
+    }

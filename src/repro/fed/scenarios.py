@@ -13,7 +13,14 @@ schedules over heterogeneous clients:
     only a fraction of its turns, so its buffers stay thin and its
     federated weight small;
   * **mid-run model onboarding** — a reserved corpus model column joins
-    the pool mid-run (§6.3) through ``FedLoop.onboard_model``.
+    the pool mid-run (§6.3) through ``FedLoop.onboard_model``;
+  * **embedding-perturbation drift** — with ``embed_sigma > 0`` every
+    phase after the first re-draws a Gaussian perturbation of the corpus
+    embeddings (the encoder-space effect of paraphrased queries / an
+    encoder update): routing and harvesting see the perturbed vectors
+    while outcomes keep following the *true* per-query tables, so a
+    frozen router degrades and an online one re-fits to the moved
+    representation (the evalbench robustness scenario, run live).
 
 Everything is seed-deterministic: arrivals, outcomes and test sets never
 consult the wall clock, so ``run_online_vs_frozen`` produces identical
@@ -62,6 +69,7 @@ class ScenarioConfig:
     lam_choices: Tuple[float, ...] = (0.2, 0.5, 2.0)
     max_new: int = 4
     test_queries: int = 64     #: per (client, phase) evaluation draw
+    embed_sigma: float = 0.0   #: phase ≥ 1 embedding perturbation scale
     seed: int = 0
 
 
@@ -91,6 +99,20 @@ class TrafficScenario:
         self.stragglers = set(
             rng.choice(cfg.n_clients, size=n_strag, replace=False).tolist())
         self._outcome_rng = np.random.default_rng(cfg.seed + 7919)
+        # per-phase (possibly perturbed) embedding views: phase 0 is the
+        # clean corpus; later phases add a fresh seed-deterministic
+        # Gaussian perturbation when embed_sigma > 0 (paraphrase /
+        # encoder-update drift). Outcomes still key on the query index, so
+        # only the *representation* moves, not the ground truth.
+        x0 = np.asarray(self.corpus["x"], np.float32)
+        self._x_phase = [x0]
+        for p in range(1, cfg.phases):
+            if cfg.embed_sigma > 0.0:
+                prng = np.random.default_rng(cfg.seed * 7717 + p)
+                noise = prng.standard_normal(x0.shape).astype(np.float32)
+                self._x_phase.append(x0 + cfg.embed_sigma * noise)
+            else:
+                self._x_phase.append(x0)
 
     # ------------------------------------------------------------- traffic
     def events(self, phase: int) -> List[Tuple[int, int, float]]:
@@ -111,8 +133,10 @@ class TrafficScenario:
             out.append((c, q, lam))
         return out
 
-    def x(self, q: int) -> np.ndarray:
-        return np.asarray(self.corpus["x"][q], np.float32)
+    def x(self, q: int, phase: int = 0) -> np.ndarray:
+        """The query embedding as phase ``phase`` observes it (perturbed
+        for phases ≥ 1 when ``embed_sigma`` > 0)."""
+        return self._x_phase[phase][q]
 
     def prompt(self, q: int) -> str:
         """Deterministic filler text (the routing decision rides the
@@ -170,7 +194,7 @@ class TrafficScenario:
         tasks = rng.choice(cfg.n_tasks, size=cfg.test_queries,
                            p=self.mixtures[phase][client])
         qs = np.array([rng.choice(self._task_idx[t]) for t in tasks])
-        return {"x": np.asarray(self.corpus["x"])[qs],
+        return {"x": self._x_phase[phase][qs],
                 "acc_table": np.asarray(self.corpus["acc_table"])[qs],
                 "cost_table": np.asarray(self.corpus["cost_table"])[qs]}
 
@@ -191,8 +215,8 @@ def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
                          lcfg: Optional[FedLoopConfig] = None,
                          engine_cfg=None, rcfg: Optional[RouterConfig] = None,
                          aggregator=None, onboard_phase: Optional[int] = None,
-                         local_steps: int = 200, capacity: int = 256,
-                         seed: int = 0) -> dict:
+                         family: str = "mlp", local_steps: int = 200,
+                         capacity: int = 256, seed: int = 0) -> dict:
     """The headline experiment behind ``BENCH_fedloop.json``: live traffic
     through the serving engine, evaluations harvested per client, and two
     deployments compared under drift —
@@ -206,6 +230,10 @@ def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
     Both are scored at every phase end as the mean frontier AUC over the
     clients' current (drifted) query mixtures. Returns the per-phase AUC
     curves plus loop/serving accounting. Fully deterministic in its seeds.
+
+    ``family`` picks the router family from the zoo; it must cold-start —
+    ``init(key)`` has to produce a servable state (parametric families and
+    "elo"; "kmeans" cannot, its init is a no-op).
     """
     from repro.serve.engine import EngineConfig
     from repro.serve.gateway import RoutedServer
@@ -222,7 +250,12 @@ def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
                                             page_size=8)
 
     pool = scenario.make_pool()
-    router0 = routers.make("mlp", rcfg).init(jax.random.PRNGKey(seed + 11))
+    router0 = routers.make(family, rcfg).init(jax.random.PRNGKey(seed + 11))
+    if router0.state is None:
+        raise ValueError(
+            f"router family {family!r} cannot cold-start a live service: "
+            "init() produced no state (one-shot families other than 'elo' "
+            "need a pre-fitted router)")
     harvest = HarvestStore(cfg.d_emb, capacity=capacity,
                            clients=range(cfg.n_clients))
     srv = RoutedServer(pool, router0, engine_cfg=engine_cfg,
@@ -244,7 +277,7 @@ def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
         for (c, q, lam) in scenario.events(phase):
             rid = srv.submit(scenario.prompt(q), lam=lam,
                              max_new_tokens=cfg.max_new, client_id=c,
-                             x=scenario.x(q))
+                             x=scenario.x(q, phase))
             m = srv.routed_model(rid)
             srv.report_outcome(rid, *scenario.observe(q, m))
             loop.step()
@@ -262,10 +295,11 @@ def run_online_vs_frozen(cfg: ScenarioConfig = ScenarioConfig(), *,
                 if float(data_c["w"].sum()) < 2:
                     frozen.append(router0)
                     continue
+                local_kw = ({"steps": local_steps}
+                            if routers.get(family).parametric else {})
                 r, _ = routers.fit_local(
-                    routers.make("mlp", rcfg), data_c, fcfg,
-                    key=jax.random.PRNGKey(seed + 100 + c),
-                    steps=local_steps)
+                    routers.make(family, rcfg), data_c, fcfg,
+                    key=jax.random.PRNGKey(seed + 100 + c), **local_kw)
                 frozen.append(r)
         on, fr = [], []
         for c in range(cfg.n_clients):

@@ -85,11 +85,15 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, n_valid, *,
                            impl: str | None = None):
     """Decode attention against the paged KV pool (serve/kv_cache): each
     batch row attends the pages its page-table row names. On TPU the Pallas
-    kernel DMAs pages via scalar prefetch; the CPU fallback materializes
-    the gather (ref.paged_gather_ref) — correct, just not bandwidth-lean."""
+    kernel DMAs pages via scalar prefetch; the CPU fallback runs the
+    segment-summed formulation (ref.paged_decode_attention_seg_ref), which
+    reads the pools in place instead of materializing each row's
+    (B, Hkv, npg·ps, hd) gathered copy. The gather-based oracle
+    (ref.paged_decode_attention_ref) stays the parity ground truth in
+    tests for both this fallback and the Pallas kernel."""
     impl = impl or _default_impl()
     if impl == "pallas":
         return paged_decode_attention_pallas(q, k_pool, v_pool, page_table,
                                              n_valid, interpret=_interpret())
-    return ref.paged_decode_attention_ref(q, k_pool, v_pool, page_table,
-                                          n_valid)
+    return ref.paged_decode_attention_seg_ref(q, k_pool, v_pool, page_table,
+                                              n_valid)

@@ -103,3 +103,39 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_table, n_valid):
     return decode_attention_ref(q, paged_gather_ref(k_pool, page_table),
                                 paged_gather_ref(v_pool, page_table),
                                 n_valid)
+
+
+def paged_decode_attention_seg_ref(q, k_pool, v_pool, page_table, n_valid):
+    """Segment-summed paged decode: same contract as
+    ``paged_decode_attention_ref`` but WITHOUT the per-row K/V copy.
+
+    The gather oracle materializes each row's contiguous logical view —
+    (B, Hkv, npg·ps, hd) for both K and V, a full duplicate of every
+    in-flight row's cache each step. Here the pools are only ever read in
+    place: q scores against EVERY pool page in one einsum, a one-hot
+    page-membership operator (count[b,p,k] = how many valid logical slots
+    of row b live at pool slot (p,k)) masks and weights the exp terms, and
+    the V contraction runs pool-major. Duplicate table entries are counted
+    with multiplicity — exactly the weight they get in the gathered view —
+    so the two formulations agree for any table, not just engine-shaped
+    ones. The trade is compute for bandwidth: scores against all P pages
+    instead of each row's npg; the win is that nothing hd-wide is copied.
+    Matches the gather oracle to f32 reduction-order noise (the normalizer
+    and V sums run pool-major rather than logical-major), NOT bitwise.
+    """
+    P, Hkv, ps, hd = k_pool.shape
+    B, npg = page_table.shape
+    s = jnp.einsum("bhgd,phkd->bhgpk", q.astype(jnp.float32),
+                   k_pool.astype(jnp.float32)) * hd ** -0.5
+    member = jax.nn.one_hot(page_table, P, dtype=jnp.float32)   # (B, npg, P)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)            # (B,)
+    pos = jnp.arange(npg)[:, None] * ps + jnp.arange(ps)[None, :]
+    valid = (pos[None] < nv[:, None, None]).astype(jnp.float32)  # (B,npg,ps)
+    count = jnp.einsum("bip,bik->bpk", member, valid)           # (B, P, ps)
+    cnt = count[:, None, None]                                  # (B,1,1,P,ps)
+    s = jnp.where(cnt > 0, s, jnp.float32(-1e30))
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    p = cnt * jnp.exp(s - m)                                    # masked → 0
+    p = p / jnp.maximum(jnp.sum(p, axis=(-2, -1), keepdims=True), 1e-30)
+    out = jnp.einsum("bhgpk,phkd->bhgd", p, v_pool.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -298,6 +298,13 @@ def attn_decode_step_paged(p: dict, x: jnp.ndarray, cache: dict,
         out = kops.paged_decode_attention(qg, k_cache, v_cache, page_table,
                                           pos + 1)
     else:
+        # Deliberately the GATHER formulation, not the copy-free
+        # segment-summed one (ref.paged_decode_attention_seg_ref, the CPU
+        # fallback of kops.paged_decode_attention): the engine's tokens
+        # must stay bit-identical to solo serving, and that requires the
+        # softmax normalizer and V contraction to reduce in the same
+        # logical-position order as _masked_grouped_attn — the seg form
+        # reduces pool-major and differs in the last ulp.
         from repro.kernels.ref import paged_gather_ref
         k_g = paged_gather_ref(k_cache, page_table)   # (B, Hkv, npg*ps, hd)
         v_g = paged_gather_ref(v_cache, page_table)

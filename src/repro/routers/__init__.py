@@ -5,7 +5,7 @@ federated-fit entry point:
 
     from repro import routers
 
-    router = routers.make("mlp", rcfg)          # or "kmeans"
+    router = routers.make("mlp", rcfg)          # or "kmeans"/"mf"/"elo"
     router, hist = routers.fit_federated(router, split["train"], fcfg,
                                          key=jax.random.PRNGKey(0))
     A, C = router.predict(x)                    # estimates (Q, M)
@@ -13,13 +13,16 @@ federated-fit entry point:
     router.save("router.msgpack")
     router = routers.load("router.msgpack", rcfg)
 
-Families: "mlp" (parametric, Alg. 1 FedAvg — iterative, shard_map-able)
-and "kmeans" (nonparametric, Alg. 2 — one-shot statistics aggregation).
-New families subclass ``Router`` and ``@register("name")`` themselves.
+Families: "mlp" and "mf" (parametric, Alg. 1 FedAvg — iterative,
+scan-fused, aggregator-pluggable), "kmeans" and "elo" (nonparametric,
+Alg. 2 — one-shot statistics aggregation). New families subclass
+``Router`` and ``@register("name")`` themselves.
 """
 from repro.routers.base import Router  # noqa: F401
+from repro.routers.elo import EloRouter  # noqa: F401
 from repro.routers.fit import fit_federated, fit_local  # noqa: F401
 from repro.routers.kmeans import KMeansRouter  # noqa: F401
+from repro.routers.mf import MFRouter  # noqa: F401
 from repro.routers.mlp import MLPRouter  # noqa: F401
 from repro.routers.registry import (  # noqa: F401
     available,

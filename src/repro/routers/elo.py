@@ -1,0 +1,97 @@
+"""Nonparametric similarity-weighted Elo/ranking router (one-shot, Alg. 2).
+
+Wraps ``core/elo_router.py``. Fitting is the one-shot federated statistics
+protocol — federated K-means anchors, then one round of similarity-weighted
+evaluation sums whose server aggregation is plain addition. The decision
+hot path reuses the fused Pallas ``router_utility`` kernel with the anchor
+similarity weights as features: A = sigmoid(s·R / s_elo) and C = s·C are
+both linear heads over s, exactly the kernel's contract.
+
+Unlike the K-means family, ``init(key)`` returns a *fitted* uninformative
+prior state (flat ratings over random anchors) with the same pytree
+structure as any real fit, so a gateway can serve from a cold start and
+hot-swap the first real fit in without retracing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import elo_router as EL
+from repro.kernels import ops as kops
+from repro.routers.base import Router
+from repro.routers.registry import register
+
+
+@register("elo")
+class EloRouter(Router):
+    parametric = False
+
+    # ------------------------------------------------------------- interface
+
+    def init(self, key) -> "EloRouter":
+        """Cold-start prior state (see ``core.elo_router.prior_state``) —
+        shape-compatible with every fit of the same (k_global, M)."""
+        return self.with_state(
+            EL.prior_state(key, self.rcfg, num_models=self._num_models))
+
+    def predict(self, x):
+        self._require_state()
+        return EL.predict(self.state, x)
+
+    def route(self, x, lam):
+        """Hot path: anchor similarities → fused utility argmax."""
+        self._require_state()
+        s = EL.kernel_weights(x, self.state["anchors"], self.state["tau"])
+        zeros = jnp.zeros((self.state["rating"].shape[1],))
+        choice, _ = kops.router_utility(s, self.state["rating"] / EL.ELO_SCALE,
+                                        zeros, self.state["C"], zeros, lam)
+        return choice
+
+    def _state_num_models(self) -> int:
+        return int(self.state["rating"].shape[1])
+
+    # ------------------------------------------------------------ onboarding
+
+    def onboard_model(self, calib, **kw) -> "EloRouter":
+        """§6.3, training-free: rate the new model from calibration evals
+        {"x","acc","cost","w"} (one new rating column, re-finalized)."""
+        self._require_state()
+        return self.with_state(
+            EL.add_model_stats(self.state, calib, self.rcfg))
+
+    def onboard_clients(self, data_new, **kw) -> "EloRouter":
+        """App. D.3, training-free: add the new clients' similarity-weighted
+        sums against the existing anchors (exact — raw sums are in state)."""
+        self._require_state()
+        return self.with_state(
+            EL.merge_client_stats(self.state, data_new, self.rcfg,
+                                  num_models=self.num_models))
+
+    # --------------------------------------------------------------- fitting
+
+    def _fit_federated(self, key, data, fcfg, *, rounds=None, eval_fn=None,
+                       mesh=None, client_mask=None, **kw):
+        """Alg. 2: one-shot — no rounds, no loss. ``rounds`` does not apply
+        (and is ignored); fcfg is accepted for signature parity with
+        parametric families. ``mesh`` and parametric-only knobs are
+        rejected rather than silently dropped."""
+        if mesh is not None:
+            raise ValueError("the elo family is one-shot: there is no "
+                             "sharded fitting path — drop mesh=")
+        if kw:
+            raise ValueError("elo fit_federated got unsupported "
+                             f"options: {', '.join(sorted(kw))}")
+        state = EL.fed_elo_router(key, data, self.rcfg,
+                                  num_models=self._num_models,
+                                  client_mask=client_mask)
+        new = self.with_state(state)
+        hist = {"loss": [], "eval": [eval_fn(new)] if eval_fn else []}
+        return new, hist
+
+    def _fit_local(self, key, data_i, fcfg, *, k=None, **kw):
+        """Client-local (no-FL) baseline: own anchors + own ratings. With
+        ``k=rcfg.k_global`` on pooled data this is the centralized
+        baseline."""
+        state = EL.local_elo_router(key, data_i, self.rcfg,
+                                    num_models=self._num_models, k=k)
+        return self.with_state(state), {"loss": []}

@@ -1,0 +1,122 @@
+"""Parametric matrix-factorization router behind the unified interface.
+
+Wraps ``core/mf_router.py``: query embeddings project into a rank-r latent
+space where each model carries a learned factor per head — the direct
+factorization of the sparse (query × model) evaluation matrix the paper's
+non-uniform-coverage setting produces.
+
+Federated fitting is iterative FedAvg — the *same* ``core.federated``
+machinery as the MLP family (scan-fused rounds, compiled-fit caches,
+pluggable aggregation strategies), selected via its ``loss_fn`` hook. The
+decision hot path reuses the fused Pallas ``router_utility`` kernel with
+the latent factors in place of trunk features: the params carry the same
+``heads`` layout, so one kernel serves both parametric families.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import expansion as E
+from repro.core import federated as F
+from repro.core import mf_router as MF
+from repro.kernels import ops as kops
+from repro.routers.base import Router
+from repro.routers.registry import register
+
+
+@register("mf")
+class MFRouter(Router):
+    parametric = True
+
+    # ------------------------------------------------------------- interface
+
+    def init(self, key) -> "MFRouter":
+        return self.with_state(
+            MF.init_mf_router(key, self.rcfg, num_models=self._num_models))
+
+    def predict(self, x):
+        self._require_state()
+        return MF.apply_mf_router(self.state, x)
+
+    def route(self, x, lam):
+        """Fused Pallas hot path: latent factors → utility argmax."""
+        self._require_state()
+        z = MF.factor_apply(self.state, x)
+        hd = self.state["heads"]
+        choice, _ = kops.router_utility(z, hd["acc_w"], hd["acc_b"],
+                                        hd["cost_w"], hd["cost_b"], lam)
+        return choice
+
+    def loss(self, batch, *, rng=None):
+        self._require_state()
+        return MF.mf_loss(self.state, batch, self.rcfg, rng=rng)
+
+    def _state_num_models(self) -> int:
+        return int(self.state["heads"]["acc_b"].shape[0])
+
+    # ------------------------------------------------------------ onboarding
+
+    def onboard_model(self, calib, *, key=None, fcfg=None, n_new: int = 1,
+                      steps: int = 300) -> "MFRouter":
+        """§6.3: append fresh factor columns, train ONLY those columns on
+        the calibration evals (projection + existing factors frozen)."""
+        self._require_state()
+        if key is None or fcfg is None:
+            raise ValueError("MF model onboarding trains the new factors: "
+                             "pass key= and fcfg=")
+        params, _ = E.onboard_models_mf(key, self.state, calib, self.rcfg,
+                                        fcfg, n_new, steps=steps)
+        return self.with_state(params)
+
+    def onboard_clients(self, data_new, *, key=None, fcfg=None,
+                        rounds: int = 15, beta: float = 1.0) -> "MFRouter":
+        """App. D.3: continued FedAvg on the new clients only, anchored by
+        a distillation penalty toward the frozen pre-join factorization."""
+        self._require_state()
+        if key is None or fcfg is None:
+            raise ValueError("MF client onboarding continues FedAvg: pass "
+                             "key= and fcfg=")
+        params, _ = E.onboard_clients_mf(key, self.state, data_new,
+                                         self.rcfg, fcfg, rounds=rounds,
+                                         beta=beta)
+        return self.with_state(params)
+
+    # --------------------------------------------------------------- fitting
+
+    def _init_for_fit(self, key):
+        """Initial params for a fit entry point. Unlike the MLP family
+        there is no legacy trainer to defer to, so an unfitted router
+        always inits here — with the same (key, k_init = split(key)) key
+        convention the legacy entry points use."""
+        if self.state is not None:
+            return self.state
+        _, k_init = jax.random.split(key)
+        return MF.init_mf_router(k_init, self.rcfg,
+                                 num_models=self._num_models)
+
+    def _fit_federated(self, key, data, fcfg, *, rounds=None, eval_fn=None,
+                       mesh=None, **kw):
+        """Alg. 1 via ``core.federated.fedavg`` with the MF loss — kw
+        forwards optimizer/full_batch/freeze/distill/client_mask/dp_sigma/
+        aggregator/eval_every exactly like the MLP family. No sharded
+        path: drop mesh= to use the in-process simulation."""
+        if mesh is not None:
+            raise ValueError("the mf family has no sharded fitting path — "
+                             "drop mesh= to use the in-process simulation")
+        wrapped = (None if eval_fn is None
+                   else lambda p: eval_fn(self.with_state(p)))
+        params, hist = F.fedavg(key, data, self.rcfg, fcfg, rounds=rounds,
+                                init=self._init_for_fit(key),
+                                eval_fn=wrapped, loss_fn=MF.mf_loss, **kw)
+        return self.with_state(params), hist
+
+    def _fit_local(self, key, data_i, fcfg, *, steps: int = 400,
+                   optimizer: str = "adamw", **kw):
+        """Client-local / centralized ERM baseline (flat dataset)."""
+        params, losses = F.sgd_train(key, data_i, self.rcfg, fcfg,
+                                     steps=steps, optimizer=optimizer,
+                                     init=self._init_for_fit(key),
+                                     loss_fn=MF.mf_loss, **kw)
+        return self.with_state(params), {"loss": [float(l) for l in
+                                                  np.asarray(losses)]}

@@ -30,11 +30,11 @@ def available() -> tuple[str, ...]:
 
 
 def get(name: str) -> Type[Router]:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown router family {name!r}; available: "
-                       f"{', '.join(available())}") from None
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown router family {name!r} — registered families: "
+            f"{', '.join(available())}")
+    return _REGISTRY[name]
 
 
 def make(name: str, rcfg: RouterConfig, *, num_models: Optional[int] = None,

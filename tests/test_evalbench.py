@@ -1,0 +1,139 @@
+"""RouterBench-style evaluation harness (repro.evalbench): AIQ metric
+properties, seed-deterministic robustness scenarios, the adversarial
+routing-flip budget discipline, and the offline federated-vs-client-local
+benchmark contract (the CI floor itself runs on BENCH_routerbench.smoke.json
+via benchmarks/perf_suite.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, RouterConfig
+from repro.data.partition import federated_split
+from repro.evalbench.harness import (SCENARIOS, eval_scenarios,
+                                     offline_routerbench)
+from repro.evalbench.metrics import aiq, reference_points, sweep
+from repro.evalbench.perturb import adversarial_queries, paraphrase_drift
+from repro.evalbench.pools import make_pool_corpus, pool_table
+
+RCFG = RouterConfig(d_emb=12, num_models=4, hidden=(16, 16), dropout=0.0,
+                    k_local=3, k_global=4, mf_rank=6)
+FCFG = FedConfig(num_clients=3, rounds=2, batch_size=32, lr=3e-3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_pool_corpus(jax.random.PRNGKey(0), n_models=4,
+                            n_queries=500, n_tasks=3, d_emb=12)
+
+
+@pytest.fixture(scope="module")
+def split(corpus):
+    return federated_split(jax.random.PRNGKey(1), corpus, FCFG)
+
+
+@pytest.fixture(scope="module")
+def fitted(split):
+    """A one-shot fit (fast, deterministic) to probe the scenarios with."""
+    r, _ = routers.fit_federated(routers.make("kmeans", RCFG),
+                                 split["train"], FCFG,
+                                 key=jax.random.PRNGKey(2))
+    return r
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_pool_table_accounts_for_every_query(corpus):
+    table = pool_table(corpus)
+    assert len(table) == 4
+    assert sum(row["wins"] for row in table) == 500
+    assert all(0.0 <= row["mean_acc"] <= 1.0 for row in table)
+
+
+def test_reference_points_scale_and_ordering(split):
+    ref = reference_points(split["test_global"])
+    for k in ("zero_router_aiq", "best_single_aiq", "random_aiq",
+              "oracle_aiq"):
+        assert 0.0 <= ref[k] <= 1.0
+    # the oracle routes per query with the true tables — nothing beats it
+    assert ref["oracle_aiq"] >= ref["best_single_aiq"] - 1e-9
+    assert ref["oracle_aiq"] >= ref["random_aiq"] - 1e-9
+    assert len(ref["models"]) == 4
+
+
+def test_sweep_scores_router_between_floor_and_oracle(split, fitted):
+    test = split["test_global"]
+    res = sweep(fitted.predict, test)
+    ref = reference_points(test)
+    assert 0.0 <= res["aiq"] <= ref["oracle_aiq"] + 1e-9
+    assert len(res["costs"]) == len(res["accs"])
+
+
+def test_aiq_of_single_point_is_its_accuracy():
+    assert aiq(np.array([0.4]), np.array([0.8])) == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------- scenarios
+
+def test_paraphrase_drift_is_seeded_and_scaled(split):
+    x = split["test_global"]["x"][:32]
+    a = paraphrase_drift(jax.random.PRNGKey(3), x, 0.25)
+    b = paraphrase_drift(jax.random.PRNGKey(3), x, 0.25)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = paraphrase_drift(jax.random.PRNGKey(4), x, 0.25)
+    assert float(np.abs(np.asarray(a) - np.asarray(c)).max()) > 0
+    clean = paraphrase_drift(jax.random.PRNGKey(3), x, 0.0)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(x))
+
+
+def test_adversarial_queries_flip_within_budget(split, fitted):
+    x = np.asarray(split["test_global"]["x"][:64])
+    budget, lam = 0.35, 0.5
+    x_adv, info = adversarial_queries(fitted, x, lam, budget=budget)
+    assert x_adv.shape == x.shape and x_adv.dtype == np.float32
+    m0 = np.asarray(fitted.route(x, lam))
+    m1 = np.asarray(fitted.route(x_adv, lam))
+    changed = np.any(x_adv != x.astype(np.float32), axis=1)
+    # every perturbed query flips the decision, within the norm budget
+    assert np.all(m0[changed] != m1[changed])
+    rel = (np.linalg.norm(x_adv - x, axis=1)
+           / np.maximum(np.linalg.norm(x, axis=1), 1e-12))
+    assert np.all(rel[changed] <= budget + 1e-6)
+    assert info["flip_rate"] == pytest.approx(changed.mean())
+    # deterministic: the attack only uses the router's decision boundary
+    x_adv2, info2 = adversarial_queries(fitted, x, lam, budget=budget)
+    np.testing.assert_array_equal(x_adv, x_adv2)
+    assert info == info2
+
+
+def test_eval_scenarios_shape(split, fitted):
+    res = eval_scenarios(fitted, split["test_global"],
+                         jax.random.PRNGKey(5))
+    assert set(res) == set(SCENARIOS)
+    for sc in SCENARIOS:
+        assert 0.0 <= res[sc]["aiq"] <= 1.0
+    assert "flip_rate" in res["adversarial"]
+
+
+# ------------------------------------------------------------------ harness
+
+def test_offline_routerbench_contract(corpus):
+    """Structure + determinism of the offline benchmark on a tiny run (the
+    federated ≥ client-local floor is enforced on the CI-sized smoke
+    bench, not this micro config)."""
+    res = offline_routerbench(jax.random.PRNGKey(7), rcfg=RCFG, fcfg=FCFG,
+                              families=("kmeans", "elo"), corpus=corpus,
+                              local_steps=5)
+    assert res["n_models"] == 4 and res["n_clients"] == 3
+    assert set(res["families"]) == {"kmeans", "elo"}
+    for fam in res["families"].values():
+        assert fam["clients_fit"] >= 1
+        for side in ("federated", "client_local"):
+            assert set(fam[side]) == set(SCENARIOS)
+            for sc in SCENARIOS:
+                assert 0.0 <= fam[side][sc]["aiq"] <= 1.0
+    res2 = offline_routerbench(jax.random.PRNGKey(7), rcfg=RCFG, fcfg=FCFG,
+                               families=("kmeans", "elo"), corpus=corpus,
+                               local_steps=5)
+    assert res == res2

@@ -22,7 +22,8 @@ TINY = ModelConfig(name="fedloop-tiny", arch_type="dense", n_layers=2,
 D_EMB = 8
 N_CLIENTS = 3
 CAP = 32
-RCFG = RouterConfig(d_emb=D_EMB, num_models=2, hidden=(16, 16), dropout=0.0)
+RCFG = RouterConfig(d_emb=D_EMB, num_models=2, hidden=(16, 16), dropout=0.0,
+                    k_local=3, k_global=4, mf_rank=4)
 FCFG = FedConfig(num_clients=N_CLIENTS, participation=1.0, batch_size=16,
                  lr=3e-3)
 
@@ -34,11 +35,11 @@ def _trees_equal(a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
-def make_server():
+def make_server(family: str = "mlp"):
     params = init_params(jax.random.PRNGKey(0), TINY)
     pool = [PoolModel("m0", TINY, params, 0.1),
             PoolModel("m1", TINY, params, 0.5)]
-    router = routers.make("mlp", RCFG).init(jax.random.PRNGKey(1))
+    router = routers.make(family, RCFG).init(jax.random.PRNGKey(1))
     harvest = HarvestStore(D_EMB, capacity=CAP, clients=range(N_CLIENTS))
     return RoutedServer(pool, router, harvest=harvest,
                         engine_cfg=EngineConfig(slots=4, max_seq=32,
@@ -195,6 +196,32 @@ def test_hot_swap_zero_retraces_under_traffic(loop_setup):
     drive_traffic(srv, loop, 6, seed=4)
     assert len(gateway.TRACE_LOG) == n0, \
         f"hot swap retraced: {list(gateway.TRACE_LOG)[n0:]}"
+    assert srv.router_version == v0 + 2
+
+
+@pytest.mark.parametrize("family", ["mf", "elo"])
+def test_hot_swap_zero_retraces_zoo_families(family):
+    """The new zoo families honor the same hot-swap contract as mlp: every
+    fit of a given (config, M) produces a state with identical pytree
+    structure and shapes, so FedLoop syncs swap under the cached route jit
+    with ZERO retraces — TRACE_LOG-pinned. (mf cold-starts from random
+    factors, elo from its jittered prior state.)"""
+    srv = make_server(family)
+    loop = FedLoop(srv, FCFG, key=jax.random.PRNGKey(7),
+                   cfg=FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=2,
+                                     min_samples=1))
+    drive_traffic(srv, loop, 9)                # warm every program
+    loop.sync(key=jax.random.PRNGKey(3))       # first fit replaces cold start
+    drive_traffic(srv, loop, 4, seed=2)        # warm post-swap shapes too
+    gateway.reset_trace_log()
+    n0 = len(gateway.TRACE_LOG)
+    v0 = srv.router_version
+    loop.sync(key=jax.random.PRNGKey(4))
+    drive_traffic(srv, loop, 6, seed=3)
+    loop.sync(key=jax.random.PRNGKey(5))
+    drive_traffic(srv, loop, 6, seed=4)
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"{family} hot swap retraced: {list(gateway.TRACE_LOG)[n0:]}"
     assert srv.router_version == v0 + 2
 
 

@@ -354,6 +354,57 @@ def test_paged_decode_attention_matches_oracle(B, Hkv, g, ps, npg, P):
                                atol=2e-5)
 
 
+@pytest.mark.parametrize("B,Hkv,g,ps,npg,P", [(2, 2, 2, 8, 4, 12),
+                                              (3, 1, 4, 16, 2, 5),
+                                              (4, 2, 1, 8, 3, 6)])
+def test_paged_seg_matches_gather_oracle(B, Hkv, g, ps, npg, P):
+    """The copy-free segment-summed CPU formulation == the gather oracle
+    over random tables — including duplicate page entries (counted with
+    multiplicity on both sides) and fully-invalid rows (exact zeros)."""
+    hd = 32
+    ks = jax.random.split(jax.random.PRNGKey(B * ps + P), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kp = jax.random.normal(ks[1], (P, Hkv, ps, hd))
+    vp = jax.random.normal(ks[2], (P, Hkv, ps, hd))
+    rng = np.random.default_rng(1)
+    pt = jnp.asarray(rng.integers(0, P, size=(B, npg)), jnp.int32)
+    nv = jnp.asarray(rng.integers(0, npg * ps + 1, size=(B,)), jnp.int32)
+    nv = nv.at[0].set(0)                        # pin one fully-invalid row
+    got = ref.paged_decode_attention_seg_ref(q, kp, vp, pt, nv)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pt, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-6)
+    assert np.all(np.asarray(got)[0] == 0.0)
+    # a table with every row naming the SAME page twice still agrees
+    pt_dup = jnp.tile(pt[:, :1], (1, npg))
+    np.testing.assert_allclose(
+        np.asarray(ref.paged_decode_attention_seg_ref(q, kp, vp, pt_dup, nv)),
+        np.asarray(ref.paged_decode_attention_ref(q, kp, vp, pt_dup, nv)),
+        rtol=2e-5, atol=2e-6)
+
+
+def test_ops_paged_cpu_fallback_is_segment_summed(monkeypatch):
+    """kops.paged_decode_attention's non-Pallas path dispatches to the
+    seg formulation and stays within float noise of the gather oracle."""
+    from repro.kernels import ops as kops
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    B, Hkv, g, ps, npg, P, hd = 2, 2, 2, 8, 3, 5, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, g, hd))
+    kp = jax.random.normal(ks[1], (P, Hkv, ps, hd))
+    vp = jax.random.normal(ks[2], (P, Hkv, ps, hd))
+    pt = jnp.asarray([[0, 1, 2], [3, 4, 0]], jnp.int32)
+    nv = jnp.asarray([17, 24], jnp.int32)
+    got = kops.paged_decode_attention(q, kp, vp, pt, nv)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.paged_decode_attention_seg_ref(q, kp, vp, pt, nv)))
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.paged_decode_attention_ref(q, kp, vp, pt, nv)),
+        rtol=2e-5, atol=2e-6)
+
+
 def test_paged_decode_attention_equals_contiguous():
     """A paged pool whose table lays pages out contiguously must equal the
     contiguous kernel on the equivalent (B, Hkv, S, hd) cache — paging is

@@ -16,8 +16,10 @@ from repro.data.partition import client_slice, federated_split, flatten_clients
 from repro.data.synthetic import make_eval_corpus
 
 RCFG = RouterConfig(d_emb=16, num_models=5, hidden=(32, 32), k_local=4,
-                    k_global=6)
+                    k_global=6, mf_rank=8)
 FCFG = FedConfig(num_clients=4, rounds=3, batch_size=32, seed=1)
+# every registered family — new zoo members are picked up automatically
+ALL_FAMILIES = sorted(routers.available())
 
 
 @pytest.fixture(scope="module")
@@ -43,6 +45,33 @@ def fed_km(split):
     return router
 
 
+@pytest.fixture(scope="module", params=ALL_FAMILIES)
+def fed_any(request, split):
+    """One federated fit per registered family — everything asserted on
+    this fixture holds for future zoo additions automatically."""
+    router, hist = routers.fit_federated(
+        routers.make(request.param, RCFG), split["train"], FCFG,
+        key=jax.random.fold_in(jax.random.PRNGKey(2),
+                               ALL_FAMILIES.index(request.param)))
+    return router, hist
+
+
+@pytest.fixture(scope="module")
+def fed_mf(split):
+    router, _ = routers.fit_federated(routers.make("mf", RCFG),
+                                      split["train"], FCFG,
+                                      key=jax.random.PRNGKey(4))
+    return router
+
+
+@pytest.fixture(scope="module")
+def fed_elo(split):
+    router, _ = routers.fit_federated(routers.make("elo", RCFG),
+                                      split["train"], FCFG,
+                                      key=jax.random.PRNGKey(5))
+    return router
+
+
 def _trees_equal(a, b):
     la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
     assert len(la) == len(lb)
@@ -52,20 +81,28 @@ def _trees_equal(a, b):
 
 # -------------------------------------------------------------------- registry
 
-def test_registry_lists_both_families():
-    assert set(routers.available()) >= {"mlp", "kmeans"}
+def test_registry_lists_all_families():
+    assert set(routers.available()) >= {"mlp", "kmeans", "mf", "elo"}
 
 
 def test_make_unknown_family_raises():
-    with pytest.raises(KeyError, match="unknown router family"):
+    """A typo'd family name must fail with a ValueError that NAMES every
+    registered family — the error is the discovery surface."""
+    with pytest.raises(ValueError, match="unknown router family") as ei:
         routers.make("transformer", RCFG)
+    for name in routers.available():
+        assert name in str(ei.value)
 
 
 def test_make_builds_registered_classes():
     assert isinstance(routers.make("mlp", RCFG), routers.MLPRouter)
     assert isinstance(routers.make("kmeans", RCFG), routers.KMeansRouter)
+    assert isinstance(routers.make("mf", RCFG), routers.MFRouter)
+    assert isinstance(routers.make("elo", RCFG), routers.EloRouter)
     assert routers.make("mlp", RCFG).parametric
+    assert routers.make("mf", RCFG).parametric
     assert not routers.make("kmeans", RCFG).parametric
+    assert not routers.make("elo", RCFG).parametric
 
 
 # ------------------------------------------------------------- legacy parity
@@ -238,20 +275,57 @@ def test_uninitialized_router_raises(split):
         routers.make("kmeans", RCFG).loss({})
 
 
-# ----------------------------------------------------------------- save/load
+# --------------------------------------- every-registry-name contract suite
 
-def test_save_load_round_trip(tmp_path, fed_mlp, fed_km, split):
+def test_fit_federated_dispatch_every_family(fed_any, split):
+    """fit_federated works for every registered name and the result is a
+    usable router: sane predictions and a fused route that agrees with
+    predict + argmax."""
+    router, hist = fed_any
+    assert router.num_models == RCFG.num_models
+    assert set(hist) >= {"loss", "eval"}
+    x = split["test_global"]["x"][:19]
+    A, C = router.predict(x)
+    assert A.shape == (19, RCFG.num_models) and C.shape == A.shape
+    assert bool(jnp.all((A >= 0) & (A <= 1)))
+    for lam in (0.0, 0.7):
+        want = jnp.argmax(A - lam * C, axis=-1)
+        np.testing.assert_array_equal(np.asarray(router.route(x, lam)),
+                                      np.asarray(want))
+
+
+def test_fit_local_dispatch_every_family(fed_any, split):
+    name = fed_any[0].name
+    kw = {"steps": 8} if routers.get(name).parametric else {}
+    r, hist = routers.fit_local(routers.make(name, RCFG),
+                                client_slice(split["train"], 0), FCFG,
+                                key=jax.random.PRNGKey(31), **kw)
+    assert r.num_models == RCFG.num_models and "loss" in hist
+    A, _ = r.predict(split["test_global"]["x"][:3])
+    assert A.shape == (3, RCFG.num_models)
+
+
+def test_save_load_round_trip(tmp_path, fed_any, split):
     x = split["test_global"]["x"][:5]
-    for router in (fed_mlp[0], fed_km):
-        path = tmp_path / f"{router.name}.msgpack"
-        router.save(path)
-        restored = routers.load(path, RCFG)
-        assert type(restored) is type(router)
-        _trees_equal(router.state, restored.state)
-        A0, C0 = router.predict(x)
-        A1, C1 = restored.predict(x)
-        np.testing.assert_array_equal(np.asarray(A0), np.asarray(A1))
-        np.testing.assert_array_equal(np.asarray(C0), np.asarray(C1))
+    router = fed_any[0]
+    path = tmp_path / f"{router.name}.msgpack"
+    router.save(path)
+    restored = routers.load(path, RCFG)
+    assert type(restored) is type(router)
+    _trees_equal(router.state, restored.state)
+    A0, C0 = router.predict(x)
+    A1, C1 = restored.predict(x)
+    np.testing.assert_array_equal(np.asarray(A0), np.asarray(A1))
+    np.testing.assert_array_equal(np.asarray(C0), np.asarray(C1))
+
+
+def test_with_state_round_trip_every_family(fed_any):
+    """with_state / make(state=) rebuild an equivalent router (value
+    semantics over the same pytree)."""
+    router = fed_any[0]
+    rebuilt = routers.make(router.name, RCFG, state=router.state)
+    _trees_equal(router.state, rebuilt.state)
+    assert rebuilt.num_models == router.num_models
 
 
 # ---------------------------------------------------------------- onboarding
@@ -325,3 +399,114 @@ def test_distill_weight_default_matches_explicit(split):
                               distill=(theta0, beta))
     manual = R.router_loss(params, di, RCFG) + beta * explicit
     np.testing.assert_allclose(float(loss), float(manual), rtol=1e-5)
+
+
+# -------------------------------------------------- matrix-factorization zoo
+
+def test_mf_fit_matches_direct_fedavg_with_mf_loss(split):
+    """The mf family is plain core.federated.fedavg under its loss hook —
+    same init convention, same key, bit-for-bit."""
+    from repro.core import mf_router as MF
+    key = jax.random.PRNGKey(40)
+    router, hist = routers.fit_federated(routers.make("mf", RCFG),
+                                         split["train"], FCFG, key=key)
+    _, k_init = jax.random.split(key)
+    init = MF.init_mf_router(k_init, RCFG)
+    legacy, lhist = F.fedavg(key, split["train"], RCFG, FCFG, init=init,
+                             loss_fn=MF.mf_loss)
+    _trees_equal(router.state, legacy)
+    assert hist["loss"] == lhist["loss"]
+
+
+def test_mf_fit_with_aggregator_strategies(split):
+    """The mf family rides the SAME aggregation strategies as mlp:
+    secure-agg masks cancel at scale=0 (bit-identical to plain FedAvg),
+    Gaussian DP perturbs the fit."""
+    from repro.fed.aggregators import (GaussianDPAggregator,
+                                       SecureAggAggregator)
+    key = jax.random.PRNGKey(41)
+    plain, _ = routers.fit_federated(routers.make("mf", RCFG),
+                                     split["train"], FCFG, key=key)
+    sa, _ = routers.fit_federated(routers.make("mf", RCFG), split["train"],
+                                  FCFG, key=key,
+                                  aggregator=SecureAggAggregator(scale=0.0))
+    _trees_equal(plain.state, sa.state)
+    dp, _ = routers.fit_federated(
+        routers.make("mf", RCFG), split["train"], FCFG, key=key,
+        aggregator=GaussianDPAggregator(sigma=0.3))
+    diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
+             for a, b in zip(jax.tree.leaves(plain.state),
+                             jax.tree.leaves(dp.state))]
+    assert max(diffs) > 0.0
+
+
+def test_mf_onboard_model_trains_only_new_columns(split, fed_mf):
+    router = fed_mf
+    calib = dict(flatten_clients(split["train"]))
+    calib["m"] = jnp.where(calib["m"] == 0, 5, calib["m"])
+    r6 = router.onboard_model(calib, key=jax.random.PRNGKey(6), fcfg=FCFG,
+                              n_new=1, steps=5)
+    assert r6.num_models == 6 and router.num_models == 5
+    # frozen base: projection + existing factor columns are untouched
+    _trees_equal(router.state["proj"], r6.state["proj"])
+    for leaf in ("acc_w", "cost_w"):
+        np.testing.assert_array_equal(
+            np.asarray(router.state["heads"][leaf]),
+            np.asarray(r6.state["heads"][leaf][..., :5]))
+
+
+# ------------------------------------------------------------ elo/Elo zoo
+
+def test_elo_fit_is_one_shot(split):
+    """Alg. 2 contract: no training rounds — rounds= is ignored, the loss
+    history is empty, and eval_fn runs exactly once on the fitted router."""
+    key = jax.random.PRNGKey(50)
+    seen = []
+    r1, h1 = routers.fit_federated(routers.make("elo", RCFG),
+                                   split["train"], FCFG, key=key, rounds=1,
+                                   eval_fn=lambda r: seen.append(1) or 7)
+    r9, h9 = routers.fit_federated(routers.make("elo", RCFG),
+                                   split["train"], FCFG, key=key, rounds=9)
+    _trees_equal(r1.state, r9.state)
+    assert h1["loss"] == [] and h1["eval"] == [7] and seen == [1]
+    with pytest.raises(ValueError, match="unsupported"):
+        routers.fit_federated(routers.make("elo", RCFG), split["train"],
+                              FCFG, key=key, dp_sigma=0.1)
+
+
+def test_elo_cold_start_state_is_hot_swappable(split, fed_elo):
+    """init(key) must produce a SERVABLE state with the same pytree
+    structure and shapes as a real fit — the FedLoop cold-start + first
+    hot-swap contract."""
+    fitted = fed_elo
+    cold = routers.make("elo", RCFG).init(jax.random.PRNGKey(8))
+    assert (jax.tree.structure(cold.state)
+            == jax.tree.structure(fitted.state))
+    for a, b in zip(jax.tree.leaves(cold.state),
+                    jax.tree.leaves(fitted.state)):
+        assert np.shape(a) == np.shape(b)
+    x = split["test_global"]["x"][:9]
+    assert cold.route(x, 0.5).shape == (9,)
+    # the jittered prior must not collapse all cold traffic onto model 0
+    wide = split["test_global"]["x"][:200]
+    assert len(np.unique(np.asarray(cold.route(wide, 0.5)))) > 1
+
+
+def test_elo_onboard_clients_is_exact_sum_merge(split, fed_elo):
+    fitted = fed_elo
+    again = fitted.onboard_clients(split["train"])
+    np.testing.assert_allclose(np.asarray(again.state["n"]),
+                               2 * np.asarray(fitted.state["n"]), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(again.state["anchors"]),
+                                  np.asarray(fitted.state["anchors"]))
+
+
+def test_elo_onboard_model_appends_rating_column(split, fed_elo):
+    fitted = fed_elo
+    x = split["test_global"]["x"][:60]
+    calib = {"x": x, "acc": jnp.full(60, 0.9), "cost": jnp.full(60, 0.05),
+             "w": jnp.ones(60)}
+    r6 = fitted.onboard_model(calib)
+    assert r6.num_models == 6 and fitted.num_models == 5
+    # a cheap, strong new model must win cost-sensitive routing somewhere
+    assert int((np.asarray(r6.route(x, 2.0)) == 5).sum()) > 0
