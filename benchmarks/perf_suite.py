@@ -687,6 +687,205 @@ def bench_routerbench(smoke: bool) -> None:
     })
 
 
+# ---------------------------------------------------------------------------
+# resilience: Byzantine-robust aggregation under corrupted clients, sync
+# latency vs cohort size, and FedLoop checkpoint/resume recovery
+# ---------------------------------------------------------------------------
+
+
+def _flip_labels(train, mask) -> dict:
+    """Label-flip fault at the DATA layer: the masked clients report
+    inverted accuracies (acc -> 1 - acc on their real rows) — the
+    harvest-poisoning counterpart of the update-space corruptions."""
+    acc = np.asarray(train["acc"]).copy()
+    w = np.asarray(train["w"])
+    for i, bad in enumerate(mask):
+        if bad:
+            acc[i] = np.where(w[i] > 0, 1.0 - acc[i], acc[i])
+    out = dict(train)
+    out["acc"] = jnp.asarray(acc)
+    return out
+
+
+def bench_resilience(smoke: bool) -> None:
+    """Three fault-tolerance measurements, all exact accounting (seeded
+    faults, deterministic fits) so ci.yml can enforce floors without a
+    statistical fudge factor:
+
+      * **corruption table** — frontier AUC of {fedavg, trimmed_mean,
+        median, norm_clip} under 25% Byzantine clients for each fault
+        class (sign-flip / scaled-noise update corruption via
+        ``CorruptUpdates``, label-flip data poisoning) vs the clean fit.
+        The CI floor: trimmed-mean under sign-flip stays within
+        ``RESILIENCE_AUC_FLOOR`` of its clean AUC while plain FedAvg
+        measurably degrades.
+      * **sync latency vs cohort** — wall-clock of the scan-fused
+        federated fit at full participation vs sampled cohorts (the
+        static-slab gather keeps every cohort size on one compile).
+      * **recovery** — a live FedLoop is killed after phase 0 (save),
+        restored into a fresh process-alike (restore), and run to the end:
+        reports save/restore wall time and whether the resumed router is
+        bit-identical to the uninterrupted twin's.
+    """
+    import time
+
+    from repro.core import policy
+    from repro.fed.aggregators import (FedAvgAggregator, MedianAggregator,
+                                       NormClipAggregator,
+                                       TrimmedMeanAggregator)
+    from repro.fed.faults import FaultPlan
+
+    n_clients = 8
+    rounds = 20 if smoke else 40
+    rcfg = RouterConfig(d_emb=16, num_models=6, hidden=(32, 32), dropout=0.0)
+    # full participation: every corrupted client is in every round, so the
+    # 25%-Byzantine claim (and the trim capacity matched to it) is exact
+    fcfg = FedConfig(num_clients=n_clients, participation=1.0, rounds=rounds,
+                     batch_size=32, lr=3e-3)
+    corpus = make_eval_corpus(jax.random.PRNGKey(0),
+                              n_queries=600 if smoke else 1500,
+                              n_tasks=5, n_models=6, d_emb=16)
+    split = federated_split(jax.random.PRNGKey(1), corpus, fcfg)
+    train, test = split["train"], split["test_global"]
+    plan = FaultPlan(seed=3, corrupt_frac=0.25)
+    mask = plan.corrupted_clients(n_clients)  # (n_clients,) bool
+
+    aggs = {"fedavg": FedAvgAggregator(),
+            "trimmed_mean": TrimmedMeanAggregator(trim_frac=0.25),
+            "median": MedianAggregator(),
+            "norm_clip": NormClipAggregator(clip=0.5)}
+
+    def fit_auc(data, aggregator) -> float:
+        router, _ = routers.fit_federated(
+            routers.make("mlp", rcfg), data, fcfg,
+            key=jax.random.PRNGKey(5), rounds=rounds, aggregator=aggregator)
+        *_, auc = policy.eval_router(router.predict, test["x"],
+                                     test["acc_table"], test["cost_table"])
+        return float(auc)
+
+    table: dict = {}
+    t0 = time.perf_counter()
+    for name, agg in aggs.items():
+        row = {"clean": round(fit_auc(train, agg), 4)}
+        for mode in ("sign_flip", "scaled_noise"):
+            wrapped = plan.corrupt_updates(n_clients, inner=agg, mode=mode)
+            row[mode] = round(fit_auc(train, wrapped), 4)
+        row["label_flip"] = round(fit_auc(_flip_labels(train, mask), agg), 4)
+        table[name] = row
+        C.emit(f"resilience_{name}",
+               (time.perf_counter() - t0) * 1e6 / (4 * rounds),
+               f"us per round (4 fault classes x {rounds}r); AUC clean "
+               f"{row['clean']:.3f} sign_flip {row['sign_flip']:.3f} "
+               f"scaled_noise {row['scaled_noise']:.3f} label_flip "
+               f"{row['label_flip']:.3f} at 25% corrupted",
+               speedup_vs_baseline=row["sign_flip"]
+               / max(row["clean"], 1e-9))
+        t0 = time.perf_counter()
+
+    # --- sync latency vs cohort size (scan-fused fit, static cohort slab)
+    cohort_us = {}
+    for cohort in (None, n_clients // 2, n_clients // 4):
+        us = C.timeit(
+            lambda c=cohort: routers.fit_federated(
+                routers.make("mlp", rcfg), train, fcfg,
+                key=jax.random.PRNGKey(5), rounds=rounds, cohort=c),
+            warmup=1, iters=1, repeats=2 if smoke else 3)
+        label = "full" if cohort is None else str(cohort)
+        cohort_us[label] = round(us, 1)
+        C.emit(f"resilience_sync_cohort_{label}", us,
+               f"{rounds}-round scan-fused fit, cohort="
+               f"{label}/{n_clients} clients")
+
+    # --- checkpoint/resume recovery: killed-and-restored vs uninterrupted
+    from repro.fed.harvest import HarvestStore
+    from repro.fed.loop import FedLoop, FedLoopConfig
+    from repro.fed.scenarios import ScenarioConfig, TrafficScenario
+    from repro.serve.engine import EngineConfig
+    from repro.serve.gateway import RoutedServer
+
+    scfg = ScenarioConfig(n_clients=4, n_models=2, d_emb=16,
+                          n_queries=400, queries_per_phase=48, phases=2,
+                          straggler_frac=0.0, test_queries=32, seed=0)
+    loop_rcfg = RouterConfig(d_emb=scfg.d_emb, num_models=scfg.n_models,
+                             hidden=(16, 16), dropout=0.0)
+    loop_fcfg = FedConfig(num_clients=scfg.n_clients, participation=1.0,
+                          batch_size=32, lr=3e-3)
+    lcfg = FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=3,
+                         min_samples=1)
+
+    def fresh_loop(scenario):
+        pool = scenario.make_pool()
+        router = routers.make("mlp", loop_rcfg).init(jax.random.PRNGKey(21))
+        harvest = HarvestStore(scfg.d_emb, capacity=64,
+                               clients=range(scfg.n_clients))
+        srv = RoutedServer(pool, router, harvest=harvest,
+                           engine_cfg=EngineConfig(slots=4, max_seq=32,
+                                                   chunk=4, page_size=8))
+        return srv, FedLoop(srv, loop_fcfg, key=jax.random.PRNGKey(23),
+                            cfg=lcfg)
+
+    def drive(scenario, srv, loop, phase):
+        # outcomes keyed statelessly on (query, model) so an interrupted
+        # run replays the exact same observations after restore
+        for (c, q, lam) in scenario.events(phase):
+            rid = srv.submit(scenario.prompt(q), lam=lam,
+                             max_new_tokens=scfg.max_new, client_id=c,
+                             x=scenario.x(q, phase))
+            m = srv.routed_model(rid)
+            p = float(scenario.corpus["acc_table"][q, m])
+            u = np.random.default_rng(q * 1_000_003 + m).random()
+            srv.report_outcome(rid, float(u < p),
+                               float(scenario.corpus["cost_table"][q, m]))
+            loop.step()
+        loop.drain()
+        loop.sync()
+
+    srv_a, loop_a = fresh_loop(TrafficScenario(scfg))   # uninterrupted twin
+    for phase in range(scfg.phases):
+        drive(TrafficScenario(scfg), srv_a, loop_a, phase)
+
+    srv_b, loop_b = fresh_loop(TrafficScenario(scfg))   # killed after phase 0
+    drive(TrafficScenario(scfg), srv_b, loop_b, 0)
+    ckpt_path = C.REPO_ROOT / ("BENCH_resilience.ckpt.tmp")
+    t0 = time.perf_counter()
+    loop_b.save(ckpt_path)
+    save_s = time.perf_counter() - t0
+    del srv_b, loop_b
+
+    t0 = time.perf_counter()
+    srv_c, loop_c = fresh_loop(TrafficScenario(scfg))
+    loop_c.restore(ckpt_path)
+    restore_s = time.perf_counter() - t0
+    ckpt_bytes = ckpt_path.stat().st_size
+    ckpt_path.unlink()
+    for phase in range(1, scfg.phases):
+        drive(TrafficScenario(scfg), srv_c, loop_c, phase)
+
+    la, lc = jax.tree.leaves(srv_a.router.state), \
+        jax.tree.leaves(srv_c.router.state)
+    parity = (len(la) == len(lc)
+              and all(np.array_equal(np.asarray(x), np.asarray(y))
+                      for x, y in zip(la, lc))
+              and srv_a.router_version == srv_c.router_version)
+    C.emit("resilience_recovery", restore_s * 1e6,
+           f"restore a killed FedLoop ({ckpt_bytes} bytes) and resume; "
+           f"save {save_s * 1e3:.1f} ms; resumed router bit-identical to "
+           f"uninterrupted twin: {parity}",
+           speedup_vs_baseline=1.0 if parity else 0.0)
+
+    C.write_bench(_bench_file("resilience", smoke), meta={
+        "smoke": smoke, "rounds": rounds, "n_clients": n_clients,
+        "corrupt_frac": 0.25,
+        "corrupted_clients": [int(i) for i in np.flatnonzero(mask)],
+        "corruption_auc": table,
+        "sync_us_by_cohort": cohort_us,
+        "checkpoint": {"save_ms": round(save_s * 1e3, 2),
+                       "restore_ms": round(restore_s * 1e3, 2),
+                       "bytes": int(ckpt_bytes),
+                       "resume_bit_identical": bool(parity)},
+    })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -700,10 +899,11 @@ def main() -> None:
     bench_paged(args.smoke)
     bench_fedloop(args.smoke)
     bench_routerbench(args.smoke)
+    bench_resilience(args.smoke)
 
     for f in (_bench_file(s, args.smoke)
               for s in ("train", "route", "serve", "engine", "paged",
-                        "fedloop", "routerbench")):
+                        "fedloop", "routerbench", "resilience")):
         blob = json.loads((C.REPO_ROOT / f).read_text())
         assert blob["records"], f"{f}: no records"
         assert all(np.isfinite(r["us_per_call"]) for r in blob["records"])

@@ -11,6 +11,7 @@ Client dataset layout (N clients, padded to D_max rows):
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Callable, Optional
 
@@ -21,6 +22,16 @@ import numpy as np
 from repro.config import FedConfig, RouterConfig
 from repro.core import mlp_router as R
 from repro.train.optim import SGD, AdamW
+
+# Appended at *trace* time from inside ``fedavg_round`` — one entry per
+# compile, none per execution. Mirrors ``serve.engine.TRACE_LOG`` (layering
+# keeps core/ from importing serve/, so the fit path gets its own log).
+# Tests pin that cohort-sampled fits never retrace across rounds/syncs.
+FIT_TRACE_LOG = collections.deque(maxlen=4096)
+
+
+def reset_fit_trace_log() -> None:
+    FIT_TRACE_LOG.clear()
 
 
 def dataset_sizes(data) -> jnp.ndarray:
@@ -119,7 +130,8 @@ def _default_aggregator(dp_sigma: float):
 def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
                  opt, max_steps: int, *, full_batch=False, freeze=None,
                  distill=None, client_mask=None, dp_sigma: float = 0.0,
-                 aggregator=None, loss_fn=None):
+                 aggregator=None, loss_fn=None, cohort: Optional[int] = None,
+                 staleness=None):
     """One communication round: local updates on active clients + server
     aggregation (Alg. 1 lines 3–11) through a pluggable strategy
     (``repro.fed.aggregators``). The default is plain weighted FedAvg;
@@ -127,8 +139,33 @@ def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
     dp_sigma > 0 wraps whichever strategy runs in server-side Gaussian
     noise on the aggregate (central-DP flavour of the paper's privacy
     motivation — bit-for-bit the old inline branch on the default path,
-    and composing over explicit strategies instead of being dropped)."""
+    and composing over explicit strategies instead of being dropped).
+
+    ``cohort=C`` samples C of the N stacked clients per round and gathers
+    their stacks into a fixed ``(C, ...)`` slab *inside* the traced
+    function — shapes stay static, so the scan-fused fit compiles once and
+    never retraces across cohorts, and only C local updates run per round
+    (the production sampled-participation shape: C ≪ N).
+    ``fcfg.participation`` then applies within the cohort.
+
+    ``staleness`` is an optional traced ``(N,)`` vector (rounds since each
+    client's last contribution) forwarded to aggregators that declare
+    ``needs_staleness`` (buffered-async / FedBuffer-style strategies);
+    aggregators declaring ``needs_prev`` additionally receive the round's
+    input server params (norm-clipped and delta-based strategies)."""
     N = data["x"].shape[0]
+    FIT_TRACE_LOG.append(("fedavg_round", N, cohort,
+                          type(aggregator).__name__ if aggregator is not None
+                          else "default"))
+    if cohort is not None:
+        # Static-shape cohort gather: permutation + static slice keeps the
+        # compiled round independent of *which* clients were drawn.
+        key, k_coh = jax.random.split(key)
+        idx = jax.random.permutation(k_coh, N)[:cohort]
+        data = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data)
+        if staleness is not None:
+            staleness = jnp.take(staleness, idx, axis=0)
+        N = cohort
     key, k_sel, k_cli, k_agg = jax.random.split(key, 4)
     n_active = max(1, int(round(fcfg.participation * N)))
     perm = jax.random.permutation(k_sel, N)
@@ -153,7 +190,15 @@ def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
         agg = GaussianDPAggregator(sigma=dp_sigma, inner=aggregator)
     else:
         agg = aggregator
-    new_params = agg(client_params, wts, k_agg)
+    # Strategy extras are declared, not positional: plain 3-arg strategies
+    # (including any custom callable) keep their exact legacy call.
+    extras = {}
+    if getattr(agg, "needs_prev", False):
+        extras["prev"] = params
+    if getattr(agg, "needs_staleness", False):
+        extras["staleness"] = (jnp.zeros_like(wts) if staleness is None
+                               else staleness.astype(jnp.float32))
+    new_params = agg(client_params, wts, k_agg, **extras)
     wn = wts / jnp.maximum(jnp.sum(wts), 1e-12)
     avg_loss = jnp.sum(client_loss * wn)
     return new_params, avg_loss
@@ -163,7 +208,8 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            rounds: Optional[int] = None, optimizer: str = "adamw",
            init=None, full_batch: bool = False, freeze=None, distill=None,
            client_mask=None, dp_sigma: float = 0.0, aggregator=None,
-           loss_fn: Optional[Callable] = None,
+           loss_fn: Optional[Callable] = None, cohort: Optional[int] = None,
+           staleness=None,
            eval_fn: Optional[Callable] = None, eval_every: int = 1):
     """Run T rounds of Algorithm 1. Returns (params, history dict).
 
@@ -185,8 +231,42 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     ``loss_fn`` selects the family's training loss (see ``client_update``);
     module-level functions are hashable, so non-default families ride the
     same compiled-fit caches as the MLP default.
+
+    ``cohort=C`` enables per-round client sampling (see ``fedavg_round``):
+    C is part of the compiled-fit cache key, so every cohort draw reuses
+    the same compiled scan. ``staleness`` is an optional ``(N,)`` vector
+    consumed by aggregators declaring ``needs_staleness``; providing it to
+    a strategy that ignores it is an error (silent drops would fake
+    async-tolerance).
     """
     rounds = rounds if rounds is not None else fcfg.rounds
+    N = data["x"].shape[0]
+    if cohort is not None:
+        if client_mask is not None:
+            raise ValueError(
+                "cohort sampling and client_mask are mutually exclusive: "
+                "the mask is indexed by the full client axis, the cohort "
+                "gather re-indexes it per round")
+        cohort = int(cohort)
+        if cohort < 1:
+            raise ValueError(f"cohort must be >= 1, got {cohort}")
+        if cohort >= N:
+            cohort = None  # full participation — keep the legacy path
+    if staleness is not None:
+        # GaussianDP delegates needs_staleness to its inner strategy, so
+        # checking the user's aggregator covers the dp_sigma>0 wrap too.
+        if not getattr(aggregator, "needs_staleness", False):
+            name = type(aggregator).__name__ if aggregator is not None \
+                else "default FedAvg"
+            raise ValueError(
+                f"staleness= was provided but the aggregator ({name}) does "
+                "not consume it — use a buffered-async strategy (e.g. "
+                "BufferedAsyncAggregator) or drop the argument")
+        staleness = jnp.asarray(staleness, jnp.float32)
+        if staleness.shape != (N,):
+            raise ValueError(
+                f"staleness must have shape ({N},) — one entry per stacked "
+                f"client — got {staleness.shape}")
     D_max = data["x"].shape[1]
     max_steps = 1 if full_batch else max(
         1, int(np.ceil(D_max / fcfg.batch_size))) * fcfg.local_epochs
@@ -206,7 +286,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     simple = (freeze is None and distill is None and client_mask is None
               and agg_hashable)
     cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-               aggregator, loss_fn)
+               aggregator, loss_fn, cohort)
 
     if eval_fn is None:
         if simple:
@@ -215,7 +295,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
             fit = _make_scan_fit(
                 _round_partial(*cfg_key, freeze, distill, client_mask),
                 rounds, donate=init is None)
-        params, _, losses = fit(params, key, data)
+        params, _, losses = _call_fit(fit, params, key, data, staleness)
         return params, {"loss": np.asarray(losses).tolist(), "eval": []}
 
     if eval_every > 1:
@@ -226,7 +306,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
                 E, donate=False))
 
         return chunked_eval_fit(chunk_fn, params, key, data, rounds,
-                                eval_every, eval_fn)
+                                eval_every, eval_fn, staleness=staleness)
 
     round_jit = (_round_fn_cached(*cfg_key) if simple else
                  jax.jit(_round_partial(*cfg_key, freeze, distill,
@@ -234,14 +314,26 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     hist = {"loss": [], "eval": []}
     for t in range(rounds):
         key, k_r = jax.random.split(key)
-        params, loss = round_jit(params, data, k_r)
+        if staleness is None:
+            params, loss = round_jit(params, data, k_r)
+        else:
+            params, loss = round_jit(params, data, k_r, staleness=staleness)
         hist["loss"].append(float(loss))
         hist["eval"].append(eval_fn(params))
     return params, hist
 
 
+def _call_fit(fit, params, key, data, staleness):
+    """Invoke a scan fit with/without the optional staleness operand.
+    ``staleness is None`` keeps the legacy 3-arg call so fits whose
+    ``run`` predates the knob (the sharded mesh path) stay valid."""
+    if staleness is None:
+        return fit(params, key, data)
+    return fit(params, key, data, staleness)
+
+
 def chunked_eval_fit(chunk_fn, params, key, data, rounds: int,
-                     eval_every: int, eval_fn):
+                     eval_every: int, eval_fn, staleness=None):
     """Drive a fit that scans E rounds between eval syncs: one dispatch +
     one host sync per chunk instead of per round. ``chunk_fn(E)`` returns
     a compiled ``(params, key, data) -> (params, key, losses)`` scan fit
@@ -259,7 +351,8 @@ def chunked_eval_fit(chunk_fn, params, key, data, rounds: int,
         E = min(eval_every, rounds - done)
         if E not in chunk_fns:
             chunk_fns[E] = chunk_fn(E)
-        params, key, losses = chunk_fns[E](params, key, data)
+        params, key, losses = _call_fit(chunk_fns[E], params, key, data,
+                                        staleness)
         hist["loss"].extend(float(l) for l in np.asarray(losses))
         hist["eval"].append(eval_fn(params))
         done += E
@@ -272,12 +365,19 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
     result is bit-for-bit identical on a fixed key. Params are donated when
     the caller does not hold the initial buffer (fresh init). Returns
     (params, advanced key, per-round losses) so chunked-eval fits can
-    thread the key across chunks."""
-    def run(params, key, data):
+    thread the key across chunks. ``staleness`` is an optional extra
+    operand; the None default is resolved at trace time, so 3-arg callers
+    (and round_fns that predate the knob, e.g. the sharded mesh path) are
+    bit-for-bit the legacy scan."""
+    def run(params, key, data, staleness=None):
         def body(carry, _):
             params, key = carry
             key, k_r = jax.random.split(key)
-            params, loss = round_fn(params, data, k_r)
+            if staleness is None:
+                params, loss = round_fn(params, data, k_r)
+            else:
+                params, loss = round_fn(params, data, k_r,
+                                        staleness=staleness)
             return (params, key), loss
 
         (params, key), losses = jax.lax.scan(body, (params, key), None,
@@ -288,8 +388,8 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
 
 
 def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                   aggregator, loss_fn=None, freeze=None, distill=None,
-                   client_mask=None):
+                   aggregator, loss_fn=None, cohort=None, freeze=None,
+                   distill=None, client_mask=None):
     """The one place a fedavg_round closure is built — every fit path
     (cached or not) goes through it, so a new knob can't silently diverge
     between the cached and fresh-jit variants."""
@@ -297,22 +397,23 @@ def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
         fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=_make_opt(fcfg, optimizer),
         max_steps=max_steps, full_batch=full_batch, freeze=freeze,
         distill=distill, client_mask=client_mask, dp_sigma=dp_sigma,
-        aggregator=aggregator, loss_fn=loss_fn)
+        aggregator=aggregator, loss_fn=loss_fn, cohort=cohort)
 
 
 @functools.lru_cache(maxsize=64)
 def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator, loss_fn):
+                     aggregator, loss_fn, cohort=None):
     return jax.jit(_round_partial(rcfg, fcfg, optimizer, max_steps,
-                                  full_batch, dp_sigma, aggregator, loss_fn))
+                                  full_batch, dp_sigma, aggregator, loss_fn,
+                                  cohort))
 
 
 @functools.lru_cache(maxsize=64)
 def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator, loss_fn, rounds, donate):
+                     aggregator, loss_fn, cohort, rounds, donate):
     return _make_scan_fit(
         _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch,
-                       dp_sigma, aggregator, loss_fn),
+                       dp_sigma, aggregator, loss_fn, cohort),
         rounds, donate=donate)
 
 

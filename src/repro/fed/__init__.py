@@ -11,9 +11,15 @@ during serving. This subsystem closes that loop around the serving stack:
     serving: every routed request appends (query embedding, chosen model,
     outcome, cost) to the submitting client's local log, producing exactly
     the sparse, non-uniform-coverage evaluation matrices the paper assumes.
+  * ``faults``      — deterministic fault injection: a seeded ``FaultPlan``
+    (dropout, stale updates, corrupted updates, lost outcomes, backend
+    failures) plus the ``CorruptUpdates`` aggregator wrapper that applies
+    Byzantine corruption inside the cached fit paths.
   * ``loop``        — the ``FedLoop`` scheduler: federated refits over the
     harvested buffers interleaved with engine decode chunks, hot-swapping
-    versioned router state into the route path with zero retraces.
+    versioned router state into the route path with zero retraces;
+    ``save()``/``restore()`` checkpoint the whole loop for bit-identical
+    crash recovery.
   * ``scenarios``   — traffic simulators (client heterogeneity, drift,
     stragglers, mid-run model onboarding) and the online-vs-frozen
     comparison behind ``BENCH_fedloop.json``.
@@ -22,21 +28,28 @@ during serving. This subsystem closes that loop around the serving stack:
 lazily — ``core/federated.py`` importing ``repro.fed.aggregators`` for its
 default strategy stays cycle-free.
 """
-from repro.fed.aggregators import (Aggregator, FedAvgAggregator,
-                                   GaussianDPAggregator, SecureAggAggregator)
+from repro.fed.aggregators import (Aggregator, BufferedAsyncAggregator,
+                                   FedAvgAggregator, GaussianDPAggregator,
+                                   MedianAggregator, NormClipAggregator,
+                                   SecureAggAggregator,
+                                   TrimmedMeanAggregator)
+from repro.fed.faults import CorruptUpdates, FaultPlan
 from repro.fed.harvest import EvalBuffer, HarvestStore
 
 __all__ = [
     "Aggregator", "FedAvgAggregator", "GaussianDPAggregator",
-    "SecureAggAggregator", "EvalBuffer", "HarvestStore",
+    "SecureAggAggregator", "TrimmedMeanAggregator", "MedianAggregator",
+    "NormClipAggregator", "BufferedAsyncAggregator",
+    "FaultPlan", "CorruptUpdates", "EvalBuffer", "HarvestStore",
     "FedLoop", "FedLoopConfig", "personalize_client",
     "ScenarioConfig", "TrafficScenario", "run_online_vs_frozen",
+    "PowerLawScenario",
 ]
 
 _LAZY = {
     "FedLoop": "loop", "FedLoopConfig": "loop", "personalize_client": "loop",
     "ScenarioConfig": "scenarios", "TrafficScenario": "scenarios",
-    "run_online_vs_frozen": "scenarios",
+    "run_online_vs_frozen": "scenarios", "PowerLawScenario": "scenarios",
 }
 
 

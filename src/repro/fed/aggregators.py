@@ -1,9 +1,9 @@
 """Pluggable server-side aggregation strategies (Alg. 1 line 11).
 
 ``core/federated.fedavg_round`` dispatches its aggregation step through one
-of these instead of a hard-coded branch, so secure aggregation and DP noise
-ride the same scan-fused/cached fit paths as plain FedAvg. Every strategy
-implements
+of these instead of a hard-coded branch, so secure aggregation, DP noise,
+and the Byzantine-robust/buffered-async strategies below all ride the same
+scan-fused/cached fit paths as plain FedAvg. Every strategy implements
 
     aggregator(client_params, wts, key) -> new_params
 
@@ -13,6 +13,21 @@ active mask — zero for inactive clients), and ``key`` the round's
 aggregation PRNG key (the same stream the legacy ``dp_sigma`` path drew
 noise from).
 
+Strategies that need more than the stacked updates *declare* it instead of
+changing the call signature: ``needs_prev = True`` makes ``fedavg_round``
+pass ``prev=`` (the round's input server params — delta-based strategies),
+``needs_staleness = True`` passes ``staleness=`` (per-client rounds since
+last contribution — buffered-async strategies). Plain 3-arg strategies,
+including arbitrary custom callables, keep their exact legacy call.
+
+Composition rules: ``GaussianDPAggregator`` wraps any inner strategy (DP is
+server-side noise on the aggregate, so it composes with everything and
+forwards the inner strategy's declared extras). Secure aggregation does
+NOT compose with the coordinate-wise robust strategies — the server only
+ever learns the masked *sum*, so it cannot sort/trim/median individual
+updates; that composition is structurally inexpressible here (``SecureAgg``
+has no inner slot) rather than silently wrong.
+
 Strategies are frozen dataclasses: hashable, so the compiled-fit caches in
 ``core/federated.py`` can key on them — a fit with the same aggregator
 reuses its compiled scan. An unhashable custom strategy still works; it
@@ -21,6 +36,7 @@ just gets a fresh jit per fit.
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -124,8 +140,17 @@ class GaussianDPAggregator(Aggregator):
     sigma: float = 0.0
     inner: Aggregator = FedAvgAggregator()
 
-    def __call__(self, client_params, wts, key):
-        out = self.inner(client_params, wts, jax.random.fold_in(key, 1))
+    @property
+    def needs_prev(self) -> bool:  # forward the inner strategy's extras
+        return getattr(self.inner, "needs_prev", False)
+
+    @property
+    def needs_staleness(self) -> bool:
+        return getattr(self.inner, "needs_staleness", False)
+
+    def __call__(self, client_params, wts, key, **extras):
+        out = self.inner(client_params, wts, jax.random.fold_in(key, 1),
+                         **extras)
         if self.sigma <= 0.0:
             return out
         leaves, treedef = jax.tree.flatten(out)
@@ -133,3 +158,144 @@ class GaussianDPAggregator(Aggregator):
         leaves = [l + self.sigma * jax.random.normal(k, l.shape, l.dtype)
                   for l, k in zip(leaves, keys)]
         return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust strategies (coordinate-wise, unweighted over the round's
+# active clients — the classical robust estimators deliberately ignore the
+# self-reported dataset-size weights, since a corrupted client could inflate
+# its weight as easily as its update).
+# ---------------------------------------------------------------------------
+
+
+def _sorted_active(leaf, active):
+    """Sort a stacked leaf along the client axis with inactive rows pushed
+    to +inf: the round's ``n_act`` real updates occupy ranks [0, n_act) in
+    ascending coordinate order, for any traced active count."""
+    shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+    masked = jnp.where(active.reshape(shape) > 0,
+                       leaf.astype(jnp.float32), jnp.inf)
+    return jnp.sort(masked, axis=0)
+
+
+def _ranks_like(leaf):
+    shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+    return jnp.arange(leaf.shape[0]).reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMeanAggregator(Aggregator):
+    """Coordinate-wise trimmed mean (Yin et al. 2018): per coordinate, sort
+    the active clients' values, drop the ⌊trim_frac·n_act⌋ smallest and
+    largest, average the rest. Tolerates up to trim_frac corrupted clients
+    per round regardless of what they upload. ``trim_frac`` is clamped so
+    at least one value always survives (n_act − 2k ≥ 1)."""
+
+    trim_frac: float = 0.25
+
+    def __call__(self, client_params, wts, key):
+        active = (wts > 0).astype(jnp.float32)
+        n_act = jnp.maximum(jnp.sum(active), 1.0)
+        k = jnp.minimum(jnp.floor(self.trim_frac * n_act),
+                        jnp.ceil(n_act / 2.0) - 1.0)
+
+        def leaf(s):
+            srt = _sorted_active(s, active)
+            r = _ranks_like(s)
+            keep = ((r >= k) & (r < n_act - k)).astype(jnp.float32)
+            total = jnp.sum(jnp.where(keep > 0, srt, 0.0), axis=0)
+            return (total / jnp.maximum(n_act - 2.0 * k, 1.0)).astype(s.dtype)
+
+        return jax.tree.map(leaf, client_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class MedianAggregator(Aggregator):
+    """Coordinate-wise median over the round's active clients — the
+    trim_frac → 0.5 limit of the trimmed mean; maximal per-round breakdown
+    tolerance (< n_act/2 corrupted clients) at the cost of discarding the
+    most averaging."""
+
+    def __call__(self, client_params, wts, key):
+        active = (wts > 0).astype(jnp.float32)
+        n_act = jnp.maximum(jnp.sum(active), 1.0).astype(jnp.int32)
+        lo = (n_act - 1) // 2
+        hi = n_act // 2
+
+        def leaf(s):
+            srt = _sorted_active(s, active)
+            med = 0.5 * (jnp.take(srt, lo, axis=0) +
+                         jnp.take(srt, hi, axis=0))
+            return med.astype(s.dtype)
+
+        return jax.tree.map(leaf, client_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class NormClipAggregator(Aggregator):
+    """Weighted FedAvg over norm-clipped client *deltas*: each client's
+    update is re-expressed as θ_i − θ_prev, clipped to global L2 norm
+    ≤ ``clip``, then averaged and re-applied to θ_prev. Bounds any single
+    client's pull on the aggregate (the standard defense against
+    scaled/boosted updates; also the DP-FedAvg sensitivity bound, so it
+    composes naturally under ``GaussianDPAggregator``)."""
+
+    clip: float = 1.0
+    needs_prev: ClassVar[bool] = True
+
+    def __call__(self, client_params, wts, key, *, prev):
+        wn = _normalize(wts)
+        deltas = jax.tree.map(
+            lambda s, p: s.astype(jnp.float32) - p.astype(jnp.float32)[None],
+            client_params, prev)
+        sq = sum(jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+                 for d in jax.tree.leaves(deltas))  # (N,) per-client ‖δ‖²
+        scale = jnp.minimum(1.0, self.clip / jnp.maximum(jnp.sqrt(sq), 1e-12))
+
+        def leaf(d, p):
+            shape = (d.shape[0],) + (1,) * (d.ndim - 1)
+            agg = jnp.tensordot(wn, d * scale.reshape(shape), axes=1)
+            return (p.astype(jnp.float32) + agg).astype(p.dtype)
+
+        return jax.tree.map(leaf, deltas, prev)
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferedAsyncAggregator(Aggregator):
+    """FedBuffer-style buffered-async aggregation (Nguyen et al. 2022):
+    clients report whenever they finish, the server buffers their deltas
+    and applies one decayed server step per sync instead of gating on the
+    slowest silo. Each contribution is down-weighted by a polynomial
+    staleness discount (1 + s_i)^(−staleness_alpha), where s_i counts the
+    syncs since client i's data was fresh; ``server_lr`` scales the
+    aggregate step. With all-zero staleness and server_lr=1 this reduces
+    to weighted FedAvg expressed in delta form. ``clip > 0`` additionally
+    norm-clips each delta (compose robustness with asynchrony)."""
+
+    server_lr: float = 1.0
+    staleness_alpha: float = 0.5
+    clip: float = 0.0
+    needs_prev: ClassVar[bool] = True
+    needs_staleness: ClassVar[bool] = True
+
+    def __call__(self, client_params, wts, key, *, prev, staleness):
+        decay = (1.0 + jnp.maximum(staleness, 0.0)) ** (-self.staleness_alpha)
+        wn = _normalize(wts * decay)
+        deltas = jax.tree.map(
+            lambda s, p: s.astype(jnp.float32) - p.astype(jnp.float32)[None],
+            client_params, prev)
+        if self.clip > 0.0:
+            sq = sum(jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+                     for d in jax.tree.leaves(deltas))
+            scale = jnp.minimum(1.0,
+                                self.clip / jnp.maximum(jnp.sqrt(sq), 1e-12))
+        else:
+            scale = jnp.ones_like(wn)
+
+        def leaf(d, p):
+            shape = (d.shape[0],) + (1,) * (d.ndim - 1)
+            agg = jnp.tensordot(wn, d * scale.reshape(shape), axes=1)
+            return (p.astype(jnp.float32)
+                    + self.server_lr * agg).astype(p.dtype)
+
+        return jax.tree.map(leaf, deltas, prev)

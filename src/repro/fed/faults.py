@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the federation runtime.
+
+A ``FaultPlan`` is a frozen, seeded description of everything that can go
+wrong between the clients and the server: clients dropping out of sync
+rounds, straggling silos reporting stale updates, Byzantine clients
+uploading corrupted updates or flipping their harvested outcome labels,
+``report_outcome`` calls that never arrive, and pool-model backends that
+fail a request. Every draw is a pure function of ``(seed, tags)`` — no
+global RNG state, no wall clock — so a faulted run is exactly
+reproducible, a killed-and-restored run replays the same faults, and CI
+floors are deterministic accounting rather than flaky thresholds.
+
+Consumers:
+  * scenario / bench drivers call the predicate methods per event
+    (``client_drops``, ``flip_label``, ``lose_outcome``);
+  * ``RoutedServer(fault_plan=...)`` consults ``backend_fails`` per submit
+    attempt and retries / re-routes (see ``serve/gateway.py``);
+  * the fit path takes faults as an *aggregator wrapper*:
+    ``CorruptUpdates`` applies sign-flip / scaled-noise corruption to the
+    stacked client updates before delegating to any inner strategy, so
+    Byzantine rounds ride the cached scan-fused fits untouched (the
+    wrapper is hashable — same compiled-fit caches as everything else).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.aggregators import Aggregator, FedAvgAggregator
+
+
+def _unit(seed: int, *tags) -> float:
+    """Deterministic uniform in [0, 1) from (seed, tags): crc32 of the
+    repr — stable across processes and runs (unlike builtin ``hash``)."""
+    h = zlib.crc32(repr((seed,) + tags).encode("utf-8"))
+    return h / 2.0 ** 32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded description of injected faults. All probabilities in [0, 1];
+    the zero plan (all defaults) injects nothing."""
+
+    seed: int = 0
+    #: P(a client misses a given sync round) — participation churn.
+    dropout: float = 0.0
+    #: fraction of clients that straggle (their updates arrive stale).
+    delay_frac: float = 0.0
+    #: stragglers report 1..max_staleness syncs late.
+    max_staleness: int = 4
+    #: fraction of clients whose uploads are corrupted (stable identities —
+    #: Byzantine clients stay Byzantine).
+    corrupt_frac: float = 0.0
+    #: P(a corrupted client flips one harvested outcome label).
+    label_flip: float = 0.0
+    #: P(a report_outcome call is lost in transit).
+    lose_outcomes: float = 0.0
+    #: P(a pool backend fails one submit attempt).
+    backend_fail: float = 0.0
+    #: backends that are hard-down (every attempt fails).
+    fail_models: Tuple[int, ...] = ()
+
+    # ------------------------------------------------- client-side faults
+
+    def client_drops(self, client: int, rnd: int) -> bool:
+        """Does ``client`` miss sync round ``rnd``?"""
+        return _unit(self.seed, "drop", int(client), int(rnd)) < self.dropout
+
+    def corrupted_clients(self, n_clients: int) -> np.ndarray:
+        """(n_clients,) bool — the stable Byzantine identity set:
+        ⌊corrupt_frac·n⌋ clients drawn once per plan."""
+        k = int(np.floor(self.corrupt_frac * n_clients))
+        mask = np.zeros(n_clients, bool)
+        if k > 0:
+            rng = np.random.default_rng(self.seed * 1_000_003 + 0xBAD)
+            mask[rng.choice(n_clients, size=k, replace=False)] = True
+        return mask
+
+    def straggler_clients(self, n_clients: int) -> np.ndarray:
+        """(n_clients,) bool — the stable straggling-silo set."""
+        k = int(np.floor(self.delay_frac * n_clients))
+        mask = np.zeros(n_clients, bool)
+        if k > 0:
+            rng = np.random.default_rng(self.seed * 1_000_003 + 0x51_0)
+            mask[rng.choice(n_clients, size=k, replace=False)] = True
+        return mask
+
+    def staleness(self, n_clients: int, sync: int) -> np.ndarray:
+        """(n_clients,) int — syncs each client's update is late by at
+        sync index ``sync``: 0 for healthy silos, 1..max_staleness for
+        stragglers (per-sync draw, stable identities)."""
+        out = np.zeros(n_clients, np.int64)
+        for c in np.flatnonzero(self.straggler_clients(n_clients)):
+            u = _unit(self.seed, "stale", int(c), int(sync))
+            out[c] = 1 + int(u * self.max_staleness)
+        return out
+
+    def flip_label(self, client: int, event: int) -> bool:
+        """Does a corrupted client flip the outcome label of its
+        ``event``-th harvested observation? (Callers gate on membership in
+        ``corrupted_clients`` — identity and per-event draws separate.)"""
+        return _unit(self.seed, "flip", int(client),
+                     int(event)) < self.label_flip
+
+    def lose_outcome(self, rid: int) -> bool:
+        """Is the report_outcome call for request ``rid`` lost?"""
+        return _unit(self.seed, "lost", int(rid)) < self.lose_outcomes
+
+    # ------------------------------------------------ server-side faults
+
+    def backend_fails(self, m_idx: int, seq: int, attempt: int) -> bool:
+        """Does backend ``m_idx`` fail attempt ``attempt`` of submission
+        ``seq``? Hard-down backends (``fail_models``) always fail; others
+        fail each attempt independently with ``backend_fail`` probability,
+        so retries of transient faults can succeed."""
+        if int(m_idx) in self.fail_models:
+            return True
+        return _unit(self.seed, "backend", int(m_idx), int(seq),
+                     int(attempt)) < self.backend_fail
+
+    # ------------------------------------------------------- fit wrapper
+
+    def corrupt_updates(self, n_clients: int, inner: Aggregator = None, *,
+                        mode: str = "sign_flip",
+                        scale: float = 10.0) -> "CorruptUpdates":
+        """Build the aggregator wrapper applying this plan's Byzantine set
+        to a fit over ``n_clients`` stacked clients."""
+        return CorruptUpdates(
+            mask=tuple(bool(b) for b in self.corrupted_clients(n_clients)),
+            inner=inner if inner is not None else FedAvgAggregator(),
+            mode=mode, scale=scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptUpdates(Aggregator):
+    """Byzantine clients as an aggregator wrapper: corrupt the masked
+    rows of the stacked client-update slab *before* the inner strategy
+    aggregates — exactly what the server would receive from malicious
+    participants, with zero changes to the fit machinery.
+
+    Modes: ``"sign_flip"`` uploads θ_prev − scale·(θ_i − θ_prev) (the
+    classic scaled sign-flipping attack — the honest delta reversed and
+    amplified; ``scale=1`` is the pure reflection); ``"scaled_noise"``
+    adds ``scale``·N(0,1) noise to the corrupted rows (a blown-up/garbage
+    update). The mask is a tuple, so the wrapper is hashable and rides the
+    compiled-fit caches; it indexes the *stacked* client axis (when used
+    with ``cohort=`` sampling the mask applies post-gather, so corrupt
+    fractions — not identities — are what you control there).
+    """
+
+    mask: Tuple[bool, ...] = ()
+    inner: Aggregator = FedAvgAggregator()
+    mode: str = "sign_flip"
+    scale: float = 10.0
+
+    @property
+    def needs_prev(self) -> bool:
+        # sign_flip reverses deltas, which needs the round's input params;
+        # declared unconditionally so the wrapper's traced signature
+        # doesn't depend on the mode.
+        return True
+
+    @property
+    def needs_staleness(self) -> bool:
+        return getattr(self.inner, "needs_staleness", False)
+
+    def __call__(self, client_params, wts, key, *, prev, staleness=None):
+        if self.mode not in ("sign_flip", "scaled_noise"):
+            raise ValueError(f"unknown corruption mode {self.mode!r}")
+        n = jax.tree.leaves(client_params)[0].shape[0]
+        if len(self.mask) != n:
+            raise ValueError(
+                f"CorruptUpdates mask covers {len(self.mask)} clients but "
+                f"the stacked update slab has {n} — build the wrapper with "
+                f"corrupt_updates(n_clients={n})")
+        m = jnp.asarray(self.mask, jnp.float32)
+        leaves, treedef = jax.tree.flatten(client_params)
+        prev_leaves = jax.tree.leaves(prev)
+        noise_key = jax.random.fold_in(key, zlib.crc32(b"corrupt"))
+
+        def corrupt(i, s, p):
+            shape = (s.shape[0],) + (1,) * (s.ndim - 1)
+            mm = m.reshape(shape)
+            s32 = s.astype(jnp.float32)
+            if self.mode == "sign_flip":
+                p32 = p.astype(jnp.float32)[None]
+                bad = p32 - self.scale * (s32 - p32)
+            else:
+                k = jax.random.fold_in(noise_key, i)
+                bad = s32 + self.scale * jax.random.normal(k, s.shape)
+            return (mm * bad + (1.0 - mm) * s32).astype(s.dtype)
+
+        corrupted = jax.tree.unflatten(
+            treedef, [corrupt(i, s, p) for i, (s, p)
+                      in enumerate(zip(leaves, prev_leaves))])
+        extras = {}
+        if getattr(self.inner, "needs_prev", False):
+            extras["prev"] = prev
+        if getattr(self.inner, "needs_staleness", False):
+            extras["staleness"] = (staleness if staleness is not None
+                                   else jnp.zeros_like(wts))
+        return self.inner(corrupted, wts, jax.random.fold_in(key, 2),
+                          **extras)

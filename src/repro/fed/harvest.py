@@ -85,18 +85,52 @@ class EvalBuffer:
         out["w"][:n] = 1.0
         return out
 
+    # ------------------------------------------------------- checkpointing
+    def state(self) -> Dict[str, np.ndarray]:
+        """Raw ring contents + lifetime counter — restoring reproduces the
+        buffer exactly (write head, wrap state, chronological order)."""
+        return {"x": self._x.copy(), "m": self._m.copy(),
+                "acc": self._acc.copy(), "cost": self._cost.copy(),
+                "total": self._total}
+
+    def load_state(self, state: Dict) -> None:
+        x = np.asarray(state["x"], np.float32)
+        if x.shape != (self.capacity, self.d_emb):
+            raise ValueError(
+                f"EvalBuffer state has ring shape {x.shape}, this buffer "
+                f"is ({self.capacity}, {self.d_emb}) — construct the "
+                "store with the checkpoint's d_emb/capacity")
+        self._x = x.copy()
+        self._m = np.asarray(state["m"], np.int32).copy()
+        self._acc = np.asarray(state["acc"], np.float32).copy()
+        self._cost = np.asarray(state["cost"], np.float32).copy()
+        self._total = int(state["total"])
+
 
 class HarvestStore:
     """client id → ``EvalBuffer``, plus the stacked federated view.
 
     Pre-registering the expected clients (``clients=range(N)``) keeps the
     federated stack's client dimension — and therefore the compiled scan
-    fit's shapes — stable from the very first sync."""
+    fit's shapes — stable from the very first sync.
+
+    ``max_clients`` bounds the number of LIVE buffers: when traffic spans
+    more distinct clients than that (1k+ clients with power-law traffic
+    and churn), the least-recently-written client's buffer is evicted, so
+    harvest memory is O(max_clients) — O(cohort), not O(clients). Pair it
+    with ``as_federated_data(client_ids=...)`` to fit on a sampled cohort
+    slab of the warm clients."""
 
     def __init__(self, d_emb: int, capacity: int = 1024,
-                 clients: Iterable[int] = ()):
+                 clients: Iterable[int] = (),
+                 max_clients: int | None = None):
         self.d_emb = int(d_emb)
         self.capacity = int(capacity)
+        self.max_clients = None if max_clients is None else int(max_clients)
+        if self.max_clients is not None and self.max_clients < 1:
+            raise ValueError("max_clients must be >= 1")
+        self.evicted_clients = 0  #: lifetime LRU evictions (observability)
+        # insertion order doubles as the LRU order: record() re-inserts
         self._buffers: Dict[int, EvalBuffer] = {}
         for c in clients:
             self.buffer(c)
@@ -106,11 +140,24 @@ class HarvestStore:
         if b is None:
             b = self._buffers[int(client_id)] = EvalBuffer(self.d_emb,
                                                            self.capacity)
+            self._evict_cold()
         return b
+
+    def _evict_cold(self) -> None:
+        while (self.max_clients is not None
+               and len(self._buffers) > self.max_clients):
+            coldest = next(iter(self._buffers))
+            del self._buffers[coldest]
+            self.evicted_clients += 1
 
     def record(self, client_id: int, x, m: int, acc: float,
                cost: float) -> None:
-        self.buffer(client_id).append(x, m, acc, cost)
+        cid = int(client_id)
+        b = self.buffer(cid)
+        b.append(x, m, acc, cost)
+        # move-to-end: this client is now the warmest in the LRU order
+        del self._buffers[cid]
+        self._buffers[cid] = b
 
     def client_ids(self) -> list[int]:
         return sorted(self._buffers)
@@ -123,19 +170,71 @@ class HarvestStore:
     def nbytes(self) -> int:
         return sum(b.nbytes for b in self._buffers.values())
 
-    def as_federated_data(self, pad_to: int | None = None) -> Dict[str, jnp.ndarray]:
+    def as_federated_data(self, pad_to: int | None = None,
+                          client_ids: Iterable[int] | None = None,
+                          ) -> Dict[str, jnp.ndarray]:
         """Stacked, padded ``(N, D, ...)`` arrays over sorted client ids —
         exactly ``core/federated.py``'s client dataset layout, in
         deterministic (client id, chronological) order so an offline
         ``fit_federated`` over the same buffers reproduces an online sync
         bit-for-bit. ``pad_to=None`` pads to the fullest buffer;
         ``pad_to=capacity`` keeps D static so the compiled scan fit never
-        retraces across syncs."""
-        ids = self.client_ids()
+        retraces across syncs.
+
+        Zero-sample clients (freshly registered, nothing harvested yet):
+        the unpadded path SKIPS them — their buffers contribute no rows,
+        so they cannot dilute the federated average with all-zero data —
+        while the padded path KEEPS them as all-zero rows with a zero
+        weight mask (``w = 0``), preserving the static client dimension;
+        ``dataset_sizes`` then gives them zero aggregation weight, which
+        is the same exclusion expressed shape-stably.
+
+        ``client_ids`` restricts the stack to a subset (e.g. a sampled
+        cohort of the warm clients under ``max_clients`` churn): the slab
+        is (len(client_ids), D, ...) — O(cohort) device memory no matter
+        how many clients the store has seen."""
+        ids = (self.client_ids() if client_ids is None
+               else sorted(int(c) for c in client_ids))
         if not ids:
             raise ValueError("no harvested clients — nothing to federate")
+        missing = [c for c in ids if c not in self._buffers]
+        if missing:
+            raise ValueError(
+                f"client_ids {missing} have no live buffer (never seen, or "
+                "evicted by max_clients) — sample the cohort from "
+                "client_ids()")
+        if pad_to is None:
+            ids = [c for c in ids if len(self._buffers[c]) > 0]
+        if not ids or all(len(self._buffers[c]) == 0 for c in ids):
+            raise ValueError("no harvested samples — every requested "
+                             "client's buffer is empty; serve some traffic "
+                             "first")
         D = (int(pad_to) if pad_to is not None
              else max(max(len(self._buffers[c]) for c in ids), 1))
         rows = [self._buffers[c].as_client_data(D) for c in ids]
         stacked = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
         return jax.tree.map(jnp.asarray, stacked)
+
+    # ------------------------------------------------------- checkpointing
+    def state(self) -> dict:
+        """Serializable snapshot: every ring verbatim, in LRU order."""
+        return {"d_emb": self.d_emb, "capacity": self.capacity,
+                "clients": [[int(c), b.state()]
+                            for c, b in self._buffers.items()]}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state()`` snapshot exactly (rings, lifetime
+        counters, LRU order). The store must be constructed with the same
+        d_emb/capacity."""
+        if (int(state["d_emb"]) != self.d_emb
+                or int(state["capacity"]) != self.capacity):
+            raise ValueError(
+                f"checkpoint is d_emb={int(state['d_emb'])}, capacity="
+                f"{int(state['capacity'])}; this store is d_emb="
+                f"{self.d_emb}, capacity={self.capacity}")
+        self._buffers = {}
+        for c, bstate in state["clients"]:
+            b = EvalBuffer(self.d_emb, self.capacity)
+            b.load_state(bstate)
+            self._buffers[int(c)] = b
+        self._evict_cold()

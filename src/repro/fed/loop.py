@@ -33,6 +33,10 @@ import numpy as np
 
 from repro import routers
 from repro.config import FedConfig
+from repro.train import checkpoint as ckpt
+
+#: FedLoop.save() payload format version (bumped on layout changes).
+CHECKPOINT_FORMAT = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +47,8 @@ class FedLoopConfig:
     min_samples: int = 16     #: total harvested samples required to sync
     pad_to_capacity: bool = True  #: pad the federated stack to the buffer
     #: capacity — static shapes, one compile for every sync
+    cohort: Optional[int] = None  #: per-round client sampling inside each
+    #: sync's fit (parametric families; see core/federated.fedavg)
 
 
 class FedLoop:
@@ -65,6 +71,12 @@ class FedLoop:
         self._key = key
         self._chunks = 0
         self.history: List[Dict[str, Any]] = []
+        # Staleness bookkeeping for buffered-async aggregators: per client,
+        # the lifetime sample count at the previous sync and the sync index
+        # at which it last contributed fresh data.
+        self._syncs = 0
+        self._seen_at_sync: Dict[int, int] = {}
+        self._fresh_at_sync: Dict[int, int] = {}
 
     @property
     def version(self) -> int:
@@ -115,14 +127,123 @@ class FedLoop:
             pad_to=harvest.capacity if self.cfg.pad_to_capacity else None)
         kw = {} if self.aggregator is None else {
             "aggregator": self.aggregator}
+        if self.cfg.cohort is not None:
+            kw["cohort"] = self.cfg.cohort
+        if getattr(self.aggregator, "needs_staleness", False):
+            ids = harvest.client_ids()
+            if not self.cfg.pad_to_capacity:  # unpadded stacks skip empties
+                ids = [c for c in ids if len(harvest.buffer(c)) > 0]
+            kw["staleness"] = self._staleness_vector(ids)
         new_router, hist = routers.fit_federated(
             self.server.router, data, self.fcfg, key=key,
             rounds=self.cfg.rounds_per_sync, **kw)
         self.server.swap_router_state(new_router.state)
+        self._note_sync()
         self.history.append({"version": self.version,
                              "loss": hist["loss"],
                              "samples": len(harvest)})
         return hist
+
+    def _staleness_vector(self, ids) -> np.ndarray:
+        """(N,) syncs since each stacked client (sorted ids — the
+        ``as_federated_data`` order) last contributed fresh samples; 0 for
+        clients with new data since the previous sync."""
+        out = []
+        for c in ids:
+            seen = self.server.harvest.buffer(c).total_seen
+            if seen > self._seen_at_sync.get(c, 0):
+                out.append(0)
+            else:
+                out.append(self._syncs - self._fresh_at_sync.get(c, 0))
+        return np.asarray(out, np.float32)
+
+    def _note_sync(self) -> None:
+        """Advance the staleness bookkeeping after a completed sync."""
+        for c in self.server.harvest.client_ids():
+            seen = self.server.harvest.buffer(c).total_seen
+            if seen > self._seen_at_sync.get(c, 0):
+                self._fresh_at_sync[c] = self._syncs
+            self._seen_at_sync[c] = seen
+        self._syncs += 1
+
+    # -------------------------------------------------- checkpoint / resume
+    def save(self, path) -> None:
+        """Checkpoint the WHOLE loop — router state + version, every
+        harvest ring (verbatim: write heads, lifetime counters, LRU
+        order), the loop's PRNG key, chunk counter, staleness bookkeeping,
+        sync history, pending evaluations, and the engine's rid counter —
+        via ``train/checkpoint`` (msgpack, atomic write). A loop restored
+        from this file continues BIT-IDENTICALLY to one that was never
+        interrupted (test-enforced).
+
+        Requires an idle engine: in-flight KV state is not checkpointable,
+        so ``drain()`` first. Pending evaluations (submitted, outcome not
+        yet reported) survive: they are host-side tuples."""
+        if self.server.engine.busy:
+            raise ValueError("save() needs an idle engine — drain() "
+                             "in-flight requests first (decode KV state "
+                             "is not checkpointable)")
+        srv = self.server
+        payload = {
+            "format": CHECKPOINT_FORMAT,
+            "family": srv.router.name,
+            "router_state": srv.router.state,
+            "router_version": int(srv.router_version),
+            "key": self._key,
+            "chunks": int(self._chunks),
+            "syncs": int(self._syncs),
+            "seen_at_sync": [[int(c), int(v)]
+                             for c, v in self._seen_at_sync.items()],
+            "fresh_at_sync": [[int(c), int(v)]
+                              for c, v in self._fresh_at_sync.items()],
+            "history": self.history,
+            "harvest": srv.harvest.state(),
+            "pending": [[int(rid), int(c), x, int(m), float(co)]
+                        for rid, (c, x, m, co)
+                        in srv._pending_evals.items()],
+            "next_rid": int(srv.engine._next_rid),
+        }
+        ckpt.save(path, payload)
+
+    def restore(self, path) -> "FedLoop":
+        """Load a ``save()`` checkpoint into this (freshly constructed,
+        structurally identical) loop: same pool, same router family/config,
+        same harvest d_emb/capacity. Returns self. The restored loop's
+        subsequent routes, syncs, and history are bit-identical to the
+        uninterrupted run's."""
+        blob = ckpt.restore(path)
+        fmt = blob.get("format")
+        if fmt != CHECKPOINT_FORMAT:
+            raise ValueError(f"unsupported FedLoop checkpoint format {fmt} "
+                             f"(this build reads {CHECKPOINT_FORMAT})")
+        srv = self.server
+        if blob["family"] != srv.router.name:
+            raise ValueError(
+                f"checkpoint holds a {blob['family']!r} router, this loop "
+                f"serves {srv.router.name!r} — construct the server with "
+                "the matching family")
+        if srv.engine.busy:
+            raise ValueError("restore() into a server with in-flight "
+                             "requests — use a freshly built server")
+        srv.router = srv.router.with_state(blob["router_state"])
+        # keep the cached route jit: with_state rebuilds by class + rcfg,
+        # identical for the same family (mirrors swap_router_state)
+        srv._route_fn_router = srv.router
+        srv.router_version = int(blob["router_version"])
+        srv.harvest.load_state(blob["harvest"])
+        srv._pending_evals = {
+            int(rid): (int(c), np.asarray(x, np.float32), int(m), float(co))
+            for rid, c, x, m, co in blob["pending"]}
+        srv.engine._next_rid = int(blob["next_rid"])
+        self._key = blob["key"]
+        self._chunks = int(blob["chunks"])
+        self._syncs = int(blob["syncs"])
+        self._seen_at_sync = {int(c): int(v)
+                              for c, v in blob["seen_at_sync"]}
+        self._fresh_at_sync = {int(c): int(v)
+                               for c, v in blob["fresh_at_sync"]}
+        self.history = [dict(h) for h in blob["history"]]
+        return self
 
     def onboard_model(self, pm, calib: dict, *, key,
                       steps: int = 100) -> None:

@@ -199,6 +199,82 @@ class TrafficScenario:
                 "cost_table": np.asarray(self.corpus["cost_table"])[qs]}
 
 
+class PowerLawScenario:
+    """Population-scale arrival generator: 1k+ clients, Zipf traffic, churn.
+
+    The paper's deployment regime has far more clients than any round can
+    hold — most clients are cold, a Zipf head carries the traffic, and the
+    head itself drifts as clients churn in and out. This generator produces
+    exactly that arrival structure, deterministically:
+
+      * **power-law popularity** — client ranks carry Zipf(``zipf_a``)
+        weight, so a handful of head clients dominate arrivals while the
+        long tail appears rarely or never;
+      * **churn** — every phase re-deals a ``churn`` fraction of the ranks
+        among their holders, so yesterday's hot clients go cold (and their
+        harvest buffers deserve eviction);
+      * **O(cohort) harvest** — pair the arrivals with a
+        ``HarvestStore(max_clients=...)`` and memory stays proportional to
+        the warm set, not the population (test-pinned); sample fit cohorts
+        from ``HarvestStore.client_ids()`` + ``fedavg(cohort=...)``.
+
+    Arrivals are client ids only — compose with any corpus/outcome model
+    (``TrafficScenario`` owns those concerns for the small-population
+    benchmark). ``coverage_clients`` reports how many warm clients carry a
+    target traffic share: the natural ``max_clients``/``cohort`` choice.
+    """
+
+    def __init__(self, n_clients: int = 1200, *, zipf_a: float = 1.1,
+                 churn: float = 0.15, queries_per_phase: int = 512,
+                 phases: int = 3, seed: int = 0):
+        if n_clients < 2:
+            raise ValueError("PowerLawScenario needs n_clients >= 2")
+        if zipf_a <= 0:
+            raise ValueError("zipf_a must be > 0")
+        if not 0.0 <= churn <= 1.0:
+            raise ValueError("churn must be in [0, 1]")
+        self.n_clients = int(n_clients)
+        self.zipf_a = float(zipf_a)
+        self.churn = float(churn)
+        self.queries_per_phase = int(queries_per_phase)
+        self.phases = int(phases)
+        self.seed = int(seed)
+        rng = np.random.default_rng(seed * 611953 + 29)
+        # rank r -> client id holding it; rank 0 is the traffic head
+        holders = rng.permutation(self.n_clients)
+        self._holders = [holders.copy()]
+        n_churn = int(round(self.churn * self.n_clients))
+        for _ in range(1, self.phases):
+            holders = holders.copy()
+            if n_churn >= 2:
+                ranks = rng.choice(self.n_clients, size=n_churn,
+                                   replace=False)
+                holders[ranks] = holders[np.roll(ranks, 1)]
+            self._holders.append(holders.copy())
+        w = (1.0 + np.arange(self.n_clients)) ** (-self.zipf_a)
+        self._rank_p = w / w.sum()
+
+    def popularity(self, phase: int) -> np.ndarray:
+        """(n_clients,) arrival probability per client id at ``phase``."""
+        p = np.zeros(self.n_clients)
+        p[self._holders[phase]] = self._rank_p
+        return p
+
+    def events(self, phase: int) -> np.ndarray:
+        """Deterministic client-id arrival stream for one phase."""
+        rng = np.random.default_rng(self.seed * 1000 + 13 * phase + 5)
+        return rng.choice(self.n_clients, size=self.queries_per_phase,
+                          p=self.popularity(phase))
+
+    def coverage_clients(self, coverage: float = 0.9) -> int:
+        """Smallest warm-client count carrying ``coverage`` of the traffic
+        (phase-independent: churn moves which clients are warm, not how
+        concentrated the traffic is)."""
+        if not 0.0 < coverage <= 1.0:
+            raise ValueError("coverage must be in (0, 1]")
+        return int(np.searchsorted(np.cumsum(self._rank_p), coverage) + 1)
+
+
 def _frontier_auc(predict_fn, test: Dict[str, np.ndarray],
                   n_models: int) -> float:
     """Frontier AUC of a router on one test draw, scored on the true

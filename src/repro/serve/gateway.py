@@ -30,8 +30,10 @@ per-token sync).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import time
 import zlib
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
@@ -44,7 +46,8 @@ from repro.data.encoder import encode
 from repro.models import model as mdl
 
 if TYPE_CHECKING:  # repro.fed is the higher layer — type-only import keeps
-    from repro.fed.harvest import HarvestStore  # serve → fed one-directional
+    from repro.fed.faults import FaultPlan  # serve → fed one-directional
+    from repro.fed.harvest import HarvestStore
 from repro.routers import Router
 # TRACE_LOG lives in engine.py (bounded deque) and is re-exported here so
 # `gateway.TRACE_LOG` keeps working for tests and callers; same for
@@ -124,7 +127,9 @@ class RoutedServer:
     def __init__(self, pool: List[PoolModel], router: Router,
                  d_emb: Optional[int] = None,
                  engine_cfg: Optional[EngineConfig] = None,
-                 harvest: "Optional[HarvestStore]" = None):
+                 harvest: "Optional[HarvestStore]" = None,
+                 fault_plan: "Optional[FaultPlan]" = None,
+                 max_retries: int = 2, retry_backoff: float = 0.0):
         if not isinstance(router, Router):
             raise TypeError(
                 "RoutedServer takes a repro.routers.Router — build one with "
@@ -163,9 +168,27 @@ class RoutedServer:
         # _pending_evals.
         self.harvest = harvest
         self._pending_evals: Dict[int, tuple] = {}
+        # Bounded tombstones so unknown-rid errors can say WHY the rid is
+        # gone (evicted by the pending-cap vs already reported) instead of
+        # a bare KeyError.
+        self._evicted_rids = collections.deque(maxlen=4096)
+        self._reported_rids = collections.deque(maxlen=4096)
         #: bumped by every swap_router_state/add_model — the "versioned
         #: router state" the FedLoop publishes into the route path.
         self.router_version = 0
+        # Fault tolerance: an optional FaultPlan (repro.fed.faults, duck-
+        # typed — serve stays importable without fed) makes submit()
+        # consult backend_fails() per attempt; failures retry with
+        # exponential backoff, then degrade gracefully by re-routing to
+        # the next-best model under the router's own utility.
+        self.fault_plan = fault_plan
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self._submit_seq = 0
+        #: observability counters for the resilience bench/tests.
+        self.backend_failures = 0
+        self.retries = 0
+        self.failovers = 0
 
     @staticmethod
     def _make_route_fn(router: Router):
@@ -256,10 +279,19 @@ class RoutedServer:
         ``harvest`` store attached and ``client_id`` given, the request is
         registered for evaluation harvesting: ``routed_model(rid)`` exposes
         the choice and ``report_outcome(rid, ...)`` appends the completed
-        (x, model, outcome, cost) observation to that client's EvalBuffer."""
+        (x, model, outcome, cost) observation to that client's EvalBuffer.
+
+        With a ``fault_plan`` attached, a failing backend is retried
+        ``max_retries`` times with exponential backoff, then the request
+        degrades gracefully: it re-routes to the next-best model under the
+        router's own utility A − λ·C (excluding failed backends), counts
+        the failover, and the harvest records the model that actually
+        served it — the realized outcome, not the intended route."""
         x_arr = (encode([prompt], self.d_emb)[0] if x is None
                  else np.asarray(x, np.float32).reshape(self.d_emb))
         m_idx = int(self._route_x(x_arr[None], lam)[0])
+        if self.fault_plan is not None:
+            m_idx = self._submit_with_failover(m_idx, x_arr, lam)
         toks = self._tokenize([prompt], self.pool[m_idx].cfg, tokenize)[0]
         rid = self.engine.submit(m_idx, toks, max_new_tokens)
         if self.harvest is not None and client_id is not None:
@@ -267,31 +299,80 @@ class RoutedServer:
             self._pending_evals[rid] = (int(client_id), x_arr, m_idx,
                                         cost_est)
             while len(self._pending_evals) > PENDING_EVAL_CAP:
-                self._pending_evals.pop(next(iter(self._pending_evals)))
+                old = next(iter(self._pending_evals))
+                self._pending_evals.pop(old)
+                self._evicted_rids.append(old)
         return rid
 
+    def _submit_with_failover(self, m_idx: int, x_arr: np.ndarray,
+                              lam: float) -> int:
+        """Resolve the backend that will actually serve this submission:
+        retry transient failures with backoff, then walk down the router's
+        utility ranking past hard failures. Raises RuntimeError only when
+        every pool backend has failed."""
+        seq = self._submit_seq
+        self._submit_seq += 1
+        plan = self.fault_plan
+        failed: set = set()
+        order = None
+        attempt = 0
+        while plan.backend_fails(m_idx, seq, attempt):
+            self.backend_failures += 1
+            if attempt < self.max_retries:
+                attempt += 1
+                self.retries += 1
+                if self.retry_backoff > 0.0:
+                    time.sleep(self.retry_backoff * 2.0 ** (attempt - 1))
+                continue
+            failed.add(m_idx)
+            if len(failed) == len(self.pool):
+                raise RuntimeError(
+                    f"all {len(self.pool)} pool backends failed request "
+                    f"#{seq} — nothing left to re-route to")
+            if order is None:  # rank once, off the hot path
+                A, C = self.router.predict(jnp.asarray(x_arr[None]))
+                util = np.asarray(A[0] - lam * C[0])
+                order = [int(i) for i in np.argsort(-util)]
+            m_idx = next(i for i in order if i not in failed)
+            self.failovers += 1
+            attempt = 0
+        return m_idx
+
+    def _unknown_rid(self, rid: int) -> ValueError:
+        """A specific, actionable error for a rid with no pending eval:
+        says which rid and *why* it is unknown."""
+        if rid in self._evicted_rids:
+            why = (f"it was evicted by the pending-eval cap "
+                   f"(PENDING_EVAL_CAP={PENDING_EVAL_CAP}) — report "
+                   "outcomes sooner or raise the cap")
+        elif rid in self._reported_rids:
+            why = "its outcome was already reported (each rid reports once)"
+        else:
+            why = ("it was never harvest-registered — submit() it with "
+                   "client_id= and attach a HarvestStore to track routing "
+                   "outcomes")
+        return ValueError(f"request {rid} has no pending evaluation: {why}")
+
     def routed_model(self, rid: int) -> int:
-        """Model index a harvest-registered request was routed to."""
+        """Model index a harvest-registered request was routed to.
+        Raises ValueError for an unknown/already-reported/evicted rid."""
         try:
             return self._pending_evals[rid][2]
         except KeyError:
-            raise KeyError(
-                f"request {rid} has no pending evaluation — submit() it "
-                "with client_id= (and attach a HarvestStore) to track "
-                "routing outcomes") from None
+            raise self._unknown_rid(rid) from None
 
     def report_outcome(self, rid: int, score: float,
                        cost: Optional[float] = None) -> None:
         """Client feedback closes the harvest loop: append the completed
         (query embedding, routed model, outcome score, cost) observation to
         the submitting client's EvalBuffer. ``cost`` defaults to the
-        submit-time estimate (cost_per_token × max_new)."""
+        submit-time estimate (cost_per_token × max_new). Raises ValueError
+        for an unknown/already-reported/evicted rid."""
         try:
             client_id, x_arr, m_idx, cost_est = self._pending_evals.pop(rid)
         except KeyError:
-            raise KeyError(
-                f"request {rid} has no pending evaluation (never "
-                "harvest-registered, already reported, or evicted)") from None
+            raise self._unknown_rid(rid) from None
+        self._reported_rids.append(rid)
         self.harvest.record(client_id, x_arr, m_idx, float(score),
                             float(cost if cost is not None else cost_est))
 

@@ -1,0 +1,457 @@
+"""Fault-tolerant federation (ISSUE 7 acceptance suite): cohort sampling
+with zero retraces, Byzantine-robust aggregation under corrupted clients,
+deterministic fault injection, gateway failover, and FedLoop
+checkpoint/resume continuing bit-identically after a kill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, ModelConfig, RouterConfig
+from repro.core import federated as F
+from repro.core import policy
+from repro.data.partition import federated_split
+from repro.data.synthetic import make_eval_corpus
+from repro.fed.aggregators import (BufferedAsyncAggregator, FedAvgAggregator,
+                                   GaussianDPAggregator, MedianAggregator,
+                                   NormClipAggregator, TrimmedMeanAggregator)
+from repro.fed.faults import CorruptUpdates, FaultPlan
+from repro.fed.harvest import HarvestStore
+from repro.fed.loop import FedLoop, FedLoopConfig
+from repro.models import init_params
+from repro.serve.engine import EngineConfig
+from repro.serve.gateway import PoolModel, RoutedServer
+
+TINY = ModelConfig(name="faults-tiny", arch_type="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                   head_dim=16, dtype="float32")
+D_EMB = 8
+N_CLIENTS = 3
+RCFG = RouterConfig(d_emb=D_EMB, num_models=2, hidden=(16, 16), dropout=0.0)
+FCFG = FedConfig(num_clients=N_CLIENTS, participation=1.0, batch_size=16,
+                 lr=3e-3)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _max_diff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def split():
+    fcfg = FedConfig(num_clients=8, participation=1.0, batch_size=32,
+                     lr=3e-3)
+    corpus = make_eval_corpus(jax.random.PRNGKey(0), n_queries=600,
+                              n_tasks=5, n_models=6, d_emb=16)
+    return federated_split(jax.random.PRNGKey(1), corpus, fcfg), fcfg
+
+
+# ------------------------------------------------- acceptance 1: cohorts
+
+def test_cohort_fit_zero_retraces_across_cohort_draws():
+    """Per-round cohort sampling uses a static (C, ...) slab gathered
+    inside the jit, so fits with different keys (different cohort draws
+    every round) share ONE trace — pinned via FIT_TRACE_LOG."""
+    # unique cfg so this test owns its compiled-fit cache entry
+    rcfg = RouterConfig(d_emb=12, num_models=4, hidden=(24,), dropout=0.0)
+    fcfg = FedConfig(num_clients=6, participation=1.0, batch_size=16,
+                     rounds=3, lr=3e-3)
+    corpus = make_eval_corpus(jax.random.PRNGKey(5), n_queries=200,
+                              n_tasks=3, n_models=4, d_emb=12)
+    data = federated_split(jax.random.PRNGKey(6), corpus, fcfg)["train"]
+
+    F.reset_fit_trace_log()
+    p0, _ = F.fedavg(jax.random.PRNGKey(0), data, rcfg, fcfg, cohort=3)
+    traced = len(F.FIT_TRACE_LOG)
+    assert traced >= 1
+    for seed in (1, 2, 3):      # fresh cohort permutations every round
+        F.fedavg(jax.random.PRNGKey(seed), data, rcfg, fcfg, cohort=3)
+    assert len(F.FIT_TRACE_LOG) == traced, (
+        "cohort sampling retraced the fit across cohort draws")
+    # reproducible: same key, same cohorts, same params
+    p1, _ = F.fedavg(jax.random.PRNGKey(0), data, rcfg, fcfg, cohort=3)
+    _trees_equal(p0, p1)
+
+
+def test_cohort_validation(split):
+    data, fcfg = split
+    with pytest.raises(ValueError, match="cohort"):
+        F.fedavg(jax.random.PRNGKey(0), data["train"],
+                 RouterConfig(d_emb=16, num_models=6), fcfg, cohort=0)
+    with pytest.raises(ValueError, match="client_mask"):
+        F.fedavg(jax.random.PRNGKey(0), data["train"],
+                 RouterConfig(d_emb=16, num_models=6), fcfg, cohort=2,
+                 client_mask=jnp.ones(8))
+
+
+# ------------------------------------- acceptance 2: Byzantine robustness
+
+def test_trimmed_mean_survives_sign_flip_while_fedavg_degrades(split):
+    """25% sign-flip corrupted clients: the trimmed-mean fit stays within
+    0.05 frontier AUC of its own clean fit while plain FedAvg loses at
+    least 0.10 — same floors ci.yml enforces on the resilience bench."""
+    data, fcfg = split
+    rcfg = RouterConfig(d_emb=16, num_models=6, hidden=(32, 32),
+                        dropout=0.0)
+    plan = FaultPlan(seed=3, corrupt_frac=0.25)
+    test = data["test_global"]
+
+    def fit_auc(aggregator=None):
+        kw = {} if aggregator is None else {"aggregator": aggregator}
+        p, _ = F.fedavg(jax.random.PRNGKey(5), data["train"], rcfg, fcfg,
+                        rounds=20, **kw)
+        r = routers.make("mlp", rcfg, state=p)
+        *_, auc = policy.eval_router(r.predict, test["x"],
+                                     test["acc_table"], test["cost_table"])
+        return float(auc)
+
+    clean_fa = fit_auc()
+    bad_fa = fit_auc(plan.corrupt_updates(8, mode="sign_flip"))
+    clean_tm = fit_auc(TrimmedMeanAggregator(trim_frac=0.25))
+    bad_tm = fit_auc(plan.corrupt_updates(
+        8, inner=TrimmedMeanAggregator(trim_frac=0.25), mode="sign_flip"))
+    assert clean_fa - bad_fa >= 0.10, (
+        f"sign-flip no longer bites FedAvg: {clean_fa} -> {bad_fa}")
+    assert clean_tm - bad_tm <= 0.05, (
+        f"trimmed-mean lost robustness: {clean_tm} -> {bad_tm}")
+
+
+def test_trimmed_mean_and_median_match_numpy_oracle():
+    """Coordinate-wise trimmed mean / median over the ACTIVE clients only
+    (inactive rows are excluded entirely, not averaged as zeros)."""
+    key = jax.random.PRNGKey(0)
+    N = 6
+    cp = {"w": jax.random.normal(key, (N, 4, 3))}
+    wts = jnp.array([1.0, 2.0, 0.0, 1.0, 1.0, 0.0])    # clients 2, 5 out
+    act = np.asarray(wts) > 0
+    rows = np.asarray(cp["w"])[act]                     # (4, 4, 3)
+
+    got_med = MedianAggregator()(cp, wts, key)["w"]
+    np.testing.assert_allclose(np.asarray(got_med),
+                               np.median(rows, axis=0), rtol=1e-6)
+
+    got_tm = TrimmedMeanAggregator(trim_frac=0.25)(cp, wts, key)["w"]
+    srt = np.sort(rows, axis=0)                         # k = floor(.25*4)=1
+    want = srt[1:-1].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(got_tm), want, rtol=1e-6)
+
+
+def test_norm_clip_equals_fedavg_when_clip_is_loose():
+    key = jax.random.PRNGKey(1)
+    cp = {"w": jax.random.normal(key, (4, 5)) * 0.1}
+    wts = jnp.array([1.0, 2.0, 3.0, 4.0])
+    plain = FedAvgAggregator()(cp, wts, key)
+    clipped = NormClipAggregator(clip=1e9)(cp, wts, key,
+                                           prev={"w": jnp.zeros(5)})
+    assert _max_diff(plain, clipped) < 1e-5
+
+
+def test_norm_clip_bounds_the_step():
+    """One Byzantine row with a huge delta: the aggregated step's norm is
+    bounded by the clip (FedAvg's is not)."""
+    prev = {"w": jnp.zeros(8)}
+    cp = {"w": jnp.concatenate([jnp.ones((3, 8)) * 0.01,
+                                jnp.ones((1, 8)) * 1e4])}
+    wts = jnp.ones(4)
+    key = jax.random.PRNGKey(2)
+    clipped = NormClipAggregator(clip=0.1)(cp, wts, key, prev=prev)
+    step = float(jnp.linalg.norm(clipped["w"]))
+    assert step <= 0.1 + 1e-6
+    plain = FedAvgAggregator()(cp, wts, key)
+    assert float(jnp.linalg.norm(plain["w"])) > 1e3
+
+
+def test_buffered_async_staleness_downweights():
+    """Zero staleness ≡ FedAvg; a stale client's update is attenuated by
+    (1 + s)^(-alpha) — the FedBuffer-style weighting."""
+    key = jax.random.PRNGKey(3)
+    prev = {"w": jnp.zeros(6)}
+    cp = {"w": jnp.stack([jnp.ones(6), -jnp.ones(6)])}
+    wts = jnp.ones(2)
+    agg = BufferedAsyncAggregator(server_lr=1.0, staleness_alpha=1.0)
+    fresh = agg(cp, wts, key, prev=prev, staleness=jnp.zeros(2))
+    _trees_equal(fresh, FedAvgAggregator()(cp, wts, key))
+    # client 1 three syncs stale: decay 1/4 -> normalized weights 4/5, 1/5
+    stale = agg(cp, wts, key, prev=prev,
+                staleness=jnp.array([0.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(stale["w"]),
+                               np.full(6, 0.8 - 0.2), rtol=1e-6)
+
+
+def test_staleness_requires_declaring_aggregator(split):
+    data, fcfg = split
+    with pytest.raises(ValueError, match="does not consume"):
+        F.fedavg(jax.random.PRNGKey(0), data["train"],
+                 RouterConfig(d_emb=16, num_models=6), fcfg,
+                 staleness=jnp.zeros(8))
+
+
+def test_dp_composes_over_robust_strategy(split):
+    """GaussianDP forwards declared extras, so DP-over-trimmed-mean is a
+    valid stack (noise really applied, extras really forwarded)."""
+    data, fcfg = split
+    rcfg = RouterConfig(d_emb=16, num_models=6)
+    inner = TrimmedMeanAggregator(trim_frac=0.25)
+    p, _ = F.fedavg(jax.random.PRNGKey(2), data["train"], rcfg, fcfg,
+                    rounds=3,
+                    aggregator=GaussianDPAggregator(sigma=0.05, inner=inner))
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p))
+    p0, _ = F.fedavg(jax.random.PRNGKey(2), data["train"], rcfg, fcfg,
+                     rounds=3, aggregator=inner)
+    assert _max_diff(p, p0) > 1e-5
+
+
+# -------------------------------------- acceptance 3: fault determinism
+
+def test_fault_plan_draws_are_deterministic_across_instances():
+    a = FaultPlan(seed=9, dropout=0.3, delay_frac=0.5, corrupt_frac=0.25,
+                  lose_outcomes=0.2, backend_fail=0.4)
+    b = FaultPlan(seed=9, dropout=0.3, delay_frac=0.5, corrupt_frac=0.25,
+                  lose_outcomes=0.2, backend_fail=0.4)
+    assert [a.client_drops(c, r) for c in range(8) for r in range(5)] == \
+        [b.client_drops(c, r) for c in range(8) for r in range(5)]
+    np.testing.assert_array_equal(a.corrupted_clients(12),
+                                  b.corrupted_clients(12))
+    np.testing.assert_array_equal(a.staleness(12, 3), b.staleness(12, 3))
+    assert [a.lose_outcome(r) for r in range(20)] == \
+        [b.lose_outcome(r) for r in range(20)]
+    assert [a.backend_fails(0, s, 0) for s in range(20)] == \
+        [b.backend_fails(0, s, 0) for s in range(20)]
+    assert a.corrupted_clients(12).sum() == 3       # floor(0.25 * 12)
+
+
+def test_corrupt_updates_sign_flip_oracle():
+    """sign_flip uploads prev - scale*(theta_i - prev) on masked rows
+    only; the inner default FedAvg then averages what the server sees."""
+    prev = {"w": jnp.ones(4)}
+    cp = {"w": jnp.stack([jnp.full(4, 2.0), jnp.full(4, 3.0)])}
+    wts = jnp.ones(2)
+    agg = CorruptUpdates(mask=(True, False), mode="sign_flip", scale=2.0)
+    out = agg(cp, wts, jax.random.PRNGKey(0), prev=prev)
+    # row 0: 1 - 2*(2 - 1) = -1; row 1 untouched: 3 -> mean = 1.0
+    np.testing.assert_allclose(np.asarray(out["w"]), np.full(4, 1.0),
+                               rtol=1e-6)
+
+
+def test_corrupt_updates_validation():
+    prev = {"w": jnp.zeros(3)}
+    cp = {"w": jnp.zeros((4, 3))}
+    wts = jnp.ones(4)
+    with pytest.raises(ValueError, match="mask covers 2 clients"):
+        CorruptUpdates(mask=(True, False))(cp, wts, jax.random.PRNGKey(0),
+                                           prev=prev)
+    with pytest.raises(ValueError, match="corruption mode"):
+        CorruptUpdates(mask=(True,) * 4, mode="gremlins")(
+            cp, wts, jax.random.PRNGKey(0), prev=prev)
+
+
+# ---------------------------------- acceptance 4: failover + checkpoint
+
+def _make_server(fault_plan=None, **kw):
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    pool = [PoolModel("m0", TINY, params, 0.1),
+            PoolModel("m1", TINY, params, 0.5)]
+    router = routers.make("mlp", RCFG).init(jax.random.PRNGKey(1))
+    harvest = HarvestStore(D_EMB, capacity=32, clients=range(N_CLIENTS))
+    return RoutedServer(pool, router, harvest=harvest,
+                        engine_cfg=EngineConfig(slots=4, max_seq=32,
+                                                chunk=4, page_size=8),
+                        fault_plan=fault_plan, **kw)
+
+
+def test_backend_failure_retried_rerouted_and_harvested():
+    """A hard-down backend: the gateway retries, then re-routes to the
+    next-best model by the router's own utility; the request completes and
+    the HARVESTED outcome records the model that actually served it."""
+    srv = _make_server(fault_plan=FaultPlan(seed=0, fail_models=(0,)),
+                       max_retries=2)
+    x = np.zeros(D_EMB, np.float32)
+    # lam=0 routes purely by predicted accuracy; whatever the pick, model
+    # 0 is down, so every request must land on model 1
+    rid = srv.submit("three word prompt", lam=0.0, max_new_tokens=4,
+                     client_id=0, x=x)
+    assert srv.routed_model(rid) == 1
+    assert srv.backend_failures >= 1
+    assert (srv.failovers + srv.retries) >= 1
+    srv.report_outcome(rid, 1.0, 0.5)
+    srv.drain()
+    data = srv.harvest.buffer(0).as_client_data()
+    assert int(data["m"][0]) == 1       # realized model, not the pick
+    assert float(data["w"].sum()) == 1
+
+
+def test_all_backends_down_raises():
+    srv = _make_server(fault_plan=FaultPlan(seed=0, fail_models=(0, 1)))
+    with pytest.raises(RuntimeError, match="all 2 pool backends failed"):
+        srv.submit("three word prompt", lam=0.0, max_new_tokens=4,
+                   client_id=0, x=np.zeros(D_EMB, np.float32))
+
+
+def test_transient_backend_failure_recovers_by_retry():
+    """With a probabilistic per-attempt fault, retries of the SAME model
+    can succeed — the plan draws per (model, seq, attempt)."""
+    plan = FaultPlan(seed=1, backend_fail=0.5)
+    srv = _make_server(fault_plan=plan, max_retries=4)
+    for i in range(6):
+        rid = srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                         client_id=i % N_CLIENTS,
+                         x=np.zeros(D_EMB, np.float32))
+        srv.report_outcome(rid, 1.0, 0.1)
+    out = srv.drain()
+    assert len(out) == 6
+    assert srv.backend_failures > 0 and srv.retries > 0
+
+
+def _drive_stateless(srv, loop, lo, hi):
+    """Deterministic traffic where event i depends only on i — a killed
+    run replays [lo, hi) identically after restore."""
+    routes = []
+    for i in range(lo, hi):
+        x = np.sin(np.arange(D_EMB, dtype=np.float32) * (i + 1))
+        rid = srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                         client_id=i % N_CLIENTS, x=x)
+        m = srv.routed_model(rid)
+        routes.append(m)
+        u = np.random.default_rng(1_000_003 * i + m).random()
+        srv.report_outcome(rid, float(u < 0.4 + 0.3 * m), 0.1 + 0.4 * m)
+        loop.step()
+    loop.drain()
+    loop.sync()
+    return routes
+
+
+def _fresh_loop():
+    srv = _make_server()
+    cfg = FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=3,
+                        min_samples=1)
+    return srv, FedLoop(srv, FCFG, key=jax.random.PRNGKey(7), cfg=cfg)
+
+
+def test_killed_and_restored_loop_continues_bit_identically(tmp_path):
+    """FedLoop.save() after phase 0, restore() into a fresh server, replay
+    phase 1: router state, versions, history, harvest rings, PRNG key and
+    the phase-1 routing decisions all match the uninterrupted twin."""
+    srv_a, loop_a = _fresh_loop()
+    _drive_stateless(srv_a, loop_a, 0, 9)
+    routes_a = _drive_stateless(srv_a, loop_a, 9, 18)
+
+    srv_b, loop_b = _fresh_loop()
+    _drive_stateless(srv_b, loop_b, 0, 9)
+    path = tmp_path / "loop.ckpt"
+    loop_b.save(path)
+    del srv_b, loop_b
+
+    srv_c, loop_c = _fresh_loop()
+    loop_c.restore(path)
+    routes_c = _drive_stateless(srv_c, loop_c, 9, 18)
+
+    assert routes_a == routes_c
+    _trees_equal(srv_a.router.state, srv_c.router.state)
+    assert srv_a.router_version == srv_c.router_version
+    assert loop_a._syncs == loop_c._syncs
+    np.testing.assert_array_equal(np.asarray(loop_a._key),
+                                  np.asarray(loop_c._key))
+    assert len(loop_a.history) == len(loop_c.history)
+    for ha, hc in zip(loop_a.history, loop_c.history):
+        assert ha["version"] == hc["version"]
+        assert ha["samples"] == hc["samples"]
+        np.testing.assert_array_equal(np.asarray(ha["loss"]),
+                                      np.asarray(hc["loss"]))
+    for c in srv_a.harvest.client_ids():
+        sa = srv_a.harvest.buffer(c).state()
+        sc = srv_c.harvest.buffer(c).state()
+        for k in sa:
+            np.testing.assert_array_equal(np.asarray(sa[k]),
+                                          np.asarray(sc[k]))
+
+
+def test_checkpoint_rejects_family_mismatch_and_busy_engine(tmp_path):
+    srv, loop = _fresh_loop()
+    _drive_stateless(srv, loop, 0, 3)
+    path = tmp_path / "loop.ckpt"
+    loop.save(path)
+
+    srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+               client_id=0, x=np.zeros(D_EMB, np.float32))
+    with pytest.raises(ValueError, match="idle engine"):
+        loop.save(tmp_path / "busy.ckpt")
+    srv.drain()
+
+    srv2, loop2 = _fresh_loop()
+    srv2.router = routers.make("mf", RouterConfig(
+        d_emb=D_EMB, num_models=2, mf_rank=4)).init(jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="mlp.*router"):
+        loop2.restore(path)
+
+
+def test_pending_evals_survive_checkpoint(tmp_path):
+    """A submitted-but-unreported evaluation is host-side state: it must
+    survive save/restore and still accept its report_outcome."""
+    srv, loop = _fresh_loop()
+    rid = srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                     client_id=1, x=np.ones(D_EMB, np.float32))
+    srv.drain()
+    path = tmp_path / "loop.ckpt"
+    loop.save(path)
+
+    srv2, loop2 = _fresh_loop()
+    loop2.restore(path)
+    srv2.report_outcome(rid, 1.0, 0.25)
+    assert len(srv2.harvest.buffer(1)) == 1
+
+
+# ---------------------------------------------------- loop: cohort + async
+
+def test_fedloop_staleness_vector_tracks_silent_clients():
+    """Under a BufferedAsync aggregator the loop passes per-client
+    staleness: clients with fresh samples since the last sync are 0, a
+    silent client's staleness grows by one per sync."""
+    srv, _ = _fresh_loop()
+    loop = FedLoop(srv, FCFG, key=jax.random.PRNGKey(7),
+                   aggregator=BufferedAsyncAggregator(),
+                   cfg=FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=2,
+                                     min_samples=1))
+    _drive_stateless(srv, loop, 0, 6)       # all clients fresh, sync 1
+    ids = srv.harvest.client_ids()
+    # nobody has contributed since that sync: everyone is 1 sync stale
+    np.testing.assert_array_equal(loop._staleness_vector(ids),
+                                  np.ones(N_CLIENTS, np.float32))
+    # only clients 0 and 1 get new traffic — they are fresh, 2 is not
+    for i in (0, 1):
+        x = np.cos(np.arange(D_EMB, dtype=np.float32) * (i + 1))
+        rid = srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                         client_id=i, x=x)
+        srv.report_outcome(rid, 1.0, 0.1)
+    srv.drain()
+    np.testing.assert_array_equal(loop._staleness_vector(ids),
+                                  np.array([0, 0, 1], np.float32))
+    # client 2 stays silent: its staleness grows by one per further sync
+    loop.sync()
+    np.testing.assert_array_equal(loop._staleness_vector(ids),
+                                  np.array([1, 1, 2], np.float32))
+    loop.sync()
+    np.testing.assert_array_equal(loop._staleness_vector(ids),
+                                  np.array([2, 2, 3], np.float32))
+
+
+def test_fedloop_cohort_config_forwards_to_fit():
+    """FedLoopConfig.cohort reaches the fit: a cohort-sampled sync still
+    swaps a valid router and is reproducible from the loop seed."""
+    def run():
+        srv, loop = _fresh_loop()
+        loop.cfg = FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=3,
+                                 min_samples=1, cohort=2)
+        _drive_stateless(srv, loop, 0, 9)
+        return srv.router.state, loop.version
+    s1, v1 = run()
+    s2, v2 = run()
+    _trees_equal(s1, s2)
+    assert v1 == v2 == 1

@@ -124,11 +124,36 @@ def test_harvest_memory_bounded_under_sustained_traffic(loop_setup,
 
 
 def test_report_outcome_unknown_rid_raises(loop_setup):
-    srv, _ = loop_setup
-    with pytest.raises(KeyError, match="no pending evaluation"):
+    """Unknown / already-reported / evicted rids raise a ValueError that
+    names the rid and says why it has no pending evaluation."""
+    srv, loop = loop_setup
+    with pytest.raises(ValueError, match="12345.*never harvest-registered"):
         srv.report_outcome(12345, 1.0)
-    with pytest.raises(KeyError, match="no pending evaluation"):
+    with pytest.raises(ValueError, match="12345.*never harvest-registered"):
         srv.routed_model(12345)
+    # double-report: the second call says the outcome already arrived
+    rid = srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                     client_id=0, x=np.zeros(D_EMB, np.float32))
+    srv.report_outcome(rid, 1.0)
+    with pytest.raises(ValueError, match=f"{rid}.*already reported"):
+        srv.report_outcome(rid, 1.0)
+    srv.drain()
+
+
+def test_unknown_rid_names_pending_cap_eviction(loop_setup, monkeypatch):
+    """A rid pushed out by PENDING_EVAL_CAP gets an error naming the cap,
+    not a generic unknown-rid message."""
+    srv, _ = loop_setup
+    monkeypatch.setattr(gateway, "PENDING_EVAL_CAP", 3)
+    rids = [srv.submit("three word prompt", lam=0.5, max_new_tokens=4,
+                       client_id=0, x=np.zeros(D_EMB, np.float32))
+            for _ in range(6)]
+    with pytest.raises(ValueError, match="evicted by the pending-eval cap"):
+        srv.report_outcome(rids[0], 1.0)
+    with pytest.raises(ValueError, match="evicted by the pending-eval cap"):
+        srv.routed_model(rids[1])
+    srv.report_outcome(rids[-1], 1.0)          # survivors still report fine
+    srv.drain()
 
 
 # ----------------------------------------------- sync ≡ offline fit exactly

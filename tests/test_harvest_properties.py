@@ -1,0 +1,210 @@
+"""Property-based harvest invariants: any append sequence against an
+``EvalBuffer`` ring must keep exactly the newest ``capacity`` entries in
+chronological order at constant memory, and round-trip its checkpoint
+state verbatim; ``HarvestStore`` must honour the empty-client semantics of
+``as_federated_data`` on both the padded and unpadded paths and keep live
+memory O(max_clients) under population-scale churned traffic.
+
+Fixed-seed drivers always run (hypothesis-less containers included); the
+hypothesis section behind the usual ``importorskip`` discipline draws the
+same checker over random append sequences (CI bounds it via
+``--hypothesis-seed=0``, see ci.yml)."""
+import numpy as np
+import pytest
+
+from repro.fed.harvest import EvalBuffer, HarvestStore
+from repro.fed.scenarios import PowerLawScenario
+
+D_EMB = 4
+
+
+def _check_ring(capacity: int, seq):
+    """Append ``seq`` (a list of floats used as both payload and tag) and
+    assert the ring properties: bounded length, constant bytes, newest
+    ``capacity`` entries surviving in chronological order, and an exact
+    state()/load_state() round-trip."""
+    buf = EvalBuffer(D_EMB, capacity=capacity)
+    bytes0 = buf.nbytes
+    for i, v in enumerate(seq):
+        buf.append(np.full(D_EMB, v, np.float32), i % 3, float(i % 2), v)
+        assert len(buf) == min(i + 1, capacity)
+        assert buf.nbytes == bytes0
+    assert buf.total_seen == len(seq)
+
+    want = seq[-min(len(seq), capacity):]       # survivors, oldest→newest
+    data = buf.as_client_data()
+    n = len(want)
+    np.testing.assert_array_equal(data["cost"][:n],
+                                  np.asarray(want, np.float32))
+    np.testing.assert_array_equal(data["x"][:n, 0],
+                                  np.asarray(want, np.float32))
+    assert float(data["w"].sum()) == n
+
+    # padded view: same rows, zero-weight tail
+    padded = buf.as_client_data(pad_to=capacity + 3)
+    np.testing.assert_array_equal(padded["cost"][:n], data["cost"][:n])
+    assert float(padded["w"].sum()) == n
+    np.testing.assert_array_equal(padded["w"][n:], 0.0)
+
+    # checkpoint round-trip reproduces the ring VERBATIM (write head
+    # included: appending after restore equals appending without the trip)
+    clone = EvalBuffer(D_EMB, capacity=capacity)
+    clone.load_state(buf.state())
+    for b in (buf, clone):
+        b.append(np.full(D_EMB, -1.0, np.float32), 0, 1.0, -1.0)
+    np.testing.assert_array_equal(buf.as_client_data()["cost"],
+                                  clone.as_client_data()["cost"])
+    assert buf.total_seen == clone.total_seen
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 5, 8])
+def test_ring_wraparound_fixed_seeds(seed):
+    rng = np.random.default_rng(seed)
+    capacity = int(rng.integers(1, 12))
+    n = int(rng.integers(0, 4 * capacity + 1))
+    seq = [float(v) for v in rng.integers(0, 1000, size=n)]
+    _check_ring(capacity, seq)
+
+
+def test_ring_exact_boundaries():
+    """The off-by-one hot spots: exactly full, one over, one lap, and one
+    past a lap."""
+    for cap in (1, 2, 5):
+        for n in (cap - 1, cap, cap + 1, 2 * cap, 2 * cap + 1):
+            _check_ring(cap, [float(i) for i in range(max(n, 0))])
+
+
+def test_load_state_shape_mismatch_raises():
+    buf = EvalBuffer(D_EMB, capacity=8)
+    other = EvalBuffer(D_EMB, capacity=4)
+    with pytest.raises(ValueError, match="ring shape"):
+        buf.load_state(other.state())
+
+
+# ------------------------------------------- empty clients in the stack
+
+def test_unpadded_stack_skips_empty_clients():
+    """Unpadded path: a freshly registered, never-written client
+    contributes NO row — it cannot dilute the federated average."""
+    store = HarvestStore(D_EMB, capacity=8, clients=range(3))
+    store.record(0, np.ones(D_EMB), 0, 1.0, 0.1)
+    store.record(2, np.ones(D_EMB), 1, 0.0, 0.2)
+    data = store.as_federated_data()
+    assert data["x"].shape[0] == 2              # client 1 skipped
+    np.testing.assert_array_equal(np.asarray(data["w"]).sum(axis=1),
+                                  [1.0, 1.0])
+
+
+def test_padded_stack_keeps_empty_clients_zero_weighted():
+    """Padded path: the empty client stays as an all-zero row with w == 0
+    — static client dimension, zero aggregation weight."""
+    store = HarvestStore(D_EMB, capacity=8, clients=range(3))
+    store.record(0, np.ones(D_EMB), 0, 1.0, 0.1)
+    store.record(2, np.ones(D_EMB), 1, 0.0, 0.2)
+    data = store.as_federated_data(pad_to=8)
+    assert data["x"].shape == (3, 8, D_EMB)
+    np.testing.assert_array_equal(np.asarray(data["w"]).sum(axis=1),
+                                  [1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(data["x"])[1], 0.0)
+
+
+def test_all_empty_store_raises():
+    store = HarvestStore(D_EMB, capacity=8, clients=range(3))
+    with pytest.raises(ValueError, match="no harvested samples"):
+        store.as_federated_data()
+    with pytest.raises(ValueError, match="no harvested samples"):
+        store.as_federated_data(pad_to=8)
+
+
+def test_cohort_subset_and_missing_ids():
+    store = HarvestStore(D_EMB, capacity=8, clients=range(4))
+    for c in range(4):
+        store.record(c, np.full(D_EMB, c, np.float32), 0, 1.0, 0.1)
+    sub = store.as_federated_data(pad_to=8, client_ids=[3, 1])
+    assert sub["x"].shape[0] == 2               # sorted ids: [1, 3]
+    np.testing.assert_array_equal(np.asarray(sub["x"])[:, 0, 0], [1.0, 3.0])
+    with pytest.raises(ValueError, match="no live buffer"):
+        store.as_federated_data(client_ids=[1, 99])
+
+
+# --------------------------------------------- O(cohort) LRU eviction
+
+def test_max_clients_lru_eviction():
+    """The least-recently-WRITTEN client is evicted, not the oldest-
+    registered: touching a client re-warms it."""
+    store = HarvestStore(D_EMB, capacity=4, max_clients=2)
+    store.record(0, np.zeros(D_EMB), 0, 1.0, 0.1)
+    store.record(1, np.zeros(D_EMB), 0, 1.0, 0.1)
+    store.record(0, np.zeros(D_EMB), 0, 1.0, 0.1)   # re-warm 0
+    store.record(2, np.zeros(D_EMB), 0, 1.0, 0.1)   # evicts 1, not 0
+    assert store.client_ids() == [0, 2]
+    assert store.evicted_clients == 1
+
+
+def test_power_law_traffic_keeps_harvest_o_cohort():
+    """1k+ clients with Zipf traffic and churn: live buffers and bytes
+    stay bounded by max_clients while arrivals span the population."""
+    sc = PowerLawScenario(1200, zipf_a=1.1, churn=0.2,
+                          queries_per_phase=300, phases=3, seed=0)
+    np.testing.assert_array_equal(sc.events(1),
+                                  PowerLawScenario(
+                                      1200, zipf_a=1.1, churn=0.2,
+                                      queries_per_phase=300, phases=3,
+                                      seed=0).events(1))
+    assert 1 < sc.coverage_clients(0.9) < 1200
+    warm = sc.coverage_clients(0.5)     # a tight cohort-sized working set
+    store = HarvestStore(D_EMB, capacity=8, max_clients=warm)
+    seen = set()
+    per_buf = EvalBuffer(D_EMB, capacity=8).nbytes
+    for phase in range(3):
+        for c in sc.events(phase):
+            store.record(int(c), np.zeros(D_EMB, np.float32), 0, 1.0, 0.1)
+            seen.add(int(c))
+            assert store.nbytes <= warm * per_buf
+    assert len(store.client_ids()) <= warm
+    # churn moved the head: later phases surface clients phase 0 never saw
+    assert len(seen) > len(store.client_ids())
+
+
+def test_power_law_head_dominates_and_churns():
+    sc = PowerLawScenario(800, zipf_a=1.2, churn=0.25,
+                          queries_per_phase=400, phases=3, seed=1)
+    ev = sc.events(0)
+    assert len(np.unique(ev)) < len(ev) // 2     # Zipf concentration
+    p0, p2 = sc.popularity(0), sc.popularity(2)
+    assert abs(p0.sum() - 1.0) < 1e-12 and abs(p2.sum() - 1.0) < 1e-12
+    assert not np.array_equal(np.argsort(p0), np.argsort(p2))  # churned
+
+
+def test_power_law_validation():
+    with pytest.raises(ValueError, match="n_clients"):
+        PowerLawScenario(1)
+    with pytest.raises(ValueError, match="zipf_a"):
+        PowerLawScenario(10, zipf_a=0.0)
+    with pytest.raises(ValueError, match="churn"):
+        PowerLawScenario(10, churn=1.5)
+    with pytest.raises(ValueError, match="coverage"):
+        PowerLawScenario(10).coverage_clients(0.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-drawn append sequences — same importorskip discipline as
+# test_engine_properties.py
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                   # pragma: no cover
+    st = None
+
+if st is not None:
+    @given(st.integers(1, 10),
+           st.lists(st.floats(-1e3, 1e3, allow_nan=False), max_size=50))
+    @settings(max_examples=50, deadline=None)
+    def test_ring_property(capacity, seq):
+        _check_ring(capacity, [float(v) for v in seq])
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_ring_property():
+        pass
