@@ -64,6 +64,25 @@ class FaultPlan:
     backend_fail: float = 0.0
     #: backends that are hard-down (every attempt fails).
     fail_models: Tuple[int, ...] = ()
+    # --- engine-level chaos (serve/engine.py overload faults) ---
+    #: P(a traffic tick is a burst tick — burst_max arrivals at once).
+    burst_rate: float = 0.0
+    #: arrivals on a burst tick (non-burst ticks follow the driver's own
+    #: arrival process).
+    burst_max: int = 8
+    #: P(a tick window of storm_len ticks is a DEADLINE STORM — every
+    #: arrival in the window carries storm_deadline).
+    storm_rate: float = 0.0
+    storm_len: int = 8
+    #: deadline (engine steps) attached to storm-window arrivals.
+    storm_deadline: int = 4
+    #: P(a given request is cancelled mid-flight — a cancel storm is a
+    #: high cancel_rate).
+    cancel_rate: float = 0.0
+    #: P(a tick suffers a page-pressure spike: the driver scales that
+    #: tick's arrivals' decode budgets by spike_scale, stressing the pool).
+    spike_rate: float = 0.0
+    spike_scale: int = 4
 
     # ------------------------------------------------- client-side faults
 
@@ -122,6 +141,46 @@ class FaultPlan:
             return True
         return _unit(self.seed, "backend", int(m_idx), int(seq),
                      int(attempt)) < self.backend_fail
+
+    # ------------------------------------------------ engine-level faults
+    # Overload chaos for the serving layer. Every draw is the same pure
+    # (seed, tags) scheme as above, so a chaos schedule — bursts, deadline
+    # storms, cancel storms, page-pressure spikes — is exactly reproducible
+    # from the plan alone (fed/scenarios.engine_chaos_schedule consumes
+    # these; bench_preempt and the chaos property tests replay them).
+
+    def burst_size(self, tick: int) -> int:
+        """Arrivals injected at traffic tick ``tick`` on top of the
+        driver's own process: ``burst_max`` on a burst tick, else 0."""
+        if _unit(self.seed, "burst", int(tick)) < self.burst_rate:
+            return int(self.burst_max)
+        return 0
+
+    def deadline_storm(self, tick: int) -> bool:
+        """Is ``tick`` inside a deadline-storm window? Windows cover
+        ``storm_len`` consecutive ticks (one draw per window), so a storm
+        is a sustained front of deadline-carrying arrivals, not isolated
+        ticks."""
+        window = int(tick) // max(int(self.storm_len), 1)
+        return _unit(self.seed, "storm", window) < self.storm_rate
+
+    def cancels_request(self, rid: int) -> bool:
+        """Is request ``rid`` fated to be cancelled mid-flight?"""
+        return _unit(self.seed, "cancel", int(rid)) < self.cancel_rate
+
+    def cancel_after(self, rid: int, horizon: int) -> int:
+        """Engine steps a fated request lives before its cancel lands:
+        1..horizon, deterministic per rid."""
+        u = _unit(self.seed, "cancel_at", int(rid))
+        return 1 + int(u * max(int(horizon), 1))
+
+    def page_spike(self, tick: int) -> int:
+        """Decode-budget multiplier for arrivals at ``tick``:
+        ``spike_scale`` on a page-pressure spike tick (long generations
+        squeeze the page pool), else 1."""
+        if _unit(self.seed, "spike", int(tick)) < self.spike_rate:
+            return int(self.spike_scale)
+        return 1
 
     # ------------------------------------------------------- fit wrapper
 

@@ -139,9 +139,13 @@ class FedLoop:
             rounds=self.cfg.rounds_per_sync, **kw)
         self.server.swap_router_state(new_router.state)
         self._note_sync()
+        # snapshot the engine's resilience counters alongside each sync so
+        # a history trace shows how much shedding/preemption/expiry the
+        # serving layer absorbed while this router version was learned
         self.history.append({"version": self.version,
                              "loss": hist["loss"],
-                             "samples": len(harvest)})
+                             "samples": len(harvest),
+                             "engine": self.server.engine.counters()})
         return hist
 
     def _staleness_vector(self, ids) -> np.ndarray:
@@ -182,7 +186,9 @@ class FedLoop:
         if self.server.engine.busy:
             raise ValueError("save() needs an idle engine — drain() "
                              "in-flight requests first (decode KV state "
-                             "is not checkpointable)")
+                             "is not checkpointable; queued, active, and "
+                             "preempted-awaiting-resume requests all count "
+                             "as in-flight)")
         srv = self.server
         payload = {
             "format": CHECKPOINT_FORMAT,

@@ -275,6 +275,48 @@ class PowerLawScenario:
         return int(np.searchsorted(np.cumsum(self._rank_p), coverage) + 1)
 
 
+def engine_chaos_schedule(plan, *, ticks: int = 64,
+                          arrivals_per_tick: int = 1,
+                          prompt_lens: Tuple[int, int] = (3, 9),
+                          max_new: int = 4, vocab: int = 97,
+                          default_deadline: Optional[int] = None,
+                          cancel_horizon: int = 12) -> List[dict]:
+    """Deterministic engine-chaos schedule from a ``FaultPlan``: the one
+    arrival stream both the chaos property tests and ``bench_preempt``
+    replay, so a failure reproduces from (plan, kwargs) alone.
+
+    Each tick carries ``arrivals_per_tick`` baseline arrivals plus the
+    plan's burst (``burst_size``); arrivals in a deadline-storm window get
+    ``plan.storm_deadline`` (others ``default_deadline``); page-pressure
+    spike ticks scale ``max_new`` by ``plan.spike_scale``; cancel-fated
+    arrivals (``cancels_request`` keyed on the submission ordinal) carry
+    the step offset at which the driver should land their cancel. Every
+    event dict: ``tick``, ``toks`` (int32 prompt), ``max_new``,
+    ``deadline`` (engine steps from submit, or None), ``cancel_after``
+    (engine steps from submit, or None)."""
+    events: List[dict] = []
+    ordinal = 0
+    lo, hi = prompt_lens
+    for t in range(int(ticks)):
+        n = int(arrivals_per_tick) + plan.burst_size(t)
+        storm = plan.deadline_storm(t)
+        scale = plan.page_spike(t)
+        for i in range(n):
+            rng = np.random.default_rng(
+                plan.seed * 9_176_941 + 131 * t + i)
+            S = int(rng.integers(lo, hi + 1))
+            toks = rng.integers(1, vocab, size=S).astype(np.int32)
+            deadline = (plan.storm_deadline if storm else default_deadline)
+            cancel_after = (plan.cancel_after(ordinal, cancel_horizon)
+                            if plan.cancels_request(ordinal) else None)
+            events.append({"tick": t, "toks": toks,
+                           "max_new": int(max_new) * scale,
+                           "deadline": deadline,
+                           "cancel_after": cancel_after})
+            ordinal += 1
+    return events
+
+
 def _frontier_auc(predict_fn, test: Dict[str, np.ndarray],
                   n_models: int) -> float:
     """Frontier AUC of a router on one test draw, scored on the true

@@ -56,6 +56,24 @@ parity on real hardware is a ROADMAP item.
 SSM/hybrid archs integrate state over every prefill position and cannot
 share right-padded prompt buckets; they stay on the gateway's per-request
 path (``RoutedServer.generate`` falls back automatically).
+
+Overload resilience (PR 8): requests carry an optional **deadline**
+(engine steps) and can be **cancelled**; both release their slot and
+pages immediately between chunks — pure host bookkeeping, the decode
+program never retraces. Paged lanes with ``reserve="initial"`` claim only
+the prefill bucket's pages at admission and **grow on demand** each chunk;
+under page pressure the engine **preempts** the lowest-priority victim
+(latest deadline first, then fewest tokens generated), releases its pages,
+and re-queues it as a prefill of prompt + tokens-so-far — greedy decode is
+prefix-stable, so the resumed request's tokens are bit-identical to its
+never-preempted twin (test-pinned). A bounded admission queue
+(``queue_cap`` / per-model ``lane_quotas``) **sheds** excess load instead
+of queuing without bound. Every request ends in exactly one typed terminal
+status — ``DONE`` / ``PREEMPTED-resumed`` / ``EXPIRED`` / ``CANCELLED`` /
+``SHED`` — surfaced through ``step()``/``drain()``/``status()``, and the
+counters (``sheds``, ``preemptions``, ``expiries``, ``cancels``,
+``resume_recompute_toks``, ``queue_depth_hw``) are exact accounting for
+the chaos bench (``benchmarks/perf_suite.bench_preempt``).
 """
 from __future__ import annotations
 
@@ -101,6 +119,32 @@ def region_len(n_tokens: int, max_new: int, chunk: int) -> int:
     return max(next_pow2(n_tokens), n_tokens + steps)
 
 
+#: typed terminal statuses. A completed request (DONE, or PREEMPTED-resumed
+#: when it survived >= 1 preemption) surfaces its np token array directly —
+#: result-consuming callers written against the PR 3 engine never change.
+#: The non-completion terminals (EXPIRED / CANCELLED / SHED) surface an
+#: ``Outcome`` record carrying any partial tokens.
+DONE = "DONE"
+PREEMPTED_RESUMED = "PREEMPTED-resumed"
+EXPIRED = "EXPIRED"
+CANCELLED = "CANCELLED"
+SHED = "SHED"
+TERMINAL_STATUSES = (DONE, PREEMPTED_RESUMED, EXPIRED, CANCELLED, SHED)
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Outcome:
+    """Terminal record for a request that did NOT complete: ``status`` is
+    EXPIRED / CANCELLED / SHED and ``tokens`` holds whatever it emitted
+    before termination (None if nothing was). Surfaced as the request's
+    result through ``step()``/``drain()`` in place of the token array."""
+    rid: int
+    status: str
+    tokens: Optional[np.ndarray] = None
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Static engine shape — one compiled program set per value of this."""
@@ -115,6 +159,24 @@ class EngineConfig:
     #: (slots * ceil(max_seq / page_size) — worst-case-equivalent, so
     #: admission is never page-bound; set lower to trade reservation
     #: headroom for strictly more in-flight requests per byte)
+    reserve: str = "lifetime"  #: paged reservation policy. "lifetime"
+    #: claims every page a request can ever write at admission (the PR 4
+    #: engine — admission stalls on pool exhaustion, never preempts).
+    #: "initial" claims only the prefill bucket's pages and grows on
+    #: demand at chunk boundaries; under page pressure the engine preempts
+    #: the lowest-priority victim (latest deadline first, then fewest
+    #: tokens generated) and re-queues it as a prefill of
+    #: prompt + tokens-so-far (recompute-on-resume, bit-identical tokens)
+    queue_cap: Optional[int] = None  #: bounded admission queue per lane;
+    #: a submit past the cap SHEDs per ``shed_policy`` instead of queuing
+    #: without bound. None = unbounded (seed behavior)
+    shed_policy: str = "reject-newest"  #: which request a full lane queue
+    #: sheds: "reject-newest" (the incoming one) or "reject-latest-deadline"
+    #: (the queued request best able to afford it — the incoming one only
+    #: if its own effective deadline is latest)
+    lane_quotas: Tuple[Tuple[int, int], ...] = ()  #: per-model queue-cap
+    #: overrides as (model_idx, cap) pairs, so one overloaded pool model
+    #: sheds its own excess instead of starving the other lanes
 
     @property
     def resolved_pages(self) -> int:
@@ -228,12 +290,24 @@ def _chunk_fn(cfg: ModelConfig, chunk: int):
 # ---------------------------------------------------------------------------
 
 
+def _empty_toks() -> np.ndarray:
+    return np.zeros((0,), np.int32)
+
+
 @dataclasses.dataclass
 class _Active:
     rid: int
-    max_new: int
+    max_new: int               # TOTAL decode budget (prefix included)
+    toks: np.ndarray = dataclasses.field(default_factory=_empty_toks)
+    #: original prompt — kept so preemption can re-queue the request
+    deadline: Optional[int] = None   # absolute engine-step bound
+    t_submit: float = 0.0
+    prefix: np.ndarray = dataclasses.field(default_factory=_empty_toks)
+    #: tokens emitted before the last preemption (this tenure re-prefilled
+    #: prompt + prefix; ``chunks`` holds only the current tenure)
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
-    emitted: int = 0
+    emitted: int = 0           # total emitted, prefix included
+    preempts: int = 0
 
 
 @dataclasses.dataclass
@@ -242,6 +316,14 @@ class _Pending:
     toks: np.ndarray           # (S,) int32 prompt tokens, unpadded
     max_new: int
     t_submit: float = 0.0      # perf_counter at submit (admission latency)
+    deadline: Optional[int] = None   # absolute engine-step bound
+    prefix: np.ndarray = dataclasses.field(default_factory=_empty_toks)
+    #: tokens already emitted before a preemption — admission prefills
+    #: prompt + prefix (recompute-on-resume)
+    preempts: int = 0
+
+    def eff_deadline(self) -> float:
+        return _INF if self.deadline is None else float(self.deadline)
 
 
 class _Lane:
@@ -276,10 +358,40 @@ class ServeEngine:
 
     def __init__(self, pool: List, ecfg: Optional[EngineConfig] = None):
         self.ecfg = ecfg or EngineConfig()
+        if self.ecfg.reserve not in ("lifetime", "initial"):
+            raise ValueError(f"EngineConfig.reserve={self.ecfg.reserve!r}: "
+                             "expected 'lifetime' or 'initial'")
+        if self.ecfg.reserve == "initial" and not self.ecfg.page_size:
+            raise ValueError("reserve='initial' is a paged-pool feature — "
+                             "uniform slot lanes reserve max_seq per slot "
+                             "by construction (set page_size)")
+        if self.ecfg.shed_policy not in ("reject-newest",
+                                         "reject-latest-deadline"):
+            raise ValueError(
+                f"EngineConfig.shed_policy={self.ecfg.shed_policy!r}: "
+                "expected 'reject-newest' or 'reject-latest-deadline'")
         self.pool = pool
         self._lanes: Dict[int, _Lane] = {}
         self._next_rid = 0
         self._done: Dict[int, np.ndarray] = {}
+        self._lane_caps = dict(self.ecfg.lane_quotas)
+        self._steps = 0              #: step() calls so far — the deadline
+        #: clock (submit(deadline=d) expires after d further steps)
+        self._status: Dict[int, str] = {}   # rid → terminal status, bounded
+        #: terminal records produced since the last step()/drain() flush —
+        #: cancel()/shed/expiry land here so their typed results surface
+        #: through the same channel as completions
+        self._events: List[Tuple[int, object]] = []
+        #: resilience counters — exact accounting, threaded into FedLoop
+        #: sync history and BENCH_preempt.json. Reset by assigning 0.
+        self.sheds = 0
+        self.preemptions = 0
+        self.expiries = 0
+        self.cancels = 0
+        #: prompt+prefix positions re-prefilled by preemption resumes (the
+        #: recompute cost preemption pays for its page elasticity)
+        self.resume_recompute_toks = 0
+        self.queue_depth_hw = 0      #: queue-depth high-water across lanes
         #: queue-wait per admitted request (submit → prefill dispatched),
         #: seconds; bounded like TRACE_LOG so long-running servers don't
         #: leak. benchmarks/perf_suite.bench_paged reads the p99.
@@ -294,12 +406,31 @@ class ServeEngine:
     def _region_len(self, n_tokens: int, max_new: int) -> int:
         return region_len(n_tokens, max_new, self.ecfg.chunk)
 
+    def _region_cap(self, n_tokens: int, max_new: int) -> int:
+        """Worst-case region a request may ever need. Lifetime reservation:
+        its own ``region_len``. Initial reservation additionally covers the
+        worst RESUME point — a request preempted after k emitted tokens
+        re-prefills n_tokens + k in ITS pow2 bucket, and the largest k at
+        which a resume can still happen is the last chunk boundary before
+        max_new. Admitting only requests whose worst resume bucket fits
+        guarantees every preempted request stays resumable and a lone
+        request always completes (no preemption livelock)."""
+        region = self._region_len(n_tokens, max_new)
+        if self.ecfg.page_size and self.ecfg.reserve == "initial":
+            chunk = self.ecfg.chunk
+            k_max = (-(-max_new // chunk) - 1) * chunk
+            region = max(region, next_pow2(n_tokens + k_max))
+        return region
+
     def fits(self, n_tokens: int, max_new: int) -> bool:
         """Whether a request can ever be admitted: its written region must
         stay inside ``max_seq`` (the page-table width on paged lanes, the
         slot region on uniform ones), and on paged lanes its page count
-        must not exceed the whole pool."""
-        region = self._region_len(n_tokens, max_new)
+        must not exceed the whole pool. Under ``reserve="initial"`` the
+        region also covers the worst resume-point prefill bucket (see
+        ``_region_cap``) — slightly stricter, so preempted requests are
+        always resumable."""
+        region = self._region_cap(n_tokens, max_new)
         if region > self.ecfg.max_seq:
             return False
         if self.ecfg.page_size:
@@ -318,7 +449,15 @@ class ServeEngine:
         return sum(len(lane.active) for lane in self._lanes.values())
 
     # ------------------------------------------------------------- submit
-    def submit(self, model_idx: int, toks: np.ndarray, max_new: int) -> int:
+    def submit(self, model_idx: int, toks: np.ndarray, max_new: int, *,
+               deadline: Optional[int] = None) -> int:
+        """Enqueue a request; returns its rid. ``deadline`` bounds its
+        lifetime in engine steps: after that many further ``step()`` calls
+        an unfinished request EXPIREs (slot and pages released between
+        chunks, partial tokens surfaced in its ``Outcome``). None = never.
+        A full lane queue (``queue_cap`` / ``lane_quotas``) SHEDs per
+        ``shed_policy`` — the shed request's rid still comes back here and
+        its typed ``Outcome`` surfaces through the next step()/drain()."""
         pm = self.pool[int(model_idx)]
         if pm.cfg.arch_type in ("ssm", "hybrid"):
             raise TypeError(
@@ -337,32 +476,174 @@ class ServeEngine:
                 + " — raise EngineConfig.max_seq/pages or shorten the "
                 "request (RoutedServer.generate falls back to the per-call "
                 "path automatically)")
+        if deadline is not None and int(deadline) < 1:
+            raise ValueError(f"deadline={deadline}: a request needs at "
+                             "least one engine step to make progress")
         rid = self._next_rid
         self._next_rid += 1
         lane = self._lanes.get(int(model_idx))
         if lane is None:
             lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg)
-        lane.queue.append(_Pending(rid, toks, max_new,
-                                   t_submit=time.perf_counter()))
+        pend = _Pending(rid, toks, max_new, t_submit=time.perf_counter(),
+                        deadline=(self._steps + int(deadline)
+                                  if deadline is not None else None))
+        cap = self._lane_caps.get(int(model_idx), self.ecfg.queue_cap)
+        if cap is not None and len(lane.queue) >= cap:
+            victim = pend
+            if self.ecfg.shed_policy == "reject-latest-deadline":
+                # shed whichever of queue ∪ {incoming} can best afford it:
+                # latest effective deadline, newest rid on ties — so the
+                # incoming request sheds only when ITS priority is lowest
+                qv = max(lane.queue, key=lambda q: (q.eff_deadline(), q.rid))
+                if ((qv.eff_deadline(), qv.rid)
+                        > (pend.eff_deadline(), pend.rid)):
+                    lane.queue.remove(qv)
+                    lane.queue.append(pend)
+                    victim = qv
+            self.sheds += 1
+            self._record(victim.rid, SHED,
+                         tokens=(victim.prefix.copy()
+                                 if len(victim.prefix) else None))
+        else:
+            lane.queue.append(pend)
+        depth = sum(len(l.queue) for l in self._lanes.values())
+        self.queue_depth_hw = max(self.queue_depth_hw, depth)
         return rid
 
+    # ---------------------------------------------------------- lifecycle
+    def _record(self, rid: int, status: str, tokens=None) -> None:
+        """Write a request's single terminal record: its result payload
+        (np tokens for completions, a typed Outcome otherwise) lands in the
+        step()-return event buffer and the drain() buffer, its status in
+        the bounded status map."""
+        payload = (tokens if status in (DONE, PREEMPTED_RESUMED)
+                   else Outcome(rid, status, tokens))
+        self._events.append((rid, payload))
+        self._done[rid] = payload
+        self._status[rid] = status
+        while len(self._status) > 4 * self.ecfg.done_buffer:
+            self._status.pop(next(iter(self._status)))
+
+    @staticmethod
+    def _partial_tokens(st: _Active) -> Optional[np.ndarray]:
+        parts = ([st.prefix] if len(st.prefix) else []) + st.chunks
+        if not parts or st.emitted == 0:
+            return None
+        return np.concatenate(parts)[:st.emitted]
+
+    def _release_slot(self, lane: _Lane, slot: int) -> None:
+        """Free a slot's capacity between chunks: slot to the free list,
+        pages to the page free list, carry zeroed. Pure host bookkeeping —
+        the decode program's shapes don't change, so no retrace."""
+        del lane.active[slot]
+        lane.free.append(slot)
+        if lane.paged:
+            lane.pt.release(slot)
+        lane.tok[slot] = 0
+        lane.pos[slot] = 0
+
+    def cancel(self, rid: int) -> str:
+        """Cancel a request wherever it is: queued/preempted requests
+        leave the queue; an active one releases its slot and pages at this
+        chunk boundary (no decode retrace). Already-terminal rids are a
+        no-op returning their existing status; unknown rids raise KeyError.
+        The CANCELLED record (with any partial tokens) surfaces through
+        the next ``step()``/``drain()``."""
+        if rid in self._status:
+            return self._status[rid]
+        for lane in self._lanes.values():
+            for q in lane.queue:
+                if q.rid == rid:
+                    lane.queue.remove(q)
+                    self.cancels += 1
+                    self._record(rid, CANCELLED,
+                                 tokens=(q.prefix.copy()
+                                         if len(q.prefix) else None))
+                    return CANCELLED
+            for slot, st in list(lane.active.items()):
+                if st.rid == rid:
+                    toks = self._partial_tokens(st)
+                    self._release_slot(lane, slot)
+                    self.cancels += 1
+                    self._record(rid, CANCELLED, tokens=toks)
+                    return CANCELLED
+        raise KeyError(f"unknown request id {rid}")
+
+    def status(self, rid: int) -> str:
+        """Typed lifecycle status: one of the terminal statuses once the
+        request ended, else "ACTIVE" (holding a slot), "PREEMPTED"
+        (evicted, queued for recompute-resume) or "QUEUED". KeyError for a
+        rid the engine never saw (or whose terminal record aged out of the
+        bounded status buffer)."""
+        if rid in self._status:
+            return self._status[rid]
+        for lane in self._lanes.values():
+            for st in lane.active.values():
+                if st.rid == rid:
+                    return "ACTIVE"
+            for q in lane.queue:
+                if q.rid == rid:
+                    return "PREEMPTED" if q.preempts else "QUEUED"
+        raise KeyError(f"unknown request id {rid} (never submitted, or its "
+                       "terminal record aged out of the status buffer)")
+
+    def counters(self) -> Dict[str, int]:
+        """Snapshot of the resilience counters (threaded into FedLoop sync
+        history and the chaos bench)."""
+        return {"sheds": self.sheds, "preemptions": self.preemptions,
+                "expiries": self.expiries, "cancels": self.cancels,
+                "resume_recompute_toks": self.resume_recompute_toks,
+                "queue_depth_hw": self.queue_depth_hw,
+                "peak_active": self.peak_active}
+
+    def _expire(self, lane: _Lane) -> None:
+        """EXPIRE every request (active or queued) whose deadline has
+        passed — slot and pages release immediately, partial tokens ride
+        in the Outcome."""
+        now = self._steps
+        for slot, st in sorted(lane.active.items()):
+            if st.deadline is not None and now >= st.deadline:
+                toks = self._partial_tokens(st)
+                self._release_slot(lane, slot)
+                self.expiries += 1
+                self._record(st.rid, EXPIRED, tokens=toks)
+        if any(q.deadline is not None and now >= q.deadline
+               for q in lane.queue):
+            keep: Deque[_Pending] = collections.deque()
+            for q in lane.queue:
+                if q.deadline is not None and now >= q.deadline:
+                    self.expiries += 1
+                    self._record(q.rid, EXPIRED,
+                                 tokens=(q.prefix.copy()
+                                         if len(q.prefix) else None))
+                else:
+                    keep.append(q)
+            lane.queue = keep
+
     # --------------------------------------------------------------- step
-    def step(self) -> List[Tuple[int, np.ndarray]]:
-        """Admit what fits, then decode one chunk on every busy lane.
-        Returns the requests finished this step as (rid, tokens). Finished
-        results are also buffered for ``drain()`` — up to
+    def step(self) -> List[Tuple[int, object]]:
+        """Expire, admit (preempting under page pressure in "initial"
+        mode), grow page reservations, then decode one chunk on every busy
+        lane. Returns every request that reached a TERMINAL state this
+        step as (rid, result): completions (DONE / PREEMPTED-resumed)
+        carry their np token array, EXPIRED/CANCELLED/SHED carry a typed
+        ``Outcome``. Results are also buffered for ``drain()`` — up to
         ``EngineConfig.done_buffer`` of them, oldest evicted first, so a
         server that consumes step()'s return value and never drains can
         run forever without growing memory."""
-        finished: List[Tuple[int, np.ndarray]] = []
+        for lane in self._lanes.values():
+            self._expire(lane)
         for lane in self._lanes.values():
             self._admit(lane)
         self.peak_active = max(self.peak_active, self.n_active())
         for lane in self._lanes.values():
+            if lane.active and lane.paged and self.ecfg.reserve == "initial":
+                self._grow_for_chunk(lane)
             if lane.active:
-                finished.extend(self._decode_chunk(lane))
-        for rid, out in finished:
-            self._done[rid] = out
+                self._decode_chunk(lane)
+        self._steps += 1
+        finished = self._events
+        self._events = []
         while len(self._done) > self.ecfg.done_buffer:
             self._done.pop(next(iter(self._done)))
         return finished
@@ -371,12 +652,17 @@ class ServeEngine:
     def busy(self) -> bool:
         return any(l.queue or l.active for l in self._lanes.values())
 
-    def drain(self, rids=None) -> Dict[int, np.ndarray]:
-        """Step until completion and return {rid: tokens}. With rids=None,
-        runs until every lane is idle and returns (and clears) everything;
-        with an iterable of request ids, runs until exactly those finish
-        and leaves other results in place (so interleaved ``submit``
-        streams keep their results)."""
+    def drain(self, rids=None) -> Dict[int, object]:
+        """Step until completion and return {rid: result} — np tokens for
+        completed requests, a typed ``Outcome`` for expired / cancelled /
+        shed ones. With rids=None, runs until every lane is idle and
+        returns (and clears) everything; with an iterable of request ids,
+        runs until exactly those reach a terminal state and leaves other
+        results in place (so interleaved ``submit`` streams keep their
+        results). A wanted rid that already terminated — cancelled,
+        expired, shed — returns its typed record instead of hanging or
+        KeyError-ing; only a rid the engine has no record of raises
+        KeyError."""
         if rids is None:
             # capture from step() returns as requests finish — like the
             # rids branch below, immune to done-buffer eviction when more
@@ -386,23 +672,107 @@ class ServeEngine:
                 out.update(self.step())
             out.update(self._done)
             self._done = {}
+            self._events = []
             return out
         want = set(rids)
         # collect straight from step() results (not only the _done buffer,
         # whose oldest entries step() may evict) — a wanted rid is captured
         # the moment it finishes, so any batch size is safe
         out = {r: self._done.pop(r) for r in want if r in self._done}
+        # a terminal rid whose payload was evicted from the done buffer
+        # still resolves through the status map (tokens lost to eviction)
+        for r in want - out.keys():
+            if r in self._status and self._status[r] not in (
+                    DONE, PREEMPTED_RESUMED):
+                out[r] = Outcome(r, self._status[r])
+        self._events = [(r, p) for r, p in self._events if r not in out]
         while want - out.keys():
             if not self.busy:
                 raise KeyError(f"unknown request ids: "
                                f"{sorted(want - out.keys())}")
-            for rid, toks in self.step():
+            for rid, payload in self.step():
                 if rid in want:
-                    out[rid] = toks
+                    out[rid] = payload
                     self._done.pop(rid, None)
         return out
 
     # ------------------------------------------------------------ internals
+    @staticmethod
+    def _full_prompt(req: _Pending) -> np.ndarray:
+        """The token sequence admission actually prefills: the original
+        prompt, plus — after a preemption — every token the request had
+        already emitted (recompute-on-resume; greedy decode's prefix
+        stability makes the continuation bit-identical)."""
+        if len(req.prefix):
+            return np.concatenate([req.toks, req.prefix])
+        return req.toks
+
+    def _activate(self, req: _Pending, S: int) -> _Active:
+        if req.preempts:
+            self.resume_recompute_toks += S
+        return _Active(req.rid, req.max_new, toks=req.toks,
+                       deadline=req.deadline, t_submit=req.t_submit,
+                       prefix=req.prefix, emitted=len(req.prefix),
+                       preempts=req.preempts)
+
+    def _pick_victim(self, lane: _Lane,
+                     before: Optional[float] = None) -> Optional[int]:
+        """The eviction policy: latest effective deadline first (None →
+        +inf), then fewest tokens generated (least recompute thrown away),
+        then the youngest rid — deterministic. With ``before`` set
+        (admission preemption) only a victim whose deadline is STRICTLY
+        later qualifies: a deadline burst displaces lower-priority work
+        but never equal-or-higher-priority work, and deadline-less traffic
+        never triggers admission preemption at all. Returns the victim's
+        slot, or None."""
+        best_key, best_slot = None, None
+        for slot, st in sorted(lane.active.items()):
+            dl = _INF if st.deadline is None else float(st.deadline)
+            if before is not None and not dl > before:
+                continue
+            key = (dl, -st.emitted, st.rid)
+            if best_key is None or key > best_key:
+                best_key, best_slot = key, slot
+        return best_slot
+
+    def _preempt(self, lane: _Lane, slot: int) -> None:
+        """Evict one in-flight request: pages back to the free list, slot
+        freed, request re-queued (queue back) as a prefill of
+        prompt + tokens-so-far. Host bookkeeping only — no decode-program
+        retrace (TRACE_LOG-pinned)."""
+        st = lane.active[slot]
+        prefix = self._partial_tokens(st)
+        self._release_slot(lane, slot)
+        self.preemptions += 1
+        lane.queue.append(_Pending(
+            st.rid, st.toks, st.max_new, t_submit=st.t_submit,
+            deadline=st.deadline,
+            prefix=(np.asarray(prefix, np.int32) if prefix is not None
+                    else _empty_toks()),
+            preempts=st.preempts + 1))
+
+    def _grow_for_chunk(self, lane: _Lane) -> None:
+        """Initial-reservation lanes, right before a decode chunk: every
+        active slot's page table must cover its next ``chunk`` writes
+        [pos, pos + chunk). Grow reservations on demand; under pool
+        pressure preempt victims (``_pick_victim`` policy) until the
+        survivors fit. ``fits()``'s resumable-region bound guarantees a
+        lone request always covers itself, so this terminates with at
+        least zero active slots and never deadlocks."""
+        chunk, ps = self.ecfg.chunk, self.ecfg.page_size
+        while lane.active:
+            need: Dict[int, int] = {}
+            for slot in sorted(lane.active):
+                want = -(-(int(lane.pos[slot]) + chunk) // ps)
+                short = want - lane.pt.held(slot)
+                if short > 0:
+                    need[slot] = short
+            if sum(need.values()) <= lane.pt.available:
+                for slot, n in sorted(need.items()):
+                    lane.pt.grow(slot, n)
+                return
+            self._preempt(lane, self._pick_victim(lane))
+
     def _admit(self, lane: _Lane) -> None:
         if lane.paged:
             self._admit_paged(lane)
@@ -411,35 +781,52 @@ class ServeEngine:
         while lane.free and lane.queue:
             req = lane.queue.popleft()
             slot = lane.free.pop()
-            S = len(req.toks)
+            full = self._full_prompt(req)
+            S = len(full)
             S_b = next_pow2(S)
             toks_p = np.zeros((1, S_b), np.int32)
-            toks_p[0, :S] = req.toks
+            toks_p[0, :S] = full
             tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
                                         jnp.int32(S - 1))
             lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
             self.admission_lat.append(time.perf_counter() - req.t_submit)
             lane.tok[slot] = int(tok0[0])
             lane.pos[slot] = S          # first decode token writes K/V at S
-            lane.active[slot] = _Active(req.rid, req.max_new)
+            lane.active[slot] = self._activate(req, S)
 
     def _admit_paged(self, lane: _Lane) -> None:
-        """Paged admission: claim a decode slot + exactly the pages each
-        request's own region needs (FIFO — the head waits for pages rather
-        than being overtaken), then COALESCE everything admitted this
-        boundary by prompt bucket: one (B_b, S_b) prefill dispatch per
-        bucket with per-row ``last_pos``, one donated page scatter. Pad
-        rows of a non-pow2 group prefill garbage into the trash page."""
+        """Paged admission: claim a decode slot + pages (FIFO — the head
+        waits for pages rather than being overtaken), then COALESCE
+        everything admitted this boundary by prompt bucket: one (B_b, S_b)
+        prefill dispatch per bucket with per-row ``last_pos``, one donated
+        page scatter. Pad rows of a non-pow2 group prefill garbage into
+        the trash page. Lifetime reservation claims the whole region up
+        front; initial reservation claims only the prefill bucket's pages
+        (growth happens chunk-by-chunk) and may PREEMPT a strictly
+        later-deadline victim to admit a deadline-pressed queue head.
+        Preemption resumes re-prefill prompt + emitted tokens — they
+        coalesce into their (larger) bucket like any fresh request."""
         ecfg = self.ecfg
         ps = ecfg.page_size
+        initial = ecfg.reserve == "initial"
         admitted = []                   # (req, slot, S, S_b, pages)
-        while lane.queue and lane.free:
+        while lane.queue:
             req = lane.queue[0]
-            S = len(req.toks)
+            S = len(req.toks) + len(req.prefix)
             S_b = next_pow2(S)
-            need = lane.pt.pages_needed(self._region_len(S, req.max_new))
-            if need > lane.pt.available:
-                break
+            if initial:
+                need = lane.pt.pages_needed(S_b)
+            else:
+                need = lane.pt.pages_needed(
+                    self._region_len(S, req.max_new - len(req.prefix)))
+            if not lane.free or need > lane.pt.available:
+                if not initial:
+                    break
+                victim = self._pick_victim(lane, before=req.eff_deadline())
+                if victim is None:
+                    break
+                self._preempt(lane, victim)
+                continue
             lane.queue.popleft()
             slot = lane.free.pop()
             pages = lane.pt.alloc(slot, need)
@@ -458,7 +845,7 @@ class ServeEngine:
             last = np.zeros((B_b,), np.int32)
             pages_mat = np.zeros((B_b, n_pp), np.int32)   # pad rows → trash
             for r, (req, slot, S, _, pages) in enumerate(items):
-                toks_p[r, :S] = req.toks
+                toks_p[r, :S] = self._full_prompt(req)
                 last[r] = S - 1
                 pages_mat[r] = pages[:n_pp]
             tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
@@ -471,9 +858,9 @@ class ServeEngine:
                 self.admission_lat.append(now - req.t_submit)
                 lane.tok[slot] = int(tok0[r])
                 lane.pos[slot] = S      # first decode token writes K/V at S
-                lane.active[slot] = _Active(req.rid, req.max_new)
+                lane.active[slot] = self._activate(req, S)
 
-    def _decode_chunk(self, lane: _Lane) -> List[Tuple[int, np.ndarray]]:
+    def _decode_chunk(self, lane: _Lane) -> None:
         cfg, ecfg = lane.pm.cfg, self.ecfg
         if lane.paged:
             lane.pool, tok, pos, out = _chunk_paged_fn(cfg, ecfg.chunk)(
@@ -495,18 +882,13 @@ class ServeEngine:
         # contents no request's page table maps below its validity bound.)
         lane.tok = np.where(active_mask, np.asarray(tok), 0).astype(np.int32)
         lane.pos = np.where(active_mask, np.asarray(pos), 0).astype(np.int32)
-        finished = []
         for slot in list(lane.active):
             st = lane.active[slot]
             st.chunks.append(out[slot])
             st.emitted += ecfg.chunk
             if st.emitted >= st.max_new:
-                tokens = np.concatenate(st.chunks)[:st.max_new]
-                finished.append((st.rid, tokens))
-                del lane.active[slot]
-                lane.free.append(slot)
-                if lane.paged:
-                    lane.pt.release(slot)
-                lane.tok[slot] = 0
-                lane.pos[slot] = 0
-        return finished
+                parts = ([st.prefix] if len(st.prefix) else []) + st.chunks
+                tokens = np.concatenate(parts)[:st.max_new]
+                status = PREEMPTED_RESUMED if st.preempts else DONE
+                self._release_slot(lane, slot)
+                self._record(st.rid, status, tokens=tokens)

@@ -52,7 +52,8 @@ from repro.routers import Router
 # TRACE_LOG lives in engine.py (bounded deque) and is re-exported here so
 # `gateway.TRACE_LOG` keeps working for tests and callers; same for
 # reset_trace_log.
-from repro.serve.engine import EngineConfig, ServeEngine, TRACE_LOG
+from repro.serve.engine import (CANCELLED, EXPIRED, SHED, EngineConfig,
+                                Outcome, ServeEngine, TRACE_LOG)
 from repro.serve.engine import next_pow2 as _next_pow2
 from repro.serve.engine import reset_trace_log  # noqa: F401
 from repro.serve.kv_cache import extend_cache
@@ -189,6 +190,13 @@ class RoutedServer:
         self.backend_failures = 0
         self.retries = 0
         self.failovers = 0
+        #: expiries count as backend failures for harvest purposes (the
+        #: router should learn an overloaded backend the same way it
+        #: learns a crashed one); the tombstones make unknown-rid errors
+        #: actionable and dedupe the expiry→failure accounting.
+        self.expiry_failures = 0
+        self._failed_rids = collections.deque(maxlen=4096)
+        self._terminated_rids = collections.deque(maxlen=4096)
 
     @staticmethod
     def _make_route_fn(router: Router):
@@ -268,7 +276,8 @@ class RoutedServer:
                max_new_tokens: int = 16,
                tokenize: Optional[Callable] = None,
                client_id: Optional[int] = None,
-               x: Optional[np.ndarray] = None) -> int:
+               x: Optional[np.ndarray] = None,
+               deadline: Optional[int] = None) -> int:
         """Route one prompt and enqueue it on the continuous-batching
         engine; returns a request id. The request joins the routed model's
         shared decode batch at the next free slot — call ``step()`` to
@@ -286,14 +295,25 @@ class RoutedServer:
         degrades gracefully: it re-routes to the next-best model under the
         router's own utility A − λ·C (excluding failed backends), counts
         the failover, and the harvest records the model that actually
-        served it — the realized outcome, not the intended route."""
+        served it — the realized outcome, not the intended route.
+
+        ``deadline`` bounds the request's lifetime in engine steps (see
+        ``ServeEngine.submit``); an EXPIRED request counts as a backend
+        failure for harvest purposes (zero-score outcome recorded against
+        the routed model). A submit SHED by a full lane queue still
+        returns its rid but is never harvest-registered — nothing was
+        served, nothing to learn."""
         x_arr = (encode([prompt], self.d_emb)[0] if x is None
                  else np.asarray(x, np.float32).reshape(self.d_emb))
         m_idx = int(self._route_x(x_arr[None], lam)[0])
         if self.fault_plan is not None:
             m_idx = self._submit_with_failover(m_idx, x_arr, lam)
         toks = self._tokenize([prompt], self.pool[m_idx].cfg, tokenize)[0]
-        rid = self.engine.submit(m_idx, toks, max_new_tokens)
+        rid = self.engine.submit(m_idx, toks, max_new_tokens,
+                                 deadline=deadline)
+        if self.engine._status.get(rid) == SHED:
+            self._terminated_rids.append(rid)
+            return rid
         if self.harvest is not None and client_id is not None:
             cost_est = self.pool[m_idx].cost_per_token * max_new_tokens
             self._pending_evals[rid] = (int(client_id), x_arr, m_idx,
@@ -347,6 +367,12 @@ class RoutedServer:
                    "outcomes sooner or raise the cap")
         elif rid in self._reported_rids:
             why = "its outcome was already reported (each rid reports once)"
+        elif rid in self._failed_rids:
+            why = ("it EXPIRED past its deadline — the gateway already "
+                   "recorded the expiry as a zero-score backend failure")
+        elif rid in self._terminated_rids:
+            why = ("it was cancelled or shed before serving — nothing was "
+                   "generated, so there is no outcome to report")
         else:
             why = ("it was never harvest-registered — submit() it with "
                    "client_id= and attach a HarvestStore to track routing "
@@ -376,14 +402,62 @@ class RoutedServer:
         self.harvest.record(client_id, x_arr, m_idx, float(score),
                             float(cost if cost is not None else cost_est))
 
+    def cancel(self, rid: int) -> str:
+        """Cancel an engine request (see ``ServeEngine.cancel``) and drop
+        its pending harvest registration — nothing was served, so there is
+        no outcome to report. Returns the request's typed status."""
+        status = self.engine.cancel(rid)
+        if self._pending_evals.pop(rid, None) is not None:
+            self._terminated_rids.append(rid)
+        return status
+
+    def status(self, rid: int) -> str:
+        """Typed lifecycle status of an engine request (see
+        ``ServeEngine.status``)."""
+        return self.engine.status(rid)
+
+    def _absorb_outcomes(self, results) -> None:
+        """React to typed non-completion terminals from the engine.
+        EXPIRED is a backend failure for harvest purposes: the overloaded
+        backend gets a zero-score outcome recorded against it (the router
+        learns to avoid it, exactly like a crashed backend in the PR 7
+        failover path) and ``backend_failures``/``expiry_failures`` bump.
+        CANCELLED / SHED just drop the pending registration — nothing was
+        served, nothing to learn."""
+        for rid, payload in results:
+            if not isinstance(payload, Outcome):
+                continue
+            if payload.status == EXPIRED:
+                if rid in self._failed_rids:
+                    continue
+                self._failed_rids.append(rid)
+                self.backend_failures += 1
+                self.expiry_failures += 1
+                ent = self._pending_evals.pop(rid, None)
+                if ent is not None and self.harvest is not None:
+                    client_id, x_arr, m_idx, cost_est = ent
+                    self.harvest.record(client_id, x_arr, m_idx, 0.0,
+                                        cost_est)
+            elif payload.status in (CANCELLED, SHED):
+                if self._pending_evals.pop(rid, None) is not None:
+                    self._terminated_rids.append(rid)
+
     def step(self):
         """Advance every busy engine lane one chunk (admissions happen at
-        chunk boundaries). Returns [(request id, np tokens)] finished."""
-        return self.engine.step()
+        chunk boundaries). Returns [(request id, result)] for requests
+        that reached a terminal state — np tokens for completions, a typed
+        ``Outcome`` for expired/cancelled/shed requests (absorbed into the
+        harvest accounting, see ``_absorb_outcomes``)."""
+        finished = self.engine.step()
+        self._absorb_outcomes(finished)
+        return finished
 
     def drain(self) -> Dict[int, np.ndarray]:
-        """Run the engine until idle; returns {request id: np tokens}."""
-        return self.engine.drain()
+        """Run the engine until idle; returns {request id: result} (np
+        tokens, or a typed ``Outcome`` for non-completions)."""
+        out = self.engine.drain()
+        self._absorb_outcomes(out.items())
+        return out
 
     # ------------------------------------------------------------- generate
     def generate(self, prompts: List[str], *, lam: float = 0.5,

@@ -110,6 +110,10 @@ class PageTable:
     def available(self) -> int:
         return len(self.free)
 
+    def held(self, slot: int) -> int:
+        """Pages currently held by ``slot`` (0 if none)."""
+        return len(self._held.get(slot, ()))
+
     def alloc(self, slot: int, n: int) -> np.ndarray:
         """Claim n pages for ``slot``; returns their pool indices in
         logical-block order. Raises if the pool is exhausted (callers gate
@@ -125,10 +129,49 @@ class PageTable:
         self._held[slot] = got
         return np.asarray(got, np.int32)
 
-    def release(self, slot: int) -> None:
-        """Return a slot's pages to the free list and zero its row."""
-        self.free.extend(self._held.pop(slot, ()))
+    def grow(self, slot: int, n: int) -> np.ndarray:
+        """On-demand growth: append ``n`` more pages to a slot that already
+        holds some (initial-reservation admission — the decode loop grows a
+        request's table right before its writes cross a page boundary).
+        Raises on exhaustion (callers preempt a victim first), on a slot
+        holding nothing (growth is not admission), and past the static
+        table width."""
+        if slot not in self._held:
+            raise RuntimeError(f"slot {slot} holds no pages — grow() "
+                               "extends an existing reservation; use "
+                               "alloc() to admit")
+        held = self._held[slot]
+        if len(held) + n > self.max_pages:
+            raise RuntimeError(
+                f"slot {slot} cannot grow to {len(held) + n} pages: the "
+                f"table row is {self.max_pages} wide (max_seq-bound)")
+        if n > len(self.free):
+            raise RuntimeError(f"page pool exhausted: grow needs {n}, "
+                               f"have {len(self.free)}")
+        got = [self.free.pop() for _ in range(n)]
+        self.table[slot, len(held):len(held) + n] = got
+        held.extend(got)
+        return np.asarray(got, np.int32)
+
+    def release(self, slot: int) -> bool:
+        """Return a slot's pages to the free list and zero its row.
+
+        Deterministic under the cancellation/expiry/preemption paths that
+        may race completion: releasing a slot that holds nothing (double
+        release included) is a NO-OP returning False — pages are never
+        re-added to the free list, so it cannot be corrupted. A slot index
+        outside the table raises IndexError (that is a caller bug, not a
+        race). Pinned by tests/test_engine_resilience.py."""
+        if not 0 <= int(slot) < self.table.shape[0]:
+            raise IndexError(
+                f"slot {slot} outside the page table "
+                f"(slots={self.table.shape[0]})")
+        pages = self._held.pop(slot, None)
+        if pages is None:
+            return False
+        self.free.extend(pages)
         self.table[slot] = 0
+        return True
 
 
 def write_prefill_pages(pool, prefill_cache, pages_mat):

@@ -135,6 +135,94 @@ def test_every_request_alone_equals_itself(pm):
 
 
 # ---------------------------------------------------------------------------
+# seeded chaos property (PR 8): drive a FaultPlan-generated overload
+# schedule — bursts, deadline storms, cancel storms, page-pressure spikes —
+# through a fresh engine and assert the resilience invariants: every rid
+# reaches a typed terminal status (no leaks, no hangs), every SURVIVING
+# request is bit-identical to solo serving, every terminated request's
+# partial tokens are an exact solo prefix, and the pool (slots AND pages)
+# recovers fully.
+# ---------------------------------------------------------------------------
+
+from repro.fed.faults import FaultPlan                           # noqa: E402
+from repro.fed.scenarios import engine_chaos_schedule            # noqa: E402
+from repro.serve.engine import (DONE, PREEMPTED_RESUMED,         # noqa: E402
+                                TERMINAL_STATUSES, Outcome)
+
+#: chaos engine shapes: uniform, paged-lifetime, and paged-initial (the
+#: preempting mode). Page math stays inside max_seq=32 for spiked
+#: max_new=9: region next_pow2(6 + 12) = 32 → ≤ 8 pages of 4.
+CHAOS_ECFGS = [
+    EngineConfig(slots=2, max_seq=MAX_SEQ, chunk=4),
+    EngineConfig(slots=2, max_seq=MAX_SEQ, chunk=4, page_size=4, pages=8),
+    EngineConfig(slots=3, max_seq=MAX_SEQ, chunk=4, page_size=4, pages=8,
+                 reserve="initial"),
+]
+
+
+def _chaos_plan(seed: int) -> FaultPlan:
+    return FaultPlan(seed=seed, burst_rate=0.3, burst_max=2, storm_rate=0.4,
+                     storm_len=3, storm_deadline=3, cancel_rate=0.3,
+                     spike_rate=0.25, spike_scale=3)
+
+
+def _check_chaos(pm, plan: FaultPlan, ecfg: EngineConfig, ticks: int = 8):
+    events = engine_chaos_schedule(plan, ticks=ticks, prompt_lens=(2, 6),
+                                   max_new=3, vocab=TINY.vocab)
+    by_tick = {}
+    for e in events:
+        by_tick.setdefault(e["tick"], []).append(e)
+    eng = ServeEngine([pm], ecfg)
+    meta, cancel_at, out = {}, {}, {}
+    t, max_tick = 0, max(by_tick)
+    while t <= max_tick or eng.busy:
+        for e in by_tick.get(t, ()):
+            rid = eng.submit(0, e["toks"], e["max_new"],
+                             deadline=e["deadline"])
+            meta[rid] = (e["toks"], e["max_new"])
+            if e["cancel_after"] is not None:
+                cancel_at.setdefault(t + e["cancel_after"], []).append(rid)
+        for rid in cancel_at.pop(t, ()):
+            eng.cancel(rid)          # terminal rids: deterministic no-op
+        out.update(eng.step())
+        t += 1
+    out.update(eng.drain())
+
+    # every submitted rid reached exactly one typed terminal — no leaks
+    assert sorted(out) == sorted(meta)
+    for rid, (toks, max_new) in meta.items():
+        status = eng.status(rid)
+        assert status in TERMINAL_STATUSES
+        payload = out[rid]
+        if isinstance(payload, Outcome):
+            assert payload.status == status
+            if payload.tokens is not None:   # terminated mid-decode:
+                np.testing.assert_array_equal(  # an exact solo prefix
+                    payload.tokens,
+                    _solo(pm, toks, max_new)[:len(payload.tokens)])
+        else:                                # survivor: bit-identical,
+            assert status in (DONE, PREEMPTED_RESUMED)  # even if preempted
+            np.testing.assert_array_equal(payload,
+                                          _solo(pm, toks, max_new))
+
+    # the pool recovers: slots, pages, carry all back to the initial state
+    lane = eng._lanes[0]
+    assert sorted(lane.free) == list(range(ecfg.slots))
+    assert not lane.active and not lane.queue
+    if ecfg.page_size:
+        assert sorted(lane.pt.free) == \
+            list(range(1, ecfg.resolved_pages + 1)), "page leak under chaos"
+        assert not lane.pt._held and (lane.pt.table == 0).all()
+    assert not eng.busy and not eng._events
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+@pytest.mark.parametrize("shape", range(len(CHAOS_ECFGS)))
+def test_chaos_schedules_recover_and_survivors_match_solo(pm, seed, shape):
+    _check_chaos(pm, _chaos_plan(seed), CHAOS_ECFGS[shape])
+
+
+# ---------------------------------------------------------------------------
 # hypothesis-drawn schedules — same importorskip discipline as
 # test_properties.py, but scoped to the hypothesis tests only so the
 # fixed-seed drivers above still run in hypothesis-less containers
@@ -179,7 +267,23 @@ if st is not None:
     def test_schedule_property(pm, spec):
         ecfg, reqs, gaps = spec
         _check_schedule(pm, ecfg, reqs, gaps)
+
+    @given(seed=st.integers(0, 2 ** 16), shape=st.integers(0, 2),
+           storm_rate=st.sampled_from([0.0, 0.4, 1.0]),
+           cancel_rate=st.sampled_from([0.0, 0.3, 0.8]))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_chaos_property(pm, seed, shape, storm_rate, cancel_rate):
+        plan = FaultPlan(seed=seed, burst_rate=0.3, burst_max=2,
+                         storm_rate=storm_rate, storm_len=3,
+                         storm_deadline=3, cancel_rate=cancel_rate,
+                         spike_rate=0.25, spike_scale=3)
+        _check_chaos(pm, plan, CHAOS_ECFGS[shape])
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_schedule_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_chaos_property():
         pass

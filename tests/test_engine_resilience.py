@@ -1,0 +1,517 @@
+"""Serve-engine resilience (ISSUE 8 acceptance suite): deadlines,
+cancellation, paged-pool preemption with bit-identical recompute-on-resume,
+load shedding, typed terminal statuses, the PageTable release/grow guards,
+the gateway's expiry-as-backend-failure accounting, and the FedLoop
+checkpoint guard with preempted requests in flight — all with ZERO decode
+retraces (TRACE_LOG-pinned)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import FedConfig, ModelConfig, RouterConfig
+from repro.fed.faults import FaultPlan
+from repro.fed.harvest import HarvestStore
+from repro.fed.loop import FedLoop, FedLoopConfig
+from repro.fed.scenarios import engine_chaos_schedule
+from repro.serve import gateway
+from repro.serve.engine import (CANCELLED, DONE, EXPIRED, PREEMPTED_RESUMED,
+                                SHED, TERMINAL_STATUSES, EngineConfig,
+                                Outcome, ServeEngine)
+from repro.serve.gateway import PoolModel, RoutedServer
+from repro.serve.kv_cache import PageTable
+
+TINY = ModelConfig(name="tiny-dense-resil", arch_type="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                   head_dim=16)
+#: oversubscribed initial-reservation shape used across the preemption
+#: tests: 3 slots but only 8 pages of 4 — two long requests already
+#: exceed the pool mid-decode, so growth must preempt.
+PREEMPT_ECFG = EngineConfig(slots=3, max_seq=32, chunk=4, page_size=4,
+                            pages=8, reserve="initial")
+
+
+@pytest.fixture(scope="module")
+def pm():
+    from repro.models import init_params
+    return PoolModel("tiny", TINY, init_params(jax.random.PRNGKey(0), TINY),
+                     0.1)
+
+
+_solo_cache = {}
+
+
+def _solo(pm, toks, max_new):
+    key = (np.asarray(toks).tobytes(), max_new)
+    if key not in _solo_cache:
+        _solo_cache[key] = RoutedServer._serve_batch(
+            pm, np.asarray(toks)[None], max_new)[0]
+    return _solo_cache[key]
+
+
+def _toks(seed, n):
+    return np.random.default_rng(seed).integers(
+        1, TINY.vocab, size=n).astype(np.int32)
+
+
+def _assert_pool_recovered(eng):
+    """Slots, pages, queue, and carry all back to the initial state."""
+    for lane in eng._lanes.values():
+        assert sorted(lane.free) == list(range(eng.ecfg.slots))
+        assert not lane.active and not lane.queue
+        assert (lane.tok == 0).all() and (lane.pos == 0).all()
+        if lane.paged:
+            assert sorted(lane.pt.free) == \
+                list(range(1, eng.ecfg.resolved_pages + 1))
+            assert not lane.pt._held and (lane.pt.table == 0).all()
+    assert not eng.busy and not eng._events
+
+
+# ----------------------------------------- satellite: PageTable guards
+
+
+def test_pagetable_release_double_release_is_deterministic_noop():
+    pt = PageTable(slots=2, pages=4, page_size=4, max_seq=32)
+    pt.alloc(0, 3)
+    assert pt.available == 1
+    assert pt.release(0) is True
+    assert pt.available == 4
+    # double release: deterministic no-op, the free list is NOT corrupted
+    assert pt.release(0) is False
+    assert pt.release(0) is False
+    assert sorted(pt.free) == [1, 2, 3, 4]
+    # a slot that never held pages is the same no-op...
+    assert pt.release(1) is False
+    # ...but an out-of-table slot index is a caller bug and raises
+    with pytest.raises(IndexError, match="outside the page table"):
+        pt.release(7)
+
+
+def test_pagetable_grow_guards():
+    pt = PageTable(slots=2, pages=4, page_size=4, max_seq=16)  # width 4
+    with pytest.raises(RuntimeError, match="holds no pages"):
+        pt.grow(0, 1)
+    pages = list(pt.alloc(0, 2))
+    pages += list(pt.grow(0, 2))
+    assert len(set(pages)) == 4 and pt.available == 0
+    assert (pt.table[0] == pages).all()
+    with pytest.raises(RuntimeError, match="wide"):
+        pt.grow(0, 1)                       # past the static table width
+    pt2 = PageTable(slots=2, pages=2, page_size=4, max_seq=32)
+    pt2.alloc(0, 2)
+    pt2._held[1] = []                       # simulate an admitted-empty row
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pt2.grow(0, 1)
+
+
+# --------------------------------------------- cancellation & deadlines
+
+
+def test_cancel_queued_and_active(pm):
+    eng = ServeEngine([pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                         page_size=8))
+    t_a, t_b = _toks(0, 5), _toks(1, 4)
+    ra = eng.submit(0, t_a, 12)
+    rb = eng.submit(0, t_b, 4)              # waits: one slot
+    eng.step()
+    assert eng.status(ra) == "ACTIVE" and eng.status(rb) == "QUEUED"
+    # cancel the queued request: nothing was generated
+    assert eng.cancel(rb) == CANCELLED
+    # cancel the active one mid-flight: partial tokens are a solo prefix
+    assert eng.cancel(ra) == CANCELLED
+    out = eng.drain()
+    assert isinstance(out[ra], Outcome) and out[ra].status == CANCELLED
+    assert out[rb].tokens is None
+    np.testing.assert_array_equal(out[ra].tokens,
+                                  _solo(pm, t_a, 12)[:len(out[ra].tokens)])
+    assert eng.cancels == 2
+    # cancelling a terminal rid is a no-op returning its status
+    assert eng.cancel(ra) == CANCELLED
+    with pytest.raises(KeyError, match="unknown request id"):
+        eng.cancel(10 ** 9)
+    _assert_pool_recovered(eng)
+
+
+def test_deadline_expiry_releases_and_surfaces_partial_tokens(pm):
+    eng = ServeEngine([pm], EngineConfig(slots=2, max_seq=32, chunk=4,
+                                         page_size=8))
+    t = _toks(2, 5)
+    r_exp = eng.submit(0, t, 16, deadline=2)
+    r_ok = eng.submit(0, _toks(3, 4), 16)
+    eng.step()
+    eng.step()
+    finished = dict(eng.step())             # the expiry surfaces here
+    assert isinstance(finished[r_exp], Outcome)
+    assert finished[r_exp].status == EXPIRED
+    # deadline=2 ⇒ two steps of progress ⇒ 2 chunks of partial tokens,
+    # still a bit-exact solo prefix
+    np.testing.assert_array_equal(finished[r_exp].tokens,
+                                  _solo(pm, t, 16)[:8])
+    assert eng.expiries == 1
+    assert eng.status(r_exp) == EXPIRED
+    out = eng.drain()
+    assert out[r_ok].shape == (16,)         # the undeadlined one completes
+    _assert_pool_recovered(eng)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(0, t, 4, deadline=0)
+
+
+def test_queued_request_expires_without_ever_admitting(pm):
+    eng = ServeEngine([pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                         page_size=8))
+    ra = eng.submit(0, _toks(4, 4), 12)
+    rb = eng.submit(0, _toks(5, 4), 4, deadline=1)   # starves in queue
+    out = eng.drain()
+    assert out[rb].status == EXPIRED and out[rb].tokens is None
+    assert out[ra].shape == (12,)
+    _assert_pool_recovered(eng)
+
+
+def test_drain_rids_returns_typed_terminal_instead_of_raising(pm):
+    """Satellite: drain(rids=...) on a cancelled/expired/shed rid returns
+    its typed record — no hang, no KeyError; only never-seen rids raise."""
+    eng = ServeEngine([pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                         page_size=8, queue_cap=1))
+    ra = eng.submit(0, _toks(6, 4), 12)
+    eng.step()                              # ra takes the slot
+    rb = eng.submit(0, _toks(7, 4), 12, deadline=1)
+    rc = eng.submit(0, _toks(8, 4), 4)      # queue full (cap 1) → shed
+    assert eng.status(rc) == SHED
+    eng.cancel(ra)
+    got = eng.drain([ra, rb, rc])
+    assert got[ra].status == CANCELLED
+    assert got[rb].status == EXPIRED
+    assert got[rc].status == SHED
+    # the engine is idle and the rids are terminal: drain again still
+    # resolves them (typed, from the status map) instead of KeyError-ing
+    again = eng.drain([rc])
+    assert again[rc].status == SHED
+    with pytest.raises(KeyError, match="unknown request ids"):
+        eng.drain([10 ** 9])
+    _assert_pool_recovered(eng)
+
+
+# ------------------------------------------------------- load shedding
+
+
+def test_shed_reject_newest(pm):
+    eng = ServeEngine([pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                         page_size=8, queue_cap=2))
+    rids = [eng.submit(0, _toks(9 + i, 4), 4) for i in range(4)]
+    # slot empty until step: 1st queues... cap 2 → 3rd and 4th shed
+    assert eng.status(rids[0]) == "QUEUED"
+    assert [eng.status(r) for r in rids[2:]] == [SHED, SHED]
+    assert eng.sheds == 2
+    out = eng.drain()
+    assert out[rids[0]].shape == (4,)
+    assert isinstance(out[rids[2]], Outcome)
+    _assert_pool_recovered(eng)
+
+
+def test_shed_reject_latest_deadline_displaces_queued_victim(pm):
+    eng = ServeEngine([pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                         page_size=8, queue_cap=1,
+                                         shed_policy="reject-latest-deadline"))
+    r_active = eng.submit(0, _toks(20, 4), 12)
+    eng.step()                              # r_active takes the slot
+    assert eng.status(r_active) == "ACTIVE"
+    r_loose = eng.submit(0, _toks(21, 4), 4, deadline=50)
+    # queue is full with the loose-deadline request; a tighter-deadline
+    # arrival displaces it (the queued one sheds, not the incoming)
+    r_tight = eng.submit(0, _toks(22, 4), 4, deadline=30)
+    assert eng.status(r_loose) == SHED
+    assert eng.status(r_tight) == "QUEUED"
+    # an arrival with the LATEST deadline of all sheds itself
+    r_latest = eng.submit(0, _toks(23, 4), 4, deadline=99)
+    assert eng.status(r_latest) == SHED
+    # deadline-less counts as latest of all
+    r_none = eng.submit(0, _toks(24, 4), 4)
+    assert eng.status(r_none) == SHED
+    assert eng.sheds == 3
+    out = eng.drain()
+    assert out[r_tight].shape == (4,)
+    _assert_pool_recovered(eng)
+
+
+def test_lane_quotas_isolate_models(pm):
+    """A per-model quota sheds the hot lane's excess while the other lane
+    keeps queueing — one overloaded model cannot starve the rest."""
+    eng = ServeEngine([pm, pm], EngineConfig(slots=1, max_seq=32, chunk=4,
+                                             page_size=8,
+                                             lane_quotas=((0, 1),)))
+    r0 = [eng.submit(0, _toks(30 + i, 4), 4) for i in range(3)]
+    r1 = [eng.submit(1, _toks(40 + i, 4), 4) for i in range(3)]
+    assert [eng.status(r) for r in r0[1:]] == [SHED, SHED]  # lane 0 capped
+    assert all(eng.status(r) == "QUEUED" for r in r1)       # lane 1 free
+    out = eng.drain()
+    assert all(out[r].shape == (4,) for r in r1)
+    assert eng.counters()["sheds"] == 2
+
+
+# ------------------------------------- preemption + recompute-on-resume
+
+
+def _preempt_schedule(eng):
+    """Three page-hungry requests through the oversubscribed initial-
+    reservation pool (PREEMPT_ECFG): growth pressure forces preemption."""
+    reqs = [(_toks(50 + i, 5 + i), 12) for i in range(3)]
+    rids = [eng.submit(0, t, m) for t, m in reqs]
+    return reqs, rids, eng.drain()
+
+
+def test_preempted_request_resumes_bit_identical(pm):
+    """THE acceptance property: a preempted-then-resumed request's final
+    tokens are exactly its never-preempted solo twin's, and its terminal
+    status says it survived preemption."""
+    eng = ServeEngine([pm], PREEMPT_ECFG)
+    reqs, rids, out = _preempt_schedule(eng)
+    assert eng.preemptions > 0, "schedule failed to force a preemption"
+    assert eng.resume_recompute_toks > 0
+    resumed = 0
+    for rid, (t, m) in zip(rids, reqs):
+        np.testing.assert_array_equal(out[rid], _solo(pm, t, m))
+        if eng.status(rid) == PREEMPTED_RESUMED:
+            resumed += 1
+        else:
+            assert eng.status(rid) == DONE
+    assert resumed > 0
+    _assert_pool_recovered(eng)
+
+
+def test_admission_preemption_needs_strictly_later_deadline_victim(pm):
+    """Admission-time preemption only displaces a victim whose deadline is
+    STRICTLY later than the queue head's — deadline-less traffic keeps the
+    seed engine's FIFO wait-for-pages behavior."""
+    ecfg = EngineConfig(slots=2, max_seq=32, chunk=4, page_size=4,
+                        pages=6, reserve="initial")
+    eng = ServeEngine([pm], ecfg)
+    t_bg = _toks(60, 12)                    # bucket 16 → 4 initial pages
+    r_bg = eng.submit(0, t_bg, 8)           # no deadline → never a victim
+    eng.step()                              # of a deadline-less head
+    r_head = eng.submit(0, _toks(61, 12), 8)
+    eng.step()
+    # head can't get 4 pages, and the active request's deadline (None) is
+    # not strictly later than the head's (None): nobody preempted
+    assert eng.preemptions == 0
+    assert eng.status(r_head) == "QUEUED"
+    out = eng.drain()
+    assert out[r_bg].shape == (8,) and out[r_head].shape == (8,)
+
+    # same shape, but now the background request HAS a late deadline and
+    # the head a tight one: admission preempts the victim
+    eng2 = ServeEngine([pm], ecfg)
+    r_bg2 = eng2.submit(0, t_bg, 8, deadline=200)
+    eng2.step()
+    r_head2 = eng2.submit(0, _toks(62, 12), 8, deadline=40)
+    eng2.step()
+    assert eng2.preemptions >= 1
+    assert eng2.status(r_bg2) in ("PREEMPTED", "ACTIVE", PREEMPTED_RESUMED)
+    out2 = eng2.drain()
+    np.testing.assert_array_equal(out2[r_bg2], _solo(pm, t_bg, 8))
+    np.testing.assert_array_equal(out2[r_head2],
+                                  _solo(pm, _toks(62, 12), 8))
+    _assert_pool_recovered(eng2)
+
+
+def test_zero_decode_retraces_across_cancel_preempt_expiry(pm):
+    """Acceptance: cancellation, preemption, and expiry are host-side
+    bookkeeping — an identical warm replay of a schedule exercising all
+    three adds ZERO TRACE_LOG entries."""
+    def schedule():
+        eng = ServeEngine([pm], PREEMPT_ECFG)
+        reqs = [(_toks(70 + i, 5 + i), 12) for i in range(3)]
+        rids = [eng.submit(0, t, m) for t, m in reqs]
+        r_dead = eng.submit(0, _toks(75, 4), 16, deadline=3)
+        eng.step()
+        eng.cancel(rids[1])
+        out = eng.drain()
+        assert eng.preemptions > 0 and eng.expiries > 0
+        return {r: out[r] for r in (rids[0], rids[2])}, out[r_dead].status
+
+    first = schedule()                      # warm every program
+    gateway.reset_trace_log()
+    n0 = len(gateway.TRACE_LOG)
+    second = schedule()                     # identical replay
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"resilience path retraced: {list(gateway.TRACE_LOG)[n0:]}"
+    assert second[1] == EXPIRED
+    for (a, b) in zip(first[0].values(), second[0].values()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_reserve_initial_validation():
+    with pytest.raises(ValueError, match="paged-pool feature"):
+        ServeEngine([], EngineConfig(page_size=None, reserve="initial"))
+    with pytest.raises(ValueError, match="reserve"):
+        ServeEngine([], EngineConfig(reserve="eager"))
+    with pytest.raises(ValueError, match="shed_policy"):
+        ServeEngine([], EngineConfig(shed_policy="drop-all"))
+
+
+# ------------------------------------------------- gateway integration
+
+
+D_EMB = 8
+
+
+def _routed(engine_cfg, clients=1):
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    pool = [PoolModel("m0", TINY, params, 0.1)]
+    rcfg = RouterConfig(d_emb=D_EMB, num_models=1, hidden=(16,),
+                        dropout=0.0)
+    router = routers.make("mlp", rcfg).init(jax.random.PRNGKey(1))
+    harvest = HarvestStore(D_EMB, capacity=32, clients=range(clients))
+    return RoutedServer(pool, router, harvest=harvest,
+                        engine_cfg=engine_cfg)
+
+
+def test_gateway_expiry_counts_as_backend_failure_for_harvest():
+    """Tentpole (a): an EXPIRED request is a backend failure for harvest
+    purposes — a zero-score outcome lands against the routed model and the
+    failure counters bump, so the FedLoop learns an overloaded backend
+    exactly like a crashed one."""
+    srv = _routed(EngineConfig(slots=2, max_seq=32, chunk=4, page_size=8))
+    x = np.zeros(D_EMB, np.float32)
+    rid = srv.submit("three word prompt", max_new_tokens=16, client_id=0,
+                     x=x, deadline=1)
+    out = srv.drain()
+    assert out[rid].status == EXPIRED
+    assert srv.expiry_failures == 1 and srv.backend_failures == 1
+    data = srv.harvest.buffer(0).as_client_data()
+    assert float(data["w"].sum()) == 1
+    assert float(data["acc"][0]) == 0.0     # the zero-score outcome
+    with pytest.raises(ValueError, match="EXPIRED past its deadline"):
+        srv.report_outcome(rid, 1.0)
+    # draining again is idempotent — no double-count
+    srv.step()
+    assert srv.expiry_failures == 1
+
+
+def test_gateway_cancel_and_shed_drop_pending_evals():
+    srv = _routed(EngineConfig(slots=1, max_seq=32, chunk=4, page_size=8,
+                               queue_cap=1))
+    x = np.zeros(D_EMB, np.float32)
+    r0 = srv.submit("aa bb cc", max_new_tokens=8, client_id=0, x=x)
+    srv.step()                              # r0 takes the single slot
+    r1 = srv.submit("dd ee", max_new_tokens=8, client_id=0, x=x)
+    r2 = srv.submit("ff gg hh ii", max_new_tokens=8, client_id=0, x=x)
+    assert srv.status(r2) == SHED           # never harvest-registered
+    with pytest.raises(ValueError, match="cancelled or shed"):
+        srv.routed_model(r2)
+    assert srv.cancel(r1) == CANCELLED
+    with pytest.raises(ValueError, match="cancelled or shed"):
+        srv.report_outcome(r1, 1.0)
+    out = srv.drain()
+    assert out[r0].shape == (8,)
+    srv.report_outcome(r0, 1.0)             # the survivor still reports
+    assert len(srv.harvest) == 1
+    assert srv.backend_failures == 0        # cancels/sheds aren't failures
+
+
+# --------------------------------- FedLoop: counters + checkpoint guard
+
+
+def _loop(engine_cfg):
+    srv = _routed(engine_cfg, clients=2)
+    fcfg = FedConfig(num_clients=2, participation=1.0, batch_size=8,
+                     lr=3e-3)
+    cfg = FedLoopConfig(sync_every=10 ** 9, rounds_per_sync=2,
+                        min_samples=1)
+    return srv, FedLoop(srv, fcfg, key=jax.random.PRNGKey(7), cfg=cfg)
+
+
+def test_save_with_preempted_or_queued_requests_raises_idle_guard(tmp_path):
+    """Satellite: the pinned contract is the idle-engine guard — save()
+    with preempted/queued requests in flight raises with a message that
+    names them as in-flight (their decode state is recomputable but their
+    queue entries are not checkpointed)."""
+    srv, loop = _loop(PREEMPT_ECFG)
+    x = np.zeros(D_EMB, np.float32)
+    for i in range(3):
+        srv.submit(f"prompt number {i} padded out", max_new_tokens=12,
+                   client_id=i % 2, x=x)
+    while srv.engine.preemptions == 0 and srv.engine.busy:
+        loop.step()
+    assert srv.engine.preemptions > 0       # a resume is pending/queued
+    assert srv.engine.busy
+    with pytest.raises(ValueError, match="preempted-awaiting-resume"):
+        loop.save(tmp_path / "ck.msgpack")
+    loop.drain()                            # idle again → save succeeds
+    loop.save(tmp_path / "ck.msgpack")
+
+
+def test_engine_counters_threaded_into_fedloop_history():
+    srv, loop = _loop(EngineConfig(slots=2, max_seq=32, chunk=4,
+                                   page_size=8, queue_cap=1))
+    x = np.zeros(D_EMB, np.float32)
+    rids = [srv.submit(f"query {i} words here", max_new_tokens=4,
+                       client_id=i % 2, x=x) for i in range(4)]
+    sheds = srv.engine.sheds
+    assert sheds > 0                        # cap 1 forced shedding
+    for r in rids:
+        if srv.engine.status(r) != SHED:
+            srv.report_outcome(r, 1.0, 0.1)
+    loop.drain()
+    loop.sync()
+    eng_hist = loop.history[-1]["engine"]
+    assert eng_hist["sheds"] == sheds
+    assert set(eng_hist) >= {"sheds", "preemptions", "expiries", "cancels",
+                             "resume_recompute_toks", "queue_depth_hw",
+                             "peak_active"}
+
+
+# ------------------------------------------- seeded chaos determinism
+
+
+def test_faultplan_engine_draws_are_pure_and_seeded():
+    plan = FaultPlan(seed=3, burst_rate=0.3, burst_max=5, storm_rate=0.4,
+                     storm_len=4, storm_deadline=6, cancel_rate=0.3,
+                     spike_rate=0.2, spike_scale=3)
+    a = [(plan.burst_size(t), plan.deadline_storm(t), plan.page_spike(t))
+         for t in range(50)]
+    b = [(plan.burst_size(t), plan.deadline_storm(t), plan.page_spike(t))
+         for t in range(50)]
+    assert a == b                           # pure functions of (seed, tags)
+    assert any(x[0] == 5 for x in a) and any(x[1] for x in a)
+    assert any(x[2] == 3 for x in a)
+    other = FaultPlan(seed=4, burst_rate=0.3, burst_max=5, storm_rate=0.4,
+                      storm_len=4, storm_deadline=6, cancel_rate=0.3,
+                      spike_rate=0.2, spike_scale=3)
+    assert [(other.burst_size(t), other.deadline_storm(t))
+            for t in range(50)] != [(x[0], x[1]) for x in a]
+    # storm windows are contiguous storm_len blocks
+    storms = [plan.deadline_storm(t) for t in range(40)]
+    for w in range(0, 40, 4):
+        assert len(set(storms[w:w + 4])) == 1
+    # cancel fates: deterministic per rid, horizon respected
+    fated = [r for r in range(64) if plan.cancels_request(r)]
+    assert fated and all(1 <= plan.cancel_after(r, 12) <= 12 for r in fated)
+    # the zero plan injects nothing
+    zero = FaultPlan(seed=3)
+    assert all(zero.burst_size(t) == 0 and not zero.deadline_storm(t)
+               and zero.page_spike(t) == 1 for t in range(20))
+    assert not any(zero.cancels_request(r) for r in range(64))
+
+
+def test_engine_chaos_schedule_deterministic_and_well_formed():
+    plan = FaultPlan(seed=1, burst_rate=0.25, burst_max=3, storm_rate=0.3,
+                     storm_len=4, storm_deadline=5, cancel_rate=0.25,
+                     spike_rate=0.2, spike_scale=2)
+    ev_a = engine_chaos_schedule(plan, ticks=12, max_new=3, vocab=TINY.vocab)
+    ev_b = engine_chaos_schedule(plan, ticks=12, max_new=3, vocab=TINY.vocab)
+    assert len(ev_a) == len(ev_b) >= 12
+    for a, b in zip(ev_a, ev_b):
+        assert a["tick"] == b["tick"] and a["max_new"] == b["max_new"]
+        assert a["deadline"] == b["deadline"]
+        assert a["cancel_after"] == b["cancel_after"]
+        np.testing.assert_array_equal(a["toks"], b["toks"])
+    assert any(e["deadline"] == 5 for e in ev_a)          # storm arrivals
+    assert any(e["cancel_after"] is not None for e in ev_a)
+    assert any(e["max_new"] == 6 for e in ev_a)           # spike ticks
+
+
+def test_terminal_status_vocabulary():
+    assert TERMINAL_STATUSES == (DONE, PREEMPTED_RESUMED, EXPIRED,
+                                 CANCELLED, SHED)
+    assert PREEMPTED_RESUMED == "PREEMPTED-resumed"
