@@ -712,6 +712,189 @@ def bench_preempt(smoke: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# spec: speculative multi-token decode (router-paired drafting) vs plain
+# chunked decode on the same traffic
+# ---------------------------------------------------------------------------
+
+
+def _layer_skip_pair(key, cfg, skip_to):
+    """A (target params, draft cfg, draft params) triple where the draft
+    is the target's own first ``skip_to`` layers (shared embedding,
+    unembedding and final norm — a LayerSkip-style self-drafter). The
+    target's upper layers have their residual write-backs (attention
+    ``wo``, SwiGLU ``wd``) zeroed, so its hidden state after N layers is
+    bit-identical to the draft's after ``skip_to`` — greedy argmax agrees
+    exactly and the drafter's acceptance rate is 1.0 by construction.
+    This isolates the speculative pipeline's speedup at a *known*
+    acceptance instead of entangling it with model quality."""
+    import dataclasses
+    from repro.models import init_params
+
+    params = init_params(key, cfg)
+    blocks = params["blocks"]
+    u = skip_to
+    blocks = dict(blocks)
+    for lname in blocks:
+        lp = dict(blocks[lname])
+        mixer = dict(lp["mixer"])
+        mixer["wo"] = mixer["wo"].at[u:].set(0.0)
+        lp["mixer"] = mixer
+        ffn = dict(lp["ffn"])
+        ffn["wd"] = ffn["wd"].at[u:].set(0.0)
+        lp["ffn"] = ffn
+        blocks[lname] = lp
+    params["blocks"] = blocks
+    dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-skip{u}", n_layers=u)
+    dparams = {"embed": params["embed"], "final_norm": params["final_norm"],
+               "blocks": jax.tree.map(lambda a: a[:u], params["blocks"])}
+    return params, dcfg, dparams
+
+
+def _run_spec_traffic(srv, reqs, max_new, draft_model=None):
+    """`_run_engine_traffic` plus result capture: returns
+    (tokens/sec, {prompt: np tokens}) so spec cells can be checked
+    bit-identical against the non-speculative baseline."""
+    import time
+    pending = sorted(reqs, key=lambda r: r["arrival"])
+    kw = {} if draft_model is None else {"draft_model": draft_model}
+    prompt_of, completion = {}, {}
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(pending) or srv.engine.busy:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i]["arrival"] <= now:
+            rid = srv.submit(pending[i]["prompt"], lam=pending[i]["lam"],
+                             max_new_tokens=max_new, **kw)
+            prompt_of[rid] = pending[i]["prompt"]
+            i += 1
+        if srv.engine.busy:
+            for rid, _ in srv.step():
+                completion[rid] = time.perf_counter() - t0
+        elif i < len(pending):
+            time.sleep(min(pending[i]["arrival"] - now, 1e-3))
+    makespan = max(completion.values())
+    out = srv.drain()
+    toks = {prompt_of[r]: np.asarray(v) for r, v in out.items()}
+    return len(reqs) * max_new / makespan, toks
+
+
+def bench_spec(smoke: bool) -> None:
+    """Speculative multi-token decode vs the plain chunked engine on the
+    same Poisson trace. The pool holds the target, a LayerSkip-style
+    self-drafter (first layer of the target — acceptance 1.0 by
+    construction, see `_layer_skip_pair`), and a cheaper-but-useless tiny
+    drafter (independent weights — acceptance ~1/vocab). The ``router``
+    cells let the gateway pick the drafter by router utility A − λC,
+    which ranks the layer-skip drafter above the tiny one despite its
+    higher cost; the ``tiny`` cell forces the bad drafter via
+    ``draft_model=`` to show the acceptance-rate dependence. Acceptance
+    (ci.yml enforces on the smoke JSON): best spec cell's tokens/sec
+    >= the non-spec baseline, every cell's tokens bit-identical to the
+    baseline's, and the measured replays add ZERO decode retraces."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import gateway as G
+    from repro.serve.engine import EngineConfig
+    from repro.serve.gateway import PoolModel, RoutedServer
+
+    # Deeper/wider than the other benches: the speculative win comes from
+    # verify batching T positions through weight-traversal-bound matmuls,
+    # so compute must dominate per-dispatch overhead.
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=2, d_ff=1024)
+    key = jax.random.PRNGKey(0)
+    params, dcfg, dparams = _layer_skip_pair(key, cfg, skip_to=1)
+    tiny_cfg = dataclasses.replace(cfg, name=f"{cfg.name}-tiny", n_layers=1)
+    tiny_params = init_params(jax.random.PRNGKey(99), tiny_cfg)
+
+    pool = [PoolModel(cfg.name, cfg, params, 1.0),
+            PoolModel(dcfg.name, dcfg, dparams, 0.25),
+            PoolModel(tiny_cfg.name, tiny_cfg, tiny_params, 0.05)]
+    # One cluster; A ranks target >> layer-skip >> tiny, so requests
+    # route to the target at every λ in the trace while `_pick_draft`
+    # (utility over the strictly-cheaper candidates) pairs it with the
+    # layer-skip drafter, not the cheapest one.
+    router = routers.make(
+        "kmeans", RouterConfig(d_emb=64, num_models=3),
+        state={"centroids": jnp.zeros((1, 64)),
+               "A": jnp.array([[0.9, 0.6, 0.05]]),
+               "C": jnp.array([[0.10, 0.025, 0.005]]),
+               "n": jnp.ones((1, 3))})
+
+    if smoke:
+        n_req, max_new, max_seq, rate, longtail = 8, 12, 64, 200.0, False
+        cells = [("router", 4)]
+    else:
+        n_req, max_new, max_seq, rate, longtail = 24, 32, 128, 50.0, True
+        cells = [("router", 2), ("router", 4), ("router", 6), ("tiny", 4)]
+    reqs = _make_traffic(0, n_req, rate_per_s=rate, longtail=longtail)
+
+    def mk(spec_k):
+        return RoutedServer(pool, router, engine_cfg=EngineConfig(
+            slots=4, max_seq=max_seq, chunk=4, spec_k=spec_k))
+
+    servers = {"base": mk(0)}
+    for drafter, k in cells:
+        servers[(drafter, k)] = mk(k)
+    # warm pass on the SAME servers: every (cfg, bucket) prefill, draft
+    # and verify program compiles off the books, so trace-log growth in
+    # the measured replays below is a genuine speculative-path retrace
+    for name, srv in servers.items():
+        dm = 2 if name != "base" and name[0] == "tiny" else None
+        _run_spec_traffic(srv, reqs, max_new, draft_model=dm)
+    trace0 = len(G.TRACE_LOG)
+
+    repeats = 2
+    base_tps, base_toks = max(
+        (_run_spec_traffic(servers["base"], reqs, max_new)
+         for _ in range(repeats)), key=lambda r: r[0])
+    parity, results = True, {}
+    for drafter, k in cells:
+        srv = servers[(drafter, k)]
+        dm = 2 if drafter == "tiny" else None
+        c0 = srv.engine.counters()
+        tps, toks = max(
+            (_run_spec_traffic(srv, reqs, max_new, draft_model=dm)
+             for _ in range(repeats)), key=lambda r: r[0])
+        c = {n: v - c0[n] for n, v in srv.engine.counters().items()}
+        cell_parity = all(np.array_equal(toks[p], base_toks[p])
+                          for p in base_toks)
+        parity &= cell_parity
+        acc = c["spec_accepted"] / max(c["spec_drafted"], 1)
+        results[f"{drafter}_k{k}"] = {
+            "tokens_per_s": round(tps, 1),
+            "speedup": round(tps / base_tps, 3),
+            "acceptance": round(acc, 3),
+            "spec_rounds": c["spec_rounds"],
+            "token_parity": bool(cell_parity),
+        }
+        C.emit(f"spec_{drafter}_k{k}_{n_req}req", 1e6 / tps,
+               f"spec_k={k}, drafter={drafter}: {tps:.0f} tok/s "
+               f"({tps / base_tps:.2f}x vs non-spec), acceptance "
+               f"{acc:.2f} over {c['spec_rounds']} rounds",
+               speedup_vs_baseline=tps / base_tps)
+    C.emit(f"spec_baseline_{n_req}req", 1e6 / base_tps,
+           f"non-speculative chunked engine: {base_tps:.0f} tok/s")
+    decode_retraces = len(G.TRACE_LOG) - trace0
+
+    best_name = max(results, key=lambda n: results[n]["speedup"])
+    drafter, k = best_name.rsplit("_k", 1)
+    C.write_bench(_bench_file("spec", smoke), meta={
+        "model": cfg.name, "draft": dcfg.name, "n_req": n_req,
+        "max_new": max_new, "slots": 4, "smoke": smoke,
+        "baseline_tokens_per_s": round(base_tps, 1),
+        "cells": results,
+        "best": {"spec_k": int(k), "drafter": drafter,
+                 "speedup": results[best_name]["speedup"],
+                 "acceptance": results[best_name]["acceptance"]},
+        "token_parity": bool(parity),
+        "decode_retraces": int(decode_retraces),
+    })
+
+
+# ---------------------------------------------------------------------------
 # fedloop: online federation (serve → harvest → federate → hot-swap) vs a
 # frozen client-local router under distribution drift
 # ---------------------------------------------------------------------------
@@ -1082,13 +1265,15 @@ def main() -> None:
     bench_engine(args.smoke)
     bench_paged(args.smoke)
     bench_preempt(args.smoke)
+    bench_spec(args.smoke)
     bench_fedloop(args.smoke)
     bench_routerbench(args.smoke)
     bench_resilience(args.smoke)
 
     for f in (_bench_file(s, args.smoke)
               for s in ("train", "route", "serve", "engine", "paged",
-                        "preempt", "fedloop", "routerbench", "resilience")):
+                        "preempt", "spec", "fedloop", "routerbench",
+                        "resilience")):
         blob = json.loads((C.REPO_ROOT / f).read_text())
         assert blob["records"], f"{f}: no records"
         assert all(np.isfinite(r["us_per_call"]) for r in blob["records"])

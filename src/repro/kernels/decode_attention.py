@@ -4,7 +4,11 @@ The §Perf H3 hot-spot: batched decode reads the whole (B,Hkv,S,hd) cache
 every step. ``decode_attention_pallas`` streams the cache through VMEM in
 seq blocks with online-softmax accumulation — the cache never materializes
 in f32 and never needs a layout transpose (head-major storage, matching
-models/attention.init_kv_cache). Grid (B, Hkv, nS); the innermost seq
+models/attention.init_kv_cache). Both kernels follow the jnp reference
+path's dtype discipline (``_masked_grouped_attn``): q·k dots in the cache
+dtype, probs downcast to the value dtype before the p·v dot, f32
+accumulators only — so scores and attention weights quantize identically
+to the reference and greedy argmax tokens agree on bf16 caches. Grid (B, Hkv, nS); the innermost seq
 dimension accumulates (m, l, acc) in VMEM scratch. A validity bound masks
 unwritten cache slots (positions ≥ n_valid); it may be per-batch — a (B,)
 vector — so a continuous-batching slot pool (serve/engine.py) can decode
@@ -46,9 +50,16 @@ def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
         l_s[...] = jnp.zeros_like(l_s)
         acc[...] = jnp.zeros_like(acc)
 
-    q = q_ref[0, 0].astype(jnp.float32)              # (g, hd)
-    k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
-    v = v_ref[0, 0].astype(jnp.float32)
+    # Dtype discipline mirrors models/attention._masked_grouped_attn: dot
+    # q·k in the CACHE dtype with f32 accumulation (never an f32 copy of
+    # the cache tile), and downcast probs to the value dtype before the
+    # p·v dot — so kernel and jnp scores/weights quantize identically and
+    # argmax token parity holds on bf16 caches (tests/test_kernels.py
+    # pins token equality; the online-softmax normalization order still
+    # differs, so values match to tolerance, not bitwise).
+    q = q_ref[0, 0].astype(k_ref.dtype)              # (g, hd)
+    k = k_ref[0, 0]                                  # (bs, hd)
+    v = v_ref[0, 0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     pos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -63,7 +74,7 @@ def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
     corr = jnp.exp(m_prev - m_new)
     l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
     acc[...] = acc[...] * corr + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32)
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
     m_s[...] = m_new
 
     @pl.when(ik == ns - 1)
@@ -133,9 +144,11 @@ def _paged_kernel(pt_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
         l_s[...] = jnp.zeros_like(l_s)
         acc[...] = jnp.zeros_like(acc)
 
-    q = q_ref[0, 0].astype(jnp.float32)              # (g, hd)
-    k = k_ref[0, 0].astype(jnp.float32)              # (ps, hd)
-    v = v_ref[0, 0].astype(jnp.float32)
+    # same dtype discipline as _kernel (and therefore as the jnp
+    # reference path): cache-dtype dots, f32 accumulation
+    q = q_ref[0, 0].astype(k_ref.dtype)              # (g, hd)
+    k = k_ref[0, 0]                                  # (ps, hd)
+    v = v_ref[0, 0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     pos = ip * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -147,7 +160,7 @@ def _paged_kernel(pt_ref, nv_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
     corr = jnp.exp(m_prev - m_new)
     l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
     acc[...] = acc[...] * corr + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32)
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
     m_s[...] = m_new
 
     @pl.when(ip == npg - 1)

@@ -212,9 +212,9 @@ def attn_decode_step(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         # rides this too. The guards keep odd extend_cache lengths (e.g.
         # S_bucket + max_new = 12: not sublane-aligned; 544: not a
         # multiple of the 512 seq block) on the jnp path — pool caches
-        # are pow2 and always qualify. Caveat (ROADMAP): the kernel
-        # upcasts k/v tiles to f32 while the jnp path dots in the cache
-        # dtype, so near-tie argmaxes could differ on bf16 on hardware.
+        # are pow2 and always qualify. The kernel shares this path's
+        # dtype discipline (cache-dtype dots, f32 accumulation), so
+        # greedy tokens agree on bf16 caches (tests/test_kernels.py).
         out = kops.decode_attention(qg, k_cache, v_cache, n_valid)
         out = out.astype(v_cache.dtype)
     else:
@@ -241,6 +241,31 @@ def _masked_grouped_attn(qg, k_cache, v_cache, valid):
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
                       preferred_element_type=jnp.float32).astype(v_cache.dtype)
+
+
+def _masked_grouped_attn_multi(qg, k_cache, v_cache, valid):
+    """Multi-position variant of ``_masked_grouped_attn`` for the
+    speculative verify step: T query positions per row, folded into the
+    query-group axis so the einsum strings — and therefore the per-row
+    contraction discipline the token-parity guarantee rests on — are
+    IDENTICAL to the single-token path (each folded query row is the same
+    dot over hd, masked softmax over K, and dot over K as a lone decode
+    query; only the causal bound varies per offset). qg:
+    (B, Hkv, T, g, hd); caches (B, Hkv, K, hd); valid: (B, T, K) bool
+    (query offset t attends keys below its own bound). Returns
+    (B, Hkv, T, g, hd) in the cache dtype."""
+    B, Hkv, T, g, hd = qg.shape
+    K = k_cache.shape[2]
+    qf = qg.reshape(B, Hkv, T * g, hd)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qf.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.broadcast_to(valid[:, None, :, None, :], (B, Hkv, T, g, K))
+    scores = jnp.where(mask.reshape(B, Hkv, T * g, K), scores,
+                       jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32).astype(v_cache.dtype)
+    return out.reshape(B, Hkv, T, g, hd)
 
 
 # ---------------------------------------------------------------------------
@@ -312,4 +337,87 @@ def attn_decode_step_paged(p: dict, x: jnp.ndarray, cache: dict,
         valid = jnp.arange(npg * ps)[None, :] < n_valid[:, None]
         out = _masked_grouped_attn(qg, k_g, v_g, valid)
     out = out.astype(v_cache.dtype).reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Speculative multi-position verify (serve/engine.py draft/verify rounds)
+# ---------------------------------------------------------------------------
+
+
+def attn_decode_verify(p: dict, x: jnp.ndarray, cache: dict,
+                       pos: jnp.ndarray, cfg: ModelConfig) -> tuple:
+    """Multi-position decode against the uniform slot pool: row b carries
+    T consecutive tokens at absolute positions pos_b .. pos_b+T-1 (the
+    last committed token plus the drafted window). x: (B, T, d); pos: (B,)
+    int32 base positions. All T K/V entries are written BEFORE attention
+    (write-ahead — the cache's validity convention is per-query causal
+    masking, so query offset t sees exactly positions < pos_b+t+1,
+    including the drafts written by this same dispatch), and the write is
+    a scatter with out-of-bounds DROP: near the region end the
+    write-ahead window may poke past the pool's seq extent, and those
+    positions are never committed — dropping them keeps in-bounds cache
+    contents intact where a clamped ``dynamic_update_slice`` would smear
+    over live positions. Rollback of a rejected suffix is pure host
+    bookkeeping (the engine resets ``pos``): stale drafted K/V above the
+    new position is masked by validity and overwritten — each later step
+    writes a position before any query's bound reaches it. Returns
+    (out (B, T, d), new_cache)."""
+    B, T, _ = x.shape
+    W = cache["k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)   # (B, T, Hkv, hd)
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k_cache = cache["k"].at[b_idx, :, positions].set(
+        k_new.astype(cache["k"].dtype), mode="drop")
+    v_cache = cache["v"].at[b_idx, :, positions].set(
+        v_new.astype(cache["v"].dtype), mode="drop")
+    k_cache = constrain(k_cache, ("batch", None, "kv_seq", None))
+    v_cache = constrain(v_cache, ("batch", None, "kv_seq", None))
+    valid = jnp.arange(W)[None, None, :] < (positions + 1)[:, :, None]
+
+    Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
+    qg = jnp.moveaxis(q.reshape(B, T, Hkv, g, hd), 1, 2)  # (B, Hkv, T, g, hd)
+    out = _masked_grouped_attn_multi(qg, k_cache, v_cache, valid)
+    out = jnp.moveaxis(out, 2, 1).reshape(B, T, cfg.n_heads * hd)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def attn_decode_verify_paged(p: dict, x: jnp.ndarray, cache: dict,
+                             page_table: jnp.ndarray, pos: jnp.ndarray,
+                             cfg: ModelConfig) -> tuple:
+    """Multi-position decode against the paged pool — the paged twin of
+    ``attn_decode_verify``. x: (B, T, d); page_table: (B, npg) int32;
+    pos: (B,) int32 base positions. Write-ahead targets each position's
+    own page; positions past the table's logical extent — and positions
+    whose page was never claimed (table entry 0) — scatter into the trash
+    page by the serve/kv_cache convention, so speculative overflow can
+    never corrupt a live page. Attention gathers the pages and reuses the
+    single-token path's exact einsum discipline (dot in the cache dtype,
+    f32 accumulation) with a per-offset causal bound. Returns
+    (out (B, T, d), new_cache)."""
+    from repro.kernels.ref import paged_gather_ref
+    B, T, _ = x.shape
+    ps = cache["k"].shape[2]
+    npg = page_table.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)   # (B, T, Hkv, hd)
+    in_bounds = positions < npg * ps
+    blk = jnp.minimum(positions // ps, npg - 1)
+    pages = jnp.take_along_axis(page_table, blk, axis=1)   # (B, T)
+    pages = jnp.where(in_bounds, pages, 0)                 # overflow → trash
+    off = positions % ps
+    k_cache = cache["k"].at[pages, :, off].set(k_new.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[pages, :, off].set(v_new.astype(cache["v"].dtype))
+
+    Hkv, hd, g = cfg.n_kv_heads, cfg.head_dim, cfg.q_per_kv
+    qg = jnp.moveaxis(q.reshape(B, T, Hkv, g, hd), 1, 2)  # (B, Hkv, T, g, hd)
+    k_g = paged_gather_ref(k_cache, page_table)           # (B, Hkv, npg*ps, hd)
+    v_g = paged_gather_ref(v_cache, page_table)
+    valid = (jnp.arange(npg * ps)[None, None, :]
+             < jnp.minimum(positions + 1, npg * ps)[:, :, None])
+    out = _masked_grouped_attn_multi(qg, k_g, v_g, valid)
+    out = jnp.moveaxis(out, 2, 1).reshape(B, T, cfg.n_heads * hd)
     return out @ p["wo"], {"k": k_cache, "v": v_cache}

@@ -319,6 +319,87 @@ def decode_step_paged(params: dict, cache: dict, cfg: ModelConfig, *,
     return constrain(logits, ("batch", None, "vocab")), new_cache
 
 
+def decode_verify(params: dict, cache: dict, cfg: ModelConfig, *,
+                  tokens, pos, moe_mode: str = "dense"):
+    """Speculative verify: decode T consecutive positions per row in ONE
+    dispatch. tokens: (B, T) int32 — row b's last committed token followed
+    by its T-1 drafted tokens; pos: (B,) int32 base positions (the write
+    position of tokens[:, 0]). K/V for all T positions is written ahead;
+    each query offset attends only below its own causal bound, so the
+    returned logits (B, T, V) are position-for-position the same greedy
+    signal the single-token ``decode_step`` chain produces — the engine
+    compares their argmax against the drafted tokens to find the accepted
+    prefix. Attention-only archs (the engine's lanes). Returns
+    (logits (B, T, V), new_cache)."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        raise TypeError(f"{cfg.name}: speculative verify needs per-position "
+                        "KV — SSM state cannot roll back a rejected suffix")
+    embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", None, None))
+    _, pat = block_pattern(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def unit(x, xs):
+        unit_params, unit_cache = xs
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(pat):
+            lp = unit_params[f"l{i}"]
+            h = _norm(cfg, lp["norm1"], x)
+            h, new_cache[f"l{i}"] = A.attn_decode_verify(
+                lp["mixer"], h, unit_cache[f"l{i}"], pos, cfg)
+            x = x + h
+            if ffn is not None:
+                h = _norm(cfg, lp["norm2"], x)
+                if ffn == "moe":
+                    h, _ = M.moe_forward(lp["ffn"], h, cfg, mode=moe_mode)
+                else:
+                    h = L.mlp(lp["ffn"], h, cfg)
+                x = x + h
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(unit, x, (params["blocks"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"]["unembed"]
+    return constrain(logits, ("batch", None, "vocab")), new_cache
+
+
+def decode_verify_paged(params: dict, cache: dict, cfg: ModelConfig, *,
+                        tokens, page_table, pos, moe_mode: str = "dense"):
+    """Paged twin of ``decode_verify`` (pool from ``init_paged_cache``).
+    tokens: (B, T) int32; page_table: (B, npg) int32; pos: (B,) int32 base
+    positions. Speculative overflow past a row's claimed pages scatters
+    into the trash page (never a live one). Returns (logits (B, T, V),
+    new_cache)."""
+    embeds = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(embeds.astype(L.dtype_of(cfg)), ("batch", None, None))
+    _, pat = block_pattern(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    def unit(x, xs):
+        unit_params, unit_cache = xs
+        new_cache = {}
+        for i, (mixer, ffn) in enumerate(pat):
+            lp = unit_params[f"l{i}"]
+            h = _norm(cfg, lp["norm1"], x)
+            h, new_cache[f"l{i}"] = A.attn_decode_verify_paged(
+                lp["mixer"], h, unit_cache[f"l{i}"], page_table, pos, cfg)
+            x = x + h
+            if ffn is not None:
+                h = _norm(cfg, lp["norm2"], x)
+                if ffn == "moe":
+                    h, _ = M.moe_forward(lp["ffn"], h, cfg, mode=moe_mode)
+                else:
+                    h = L.mlp(lp["ffn"], h, cfg)
+                x = x + h
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(unit, x, (params["blocks"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"]["unembed"]
+    return constrain(logits, ("batch", None, "vocab")), new_cache
+
+
 # ---------------------------------------------------------------------------
 # Accounting
 # ---------------------------------------------------------------------------

@@ -47,11 +47,27 @@ Greedy decode is prefix-stable, so a request's tokens are bit-identical
 to the single-request scan path (``RoutedServer.generate(engine=False)``
 on that prompt alone) — test-enforced in tests/test_engine.py and
 property-tested over random schedules in tests/test_engine_properties.py.
-Caveat: the guarantee is verified on the jnp paths (CPU/interpret). On
-TPU the paged decode dispatches to the f32 online-softmax Pallas kernel,
-whose accumulation discipline differs from the solo path's cache-dtype
-dot — near-tie argmaxes could in principle flip there; running that
-parity on real hardware is a ROADMAP item.
+The parity guarantee is verified on the jnp paths (CPU/interpret); the
+TPU Pallas decode kernels now share the jnp path's dtype discipline
+(cache-dtype dots, f32 accumulation — kernels/decode_attention.py), and
+token equality across the dispatch boundary is pinned in
+tests/test_kernels.py on both f32 and bf16 caches; confirming on real
+hardware remains a ROADMAP item (online-softmax normalization order still
+differs from the one-shot softmax, values agree to tolerance).
+
+**Speculative decode** (``EngineConfig.spec_k > 0``): each round a cheap
+drafter — per request, router-chosen through the gateway or pinned via
+``submit(draft=)`` / ``EngineConfig.draft`` — decodes ``spec_k`` tokens
+ahead in its own slot pool, the target verifies the window in ONE
+multi-position dispatch, and the longest matching prefix commits (plus
+the verify's correction token on a mismatch). Rollback is free: ``pos``
+simply doesn't advance past the accepted point, and write-before-validity
+masks the stale suffix. Emitted tokens stay bit-identical to the
+non-speculative engine (greedy verify at every position — test-pinned),
+and acceptance variation is data, never shape: zero decode retraces
+(``_draft_fn``/``_verify_fn``/``_verify_paged_fn`` cache like every other
+engine jit). Counters: ``spec_rounds`` / ``spec_drafted`` /
+``spec_accepted`` / ``spec_rejected``.
 
 SSM/hybrid archs integrate state over every prefill position and cannot
 share right-padded prompt buckets; they stay on the gateway's per-request
@@ -89,9 +105,9 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import model as mdl
-from repro.serve.kv_cache import (PageTable, alloc_page_pool,
-                                  alloc_slot_pool, write_prefill_pages,
-                                  write_slot)
+from repro.serve.kv_cache import (PageTable, alloc_draft_pool,
+                                  alloc_page_pool, alloc_slot_pool,
+                                  write_prefill_pages, write_slot)
 
 #: one entry appended per jit TRACE of an engine/serve function (including
 #: the gateway's route program — hot-swapped router state must enter it as
@@ -177,6 +193,22 @@ class EngineConfig:
     lane_quotas: Tuple[Tuple[int, int], ...] = ()  #: per-model queue-cap
     #: overrides as (model_idx, cap) pairs, so one overloaded pool model
     #: sheds its own excess instead of starving the other lanes
+    spec_k: int = 0  #: speculative decode: tokens drafted ahead per round.
+    #: 0 disables (seed behavior — ``step()`` decodes ``chunk``-token
+    #: scans). > 0 replaces each lane's decode chunk with a draft/verify
+    #: ROUND: the request's drafter decodes ``spec_k`` tokens ahead
+    #: (a cheap sequential scan on the draft model), the target verifies
+    #: all ``spec_k + 1`` positions in ONE batched dispatch, the greedy-
+    #: matching prefix commits (plus the verify's own next token), and the
+    #: rejected suffix rolls back by resetting the slot's ``pos`` — tokens
+    #: stay bit-identical to the non-speculative engine (greedy verify),
+    #: between 1 and spec_k + 1 of them per row per round
+    draft: Optional[int] = None  #: default drafter (model pool index) for
+    #: requests that don't pass ``submit(..., draft=)``. None → each
+    #: request drafts with its own target model (degenerate k-step
+    #: lookahead, full acceptance). The gateway overrides per request from
+    #: the router's utility ranking (cheapest model the router still
+    #: rates — see RoutedServer)
 
     @property
     def resolved_pages(self) -> int:
@@ -285,6 +317,61 @@ def _chunk_fn(cfg: ModelConfig, chunk: int):
     return jax.jit(run, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def _draft_fn(cfg: ModelConfig, k: int):
+    """Draft ``k`` tokens ahead on the draft model's slot pool: a cheap
+    sequential greedy scan (same body as ``_chunk_fn``) that RETURNS the
+    generated tokens instead of the fed ones — the drafted window the
+    target's verify step will judge. One trace per (draft config, k);
+    the draft pool is donated like every steady-state cache."""
+    def run(params, cache, tok, pos):
+        TRACE_LOG.append(("engine_draft", cfg.name, tok.shape, k))
+
+        def body(carry, _):
+            tok, pos, cache = carry
+            logits, cache = mdl.decode_step(params, cache, cfg,
+                                            tokens=tok[:, None], pos=pos)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return (nxt, pos + 1, cache), nxt
+
+        (tok, pos, cache), drafted = jax.lax.scan(body, (tok, pos, cache),
+                                                  None, length=k)
+        return cache, drafted.T                           # (B, k)
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _verify_fn(cfg: ModelConfig, T: int):
+    """Verify ``T = spec_k + 1`` positions per row in ONE dispatch on the
+    uniform slot pool (``mdl.decode_verify``): returns the greedy token at
+    every position — position j's argmax is exactly what the sequential
+    chain would emit after the first j drafted tokens, so the host-side
+    accept loop just compares it against the draft. One trace per
+    (model config, T); the pool is donated."""
+    def run(params, cache, tok, pos):
+        TRACE_LOG.append(("engine_verify", cfg.name, tok.shape))
+        logits, cache = mdl.decode_verify(params, cache, cfg,
+                                          tokens=tok, pos=pos)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _verify_paged_fn(cfg: ModelConfig, T: int):
+    """Paged twin of ``_verify_fn`` (``mdl.decode_verify_paged``): the
+    (slots, max_pages) table shape is static, so mixed per-request page
+    counts never retrace — same guarantee as ``_chunk_paged_fn``."""
+    def run(params, cache, page_table, tok, pos):
+        TRACE_LOG.append(("engine_verify_paged", cfg.name, tok.shape,
+                          page_table.shape))
+        logits, cache = mdl.decode_verify_paged(params, cache, cfg,
+                                                tokens=tok,
+                                                page_table=page_table,
+                                                pos=pos)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.jit(run, donate_argnums=(1,))
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -306,8 +393,16 @@ class _Active:
     #: tokens emitted before the last preemption (this tenure re-prefilled
     #: prompt + prefix; ``chunks`` holds only the current tenure)
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    #: only COMMITTED tokens ever enter ``chunks`` — a speculative round
+    #: appends its accepted prefix after verification, never raw drafts —
+    #: so ``_partial_tokens`` stays an exact solo prefix under
+    #: cancel/expire/preempt even mid-draft-window
     emitted: int = 0           # total emitted, prefix included
     preempts: int = 0
+    draft: int = -1            # drafter pool index (spec mode; -1 = unset)
+    region: int = 0            # commit-bound write extent: len(prompt) +
+    #: max_new — speculative page growth is clamped here (write-ahead past
+    #: it scatters to the trash page and must not claim pages)
 
 
 @dataclasses.dataclass
@@ -321,6 +416,7 @@ class _Pending:
     #: tokens already emitted before a preemption — admission prefills
     #: prompt + prefix (recompute-on-resume)
     preempts: int = 0
+    draft: int = -1            # drafter pool index (spec mode; -1 = unset)
 
     def eff_deadline(self) -> float:
         return _INF if self.deadline is None else float(self.deadline)
@@ -347,6 +443,14 @@ class _Lane:
         self.queue: Deque[_Pending] = collections.deque()
         self.tok = np.zeros((ecfg.slots,), np.int32)     # next token to feed
         self.pos = np.zeros((ecfg.slots,), np.int32)     # its write position
+        #: speculative mode: drafter pool index → the drafter's own slot
+        #: pool (uniform, with spec_k write-ahead headroom — see
+        #: kv_cache.alloc_draft_pool), allocated lazily on first use and
+        #: kept for the lane's lifetime. Row s mirrors slot s; rows whose
+        #: request drafts with a different model hold garbage until the
+        #: draft prefill of their next matching occupant overwrites them
+        #: (write-before-validity, same invariant as the target pool).
+        self.draft_pools: Dict[int, object] = {}
 
 
 class ServeEngine:
@@ -370,6 +474,17 @@ class ServeEngine:
             raise ValueError(
                 f"EngineConfig.shed_policy={self.ecfg.shed_policy!r}: "
                 "expected 'reject-newest' or 'reject-latest-deadline'")
+        if self.ecfg.spec_k < 0:
+            raise ValueError(f"EngineConfig.spec_k={self.ecfg.spec_k}: "
+                             "the drafted window cannot be negative")
+        if self.ecfg.draft is not None:
+            if self.ecfg.spec_k == 0:
+                raise ValueError("EngineConfig.draft without spec_k > 0: "
+                                 "a drafter only exists in speculative mode")
+            if not 0 <= int(self.ecfg.draft) < len(pool):
+                raise ValueError(
+                    f"EngineConfig.draft={self.ecfg.draft}: not a model "
+                    f"pool index (pool has {len(pool)} models)")
         self.pool = pool
         self._lanes: Dict[int, _Lane] = {}
         self._next_rid = 0
@@ -392,6 +507,16 @@ class ServeEngine:
         #: recompute cost preemption pays for its page elasticity)
         self.resume_recompute_toks = 0
         self.queue_depth_hw = 0      #: queue-depth high-water across lanes
+        #: speculative-decode accounting (exact, host-side): rounds run,
+        #: tokens drafted (spec_k per active row per round), drafted tokens
+        #: accepted by verify, and drafted tokens rejected-and-recomputed
+        #: (the rollback cost — each rejected draft burned draft-model work
+        #: and a verify position that re-decodes next round). Acceptance
+        #: rate = spec_accepted / spec_drafted.
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_rejected = 0
         #: queue-wait per admitted request (submit → prefill dispatched),
         #: seconds; bounded like TRACE_LOG so long-running servers don't
         #: leak. benchmarks/perf_suite.bench_paged reads the p99.
@@ -448,16 +573,44 @@ class ServeEngine:
         """Requests currently holding decode capacity (all lanes)."""
         return sum(len(lane.active) for lane in self._lanes.values())
 
+    def _resolve_draft(self, model_idx: int, draft, pm) -> int:
+        """Pick and validate a request's drafter (spec mode): the explicit
+        ``submit(draft=)`` override, else ``EngineConfig.draft``, else the
+        target itself (degenerate lookahead — always correct, never
+        faster). The drafter must share the target's token space and be an
+        attention arch (its cache rolls back positionally)."""
+        d = int(draft if draft is not None
+                else (self.ecfg.draft if self.ecfg.draft is not None
+                      else model_idx))
+        if not 0 <= d < len(self.pool):
+            raise ValueError(f"draft={d}: not a model pool index "
+                             f"(pool has {len(self.pool)} models)")
+        dcfg = self.pool[d].cfg
+        if dcfg.arch_type in ("ssm", "hybrid"):
+            raise TypeError(f"{dcfg.name}: SSM/hybrid drafters cannot roll "
+                            "back a rejected suffix (state is not "
+                            "positional) — pick an attention drafter")
+        if dcfg.vocab != pm.cfg.vocab:
+            raise ValueError(
+                f"drafter {dcfg.name} (vocab {dcfg.vocab}) and target "
+                f"{pm.cfg.name} (vocab {pm.cfg.vocab}) don't share a token "
+                "space — drafted tokens would be meaningless to verify")
+        return d
+
     # ------------------------------------------------------------- submit
     def submit(self, model_idx: int, toks: np.ndarray, max_new: int, *,
-               deadline: Optional[int] = None) -> int:
+               deadline: Optional[int] = None,
+               draft: Optional[int] = None) -> int:
         """Enqueue a request; returns its rid. ``deadline`` bounds its
         lifetime in engine steps: after that many further ``step()`` calls
         an unfinished request EXPIREs (slot and pages released between
         chunks, partial tokens surfaced in its ``Outcome``). None = never.
         A full lane queue (``queue_cap`` / ``lane_quotas``) SHEDs per
         ``shed_policy`` — the shed request's rid still comes back here and
-        its typed ``Outcome`` surfaces through the next step()/drain()."""
+        its typed ``Outcome`` surfaces through the next step()/drain().
+        ``draft`` (speculative mode only) picks this request's drafter by
+        model pool index, overriding ``EngineConfig.draft``; the gateway
+        passes the router's utility-ranked choice here."""
         pm = self.pool[int(model_idx)]
         if pm.cfg.arch_type in ("ssm", "hybrid"):
             raise TypeError(
@@ -479,6 +632,14 @@ class ServeEngine:
         if deadline is not None and int(deadline) < 1:
             raise ValueError(f"deadline={deadline}: a request needs at "
                              "least one engine step to make progress")
+        if self.ecfg.spec_k > 0:
+            draft_idx = self._resolve_draft(int(model_idx), draft, pm)
+        elif draft is not None:
+            raise ValueError("submit(draft=...) needs EngineConfig.spec_k "
+                             "> 0 — the non-speculative engine has no "
+                             "drafter")
+        else:
+            draft_idx = -1
         rid = self._next_rid
         self._next_rid += 1
         lane = self._lanes.get(int(model_idx))
@@ -486,7 +647,8 @@ class ServeEngine:
             lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg)
         pend = _Pending(rid, toks, max_new, t_submit=time.perf_counter(),
                         deadline=(self._steps + int(deadline)
-                                  if deadline is not None else None))
+                                  if deadline is not None else None),
+                        draft=draft_idx)
         cap = self._lane_caps.get(int(model_idx), self.ecfg.queue_cap)
         if cap is not None and len(lane.queue) >= cap:
             victim = pend
@@ -594,7 +756,11 @@ class ServeEngine:
                 "expiries": self.expiries, "cancels": self.cancels,
                 "resume_recompute_toks": self.resume_recompute_toks,
                 "queue_depth_hw": self.queue_depth_hw,
-                "peak_active": self.peak_active}
+                "peak_active": self.peak_active,
+                "spec_rounds": self.spec_rounds,
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                "spec_rejected": self.spec_rejected}
 
     def _expire(self, lane: _Lane) -> None:
         """EXPIRE every request (active or queued) whose deadline has
@@ -640,7 +806,10 @@ class ServeEngine:
             if lane.active and lane.paged and self.ecfg.reserve == "initial":
                 self._grow_for_chunk(lane)
             if lane.active:
-                self._decode_chunk(lane)
+                if self.ecfg.spec_k:
+                    self._decode_spec_round(lane)
+                else:
+                    self._decode_chunk(lane)
         self._steps += 1
         finished = self._events
         self._events = []
@@ -713,7 +882,8 @@ class ServeEngine:
         return _Active(req.rid, req.max_new, toks=req.toks,
                        deadline=req.deadline, t_submit=req.t_submit,
                        prefix=req.prefix, emitted=len(req.prefix),
-                       preempts=req.preempts)
+                       preempts=req.preempts, draft=req.draft,
+                       region=len(req.toks) + req.max_new)
 
     def _pick_victim(self, lane: _Lane,
                      before: Optional[float] = None) -> Optional[int]:
@@ -749,21 +919,29 @@ class ServeEngine:
             deadline=st.deadline,
             prefix=(np.asarray(prefix, np.int32) if prefix is not None
                     else _empty_toks()),
-            preempts=st.preempts + 1))
+            preempts=st.preempts + 1, draft=st.draft))
 
     def _grow_for_chunk(self, lane: _Lane) -> None:
         """Initial-reservation lanes, right before a decode chunk: every
-        active slot's page table must cover its next ``chunk`` writes
-        [pos, pos + chunk). Grow reservations on demand; under pool
-        pressure preempt victims (``_pick_victim`` policy) until the
-        survivors fit. ``fits()``'s resumable-region bound guarantees a
-        lone request always covers itself, so this terminates with at
-        least zero active slots and never deadlocks."""
-        chunk, ps = self.ecfg.chunk, self.ecfg.page_size
+        active slot's page table must cover its next writes — [pos,
+        pos + chunk) for the plain scan, [pos, pos + spec_k) for a
+        speculative round, clamped to the request's commit-bound region
+        (write-ahead past it scatters into the trash page by design and
+        must not claim pages that could never hold a committed position).
+        Grow reservations on demand; under pool pressure preempt victims
+        (``_pick_victim`` policy) until the survivors fit. ``fits()``'s
+        resumable-region bound guarantees a lone request always covers
+        itself, so this terminates with at least zero active slots and
+        never deadlocks."""
+        ps = self.ecfg.page_size
+        span = self.ecfg.spec_k or self.ecfg.chunk
         while lane.active:
             need: Dict[int, int] = {}
             for slot in sorted(lane.active):
-                want = -(-(int(lane.pos[slot]) + chunk) // ps)
+                hi = int(lane.pos[slot]) + span
+                if self.ecfg.spec_k:
+                    hi = min(hi, lane.active[slot].region)
+                want = -(-hi // ps)
                 short = want - lane.pt.held(slot)
                 if short > 0:
                     need[slot] = short
@@ -772,6 +950,28 @@ class ServeEngine:
                     lane.pt.grow(slot, n)
                 return
             self._preempt(lane, self._pick_victim(lane))
+
+    def _admit_draft(self, lane: _Lane, slot: int, draft_idx: int,
+                     full: np.ndarray) -> None:
+        """Speculative admission sidecar: prefill the request's prompt
+        through its DRAFTER and write the K/V into the drafter's slot pool
+        (lazily allocated per lane — uniform, spec_k headroom past the
+        target region so sequential drafting never clamps at the edge).
+        The draft's own first-token output is discarded: drafting always
+        starts from the target-committed ``lane.tok``."""
+        dpm = self.pool[draft_idx]
+        if draft_idx not in lane.draft_pools:
+            lane.draft_pools[draft_idx] = alloc_draft_pool(
+                dpm.cfg, self.ecfg.slots, self.ecfg.max_seq,
+                self.ecfg.spec_k)
+        S = len(full)
+        S_b = next_pow2(S)
+        toks_p = np.zeros((1, S_b), np.int32)
+        toks_p[0, :S] = full
+        _, kv = _prefill_fn(dpm.cfg)(dpm.params, jnp.asarray(toks_p),
+                                     jnp.int32(S - 1))
+        lane.draft_pools[draft_idx] = _admit_fn(dpm.cfg)(
+            lane.draft_pools[draft_idx], kv, jnp.int32(slot))
 
     def _admit(self, lane: _Lane) -> None:
         if lane.paged:
@@ -789,6 +989,8 @@ class ServeEngine:
             tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
                                         jnp.int32(S - 1))
             lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
+            if self.ecfg.spec_k:
+                self._admit_draft(lane, slot, req.draft, full)
             self.admission_lat.append(time.perf_counter() - req.t_submit)
             lane.tok[slot] = int(tok0[0])
             lane.pos[slot] = S          # first decode token writes K/V at S
@@ -855,10 +1057,110 @@ class ServeEngine:
             tok0 = np.asarray(tok0)
             now = time.perf_counter()
             for r, (req, slot, S, _, pages) in enumerate(items):
+                if self.ecfg.spec_k:
+                    self._admit_draft(lane, slot, req.draft,
+                                      self._full_prompt(req))
                 self.admission_lat.append(now - req.t_submit)
                 lane.tok[slot] = int(tok0[r])
                 lane.pos[slot] = S      # first decode token writes K/V at S
                 lane.active[slot] = self._activate(req, S)
+
+    def _decode_spec_round(self, lane: _Lane) -> None:
+        """One speculative draft/verify round (replaces ``_decode_chunk``
+        when ``spec_k > 0``):
+
+        1. **draft** — group active slots by drafter; each drafter's pool
+           decodes ``spec_k`` tokens ahead in one cached sequential scan.
+           Rows outside a group run masked (tok 0 at pos 0 — their writes
+           land below the next occupant's prefill, the same free-row
+           convention as the plain chunk).
+        2. **verify** — ONE target dispatch over ``spec_k`` positions per
+           row: the pending committed token plus the first spec_k - 1
+           drafts, each position attending only below its own causal
+           bound, so position j's argmax is bitwise what the sequential
+           chain would produce there.
+        3. **commit / roll back** (host) — the longest prefix of drafts
+           matching the verify argmax commits, plus the verify's own
+           correction token on a mismatch — between 1 (all drafts
+           rejected: exactly one plain decode step) and spec_k tokens per
+           row. On FULL acceptance the carry becomes the last draft
+           rather than the verify's bonus token: taking the bonus would
+           advance past a position the draft model never ingested (it
+           drafts only spec_k - 1 tokens past the carry), silently
+           corrupting the draft cache and collapsing acceptance from the
+           next round on. Capping at spec_k keeps the draft and target
+           streams aligned with zero catch-up dispatches. The rejected
+           suffix rolls back by simply NOT advancing ``pos`` past the
+           accepted point: stale drafted K/V above it stays masked by
+           validity and is overwritten before it could ever be attended
+           (write-before-validity). Only committed tokens enter
+           ``st.chunks``/``st.emitted``, so partial tokens under
+           cancel/expire/preempt remain exact solo prefixes.
+        """
+        cfg, ecfg = lane.pm.cfg, self.ecfg
+        k = ecfg.spec_k
+        T = k     # verify positions: carry token + first k - 1 drafts
+        drafted = np.zeros((ecfg.slots, k), np.int32)
+        by_draft: Dict[int, List[int]] = {}
+        for slot, st in lane.active.items():
+            by_draft.setdefault(st.draft, []).append(slot)
+        for d, slots in sorted(by_draft.items()):
+            dpm = self.pool[d]
+            mask = np.zeros((ecfg.slots,), bool)
+            mask[slots] = True
+            tok_m = np.where(mask, lane.tok, 0).astype(np.int32)
+            pos_m = np.where(mask, lane.pos, 0).astype(np.int32)
+            lane.draft_pools[d], dr = _draft_fn(dpm.cfg, k)(
+                dpm.params, lane.draft_pools[d], jnp.asarray(tok_m),
+                jnp.asarray(pos_m))
+            dr = np.asarray(dr)
+            drafted[slots] = dr[slots]
+        ver_tok = np.concatenate([lane.tok[:, None], drafted[:, :k - 1]],
+                                 axis=1)
+        if lane.paged:
+            lane.pool, g = _verify_paged_fn(cfg, T)(
+                lane.pm.params, lane.pool, jnp.asarray(lane.pt.table),
+                jnp.asarray(ver_tok), jnp.asarray(lane.pos))
+        else:
+            lane.pool, g = _verify_fn(cfg, T)(
+                lane.pm.params, lane.pool, jnp.asarray(ver_tok),
+                jnp.asarray(lane.pos))
+        g = np.asarray(g)                                 # (slots, T)
+        self.spec_rounds += 1
+        for slot in list(lane.active):
+            st = lane.active[slot]
+            ds, gs = drafted[slot], g[slot]
+            m = 0
+            while m < k and ds[m] == gs[m]:
+                m += 1
+            self.spec_drafted += k
+            self.spec_accepted += m
+            self.spec_rejected += k - m
+            if m < k:
+                # correction: gs[m] is the argmax after the last accepted
+                # draft — carry it as the next feed, roll the rest back
+                adv = m + 1
+                committed = np.concatenate(
+                    ([np.int32(lane.tok[slot])], ds[:m])).astype(np.int32)
+                lane.tok[slot] = gs[m]
+            else:
+                # full acceptance: carry the last draft (verified: it
+                # equals gs[k-1]), not the bonus gs[k] — the draft cache
+                # only extends spec_k - 1 past the carry (see docstring)
+                adv = k
+                committed = np.concatenate(
+                    ([np.int32(lane.tok[slot])],
+                     ds[:k - 1])).astype(np.int32)
+                lane.tok[slot] = ds[k - 1]
+            lane.pos[slot] = int(lane.pos[slot]) + adv
+            st.chunks.append(committed)
+            st.emitted += adv
+            if st.emitted >= st.max_new:
+                parts = ([st.prefix] if len(st.prefix) else []) + st.chunks
+                tokens = np.concatenate(parts)[:st.max_new]
+                status = PREEMPTED_RESUMED if st.preempts else DONE
+                self._release_slot(lane, slot)
+                self._record(st.rid, status, tokens=tokens)
 
     def _decode_chunk(self, lane: _Lane) -> None:
         cfg, ecfg = lane.pm.cfg, self.ecfg

@@ -277,7 +277,8 @@ class RoutedServer:
                tokenize: Optional[Callable] = None,
                client_id: Optional[int] = None,
                x: Optional[np.ndarray] = None,
-               deadline: Optional[int] = None) -> int:
+               deadline: Optional[int] = None,
+               draft_model: Optional[int] = None) -> int:
         """Route one prompt and enqueue it on the continuous-batching
         engine; returns a request id. The request joins the routed model's
         shared decode batch at the next free slot — call ``step()`` to
@@ -297,6 +298,17 @@ class RoutedServer:
         the failover, and the harvest records the model that actually
         served it — the realized outcome, not the intended route.
 
+        On a speculative engine (``EngineConfig.spec_k > 0``) the request
+        is paired with a **drafter** from the same pool: ``draft_model``
+        pins one by pool index; otherwise the gateway walks the router's
+        own utility ranking A − λ·C over the pool and picks the
+        highest-utility model that is strictly cheaper than the target
+        (vocab-compatible attention archs only — the engine's
+        constraints), falling back to the target itself. The router
+        already ranks models by predicted quality on THIS query, so its
+        best cheap model is exactly the drafter most likely to agree with
+        the target and keep acceptance high.
+
         ``deadline`` bounds the request's lifetime in engine steps (see
         ``ServeEngine.submit``); an EXPIRED request counts as a backend
         failure for harvest purposes (zero-score outcome recorded against
@@ -309,8 +321,16 @@ class RoutedServer:
         if self.fault_plan is not None:
             m_idx = self._submit_with_failover(m_idx, x_arr, lam)
         toks = self._tokenize([prompt], self.pool[m_idx].cfg, tokenize)[0]
+        if self.engine.ecfg.spec_k:
+            draft = (int(draft_model) if draft_model is not None
+                     else self._pick_draft(m_idx, x_arr, lam))
+        elif draft_model is not None:
+            raise ValueError("submit(draft_model=...) needs a speculative "
+                             "engine — set EngineConfig.spec_k > 0")
+        else:
+            draft = None
         rid = self.engine.submit(m_idx, toks, max_new_tokens,
-                                 deadline=deadline)
+                                 deadline=deadline, draft=draft)
         if self.engine._status.get(rid) == SHED:
             self._terminated_rids.append(rid)
             return rid
@@ -357,6 +377,27 @@ class RoutedServer:
             self.failovers += 1
             attempt = 0
         return m_idx
+
+    def _pick_draft(self, m_idx: int, x_arr: np.ndarray,
+                    lam: float) -> int:
+        """Router-paired drafter selection (speculative engines): among
+        pool models that can legally draft for the target — attention
+        archs sharing its vocab — and are strictly cheaper per token, pick
+        the one the router itself ranks highest under A − λ·C on this
+        query. Falls back to the target (self-speculation: always correct,
+        never faster) when nothing cheaper qualifies. One predict() call
+        per submit, same ranking the failover path uses."""
+        tgt = self.pool[m_idx]
+        cand = [i for i, pm in enumerate(self.pool)
+                if i != m_idx
+                and pm.cost_per_token < tgt.cost_per_token
+                and pm.cfg.vocab == tgt.cfg.vocab
+                and pm.cfg.arch_type not in ("ssm", "hybrid")]
+        if not cand:
+            return m_idx
+        A, C = self.router.predict(jnp.asarray(x_arr[None]))
+        util = np.asarray(A[0] - lam * C[0])
+        return max(cand, key=lambda i: util[i])
 
     def _unknown_rid(self, rid: int) -> ValueError:
         """A specific, actionable error for a rid with no pending eval:
@@ -452,10 +493,15 @@ class RoutedServer:
         self._absorb_outcomes(finished)
         return finished
 
-    def drain(self) -> Dict[int, np.ndarray]:
+    def drain(self, rids=None) -> Dict[int, np.ndarray]:
         """Run the engine until idle; returns {request id: result} (np
-        tokens, or a typed ``Outcome`` for non-completions)."""
-        out = self.engine.drain()
+        tokens, or a typed ``Outcome`` for non-completions). ``rids``
+        passes through to ``ServeEngine.drain``: an iterable of request
+        ids drains until exactly those terminate, leaving other in-flight
+        streams' results in place. (The passthrough was dropped when the
+        engine grew the parameter — callers interleaving submit streams
+        through the gateway silently drained, and CLEARED, everything.)"""
+        out = self.engine.drain(rids)
         self._absorb_outcomes(out.items())
         return out
 

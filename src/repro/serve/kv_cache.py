@@ -21,6 +21,24 @@ Three cache regimes live here:
   lengths. Page index 0 is the **trash page**: never handed out, the
   scatter target for inactive decode rows and the table filler past a
   request's reservation — gathers from it are masked by validity.
+
+Speculative write-ahead (serve/engine.py draft/verify rounds) rides the
+same write-before-validity invariant in BOTH pool regimes: a verify step
+writes K/V for positions [pos, pos + k] before any of them is committed,
+and a query only ever attends positions below its own causal bound — so
+uncommitted drafts are physically present but logically invisible.
+**Rollback is pure host bookkeeping**: rejecting a drafted suffix just
+resets the slot's ``pos`` to the last accepted position; the stale
+drafted K/V above it stays masked until the next occupant of those
+positions overwrites it (each decode/verify step writes a position
+strictly before validity reaches it). No device-side cache surgery, no
+retrace. Overflow discipline differs per regime: the paged verify scatter
+redirects positions past a row's claimed pages to the trash page, while
+the uniform verify scatter drops out-of-bounds positions — either way a
+speculative window poking past the region can never corrupt live
+entries. ``alloc_draft_pool`` sizes the drafter's slot pool with the
+write-ahead headroom so the draft model's own sequential decode never
+clamps at the region end.
 """
 from __future__ import annotations
 
@@ -68,6 +86,20 @@ def write_slot(pool, prefill_cache, slot):
             p, u.astype(p.dtype), (0, slot) + (0,) * (u.ndim - 2))
 
     return jax.tree.map(leaf, pool, prefill_cache)
+
+
+def alloc_draft_pool(cfg, slots: int, max_seq: int, spec_k: int):
+    """Allocate the drafter's slot pool for a speculative lane: a uniform
+    pool (drafts are cheap models — page elasticity buys nothing there)
+    with ``spec_k`` positions of write-ahead headroom past the target
+    lane's region. The headroom matters: the draft model decodes
+    sequentially through the speculative window, and its last draft for a
+    request ending flush at ``max_seq`` writes at position
+    ``max_seq + spec_k - 1``; without the slack a clamped
+    ``dynamic_update_slice`` would smear that write over the region's live
+    tail and corrupt the draft cache (costing acceptance, not
+    correctness — the verify step is the sole authority on tokens)."""
+    return alloc_slot_pool(cfg, slots, max_seq + spec_k)
 
 
 # ---------------------------------------------------------------------------

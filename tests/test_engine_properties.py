@@ -157,6 +157,13 @@ CHAOS_ECFGS = [
     EngineConfig(slots=2, max_seq=MAX_SEQ, chunk=4, page_size=4, pages=8),
     EngineConfig(slots=3, max_seq=MAX_SEQ, chunk=4, page_size=4, pages=8,
                  reserve="initial"),
+    # speculative shapes (ISSUE 9 satellite): cancel/expire/preempt land
+    # BETWEEN draft/verify rounds with uncommitted drafts physically
+    # written into both KV pools — the checker's prefix assertion pins
+    # that those drafts never surface in a terminal partial
+    EngineConfig(slots=2, max_seq=MAX_SEQ, chunk=4, spec_k=3),
+    EngineConfig(slots=3, max_seq=MAX_SEQ, chunk=4, page_size=4, pages=8,
+                 reserve="initial", spec_k=2),
 ]
 
 

@@ -1,0 +1,296 @@
+"""Speculative multi-token decode (ISSUE 9 acceptance suite).
+
+The contract: a speculative engine (``EngineConfig.spec_k > 0``) emits
+tokens BIT-IDENTICAL to the non-speculative engine — and therefore to the
+single-request solo scan path — for every drafter pairing, while running
+zero decode retraces (acceptance variation is data, never shape). Edge
+cases pinned here: all-k-rejected rounds (degenerate to one plain step),
+verify windows straddling page boundaries without leaking pages, a
+drafter equal to the target (full acceptance — the self-speculation
+sanity bound), preemption/cancel/expiry with unverified drafts in flight
+(partials stay exact solo prefixes: uncommitted drafts never surface),
+and the gateway's ``drain(rids=)`` passthrough regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import routers
+from repro.config import ModelConfig, RouterConfig
+from repro.serve import gateway
+from repro.serve.engine import (CANCELLED, DONE, EXPIRED, PREEMPTED_RESUMED,
+                                EngineConfig, Outcome, ServeEngine)
+from repro.serve.gateway import PoolModel, RoutedServer
+
+TGT = ModelConfig(name="spec-tgt", arch_type="dense", n_layers=2,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                  head_dim=16)
+#: independent tiny drafter: different seed AND depth — near-zero
+#: agreement with the target, so it exercises the rejection path hard
+DRF = ModelConfig(name="spec-drf", arch_type="dense", n_layers=1,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                  head_dim=16)
+SSM = ModelConfig(name="spec-ssm", arch_type="ssm", n_layers=1,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=97,
+                  head_dim=16)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    # This module compiles dozens of engine programs (draft/verify/admit
+    # × uniform/paged × spec_k values × two drafters, plus the non-spec
+    # references). Drop them when the module finishes so the full-suite
+    # process doesn't accumulate every executable to the end of the run.
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def pool():
+    from repro.models import init_params
+    return [PoolModel("spec-tgt", TGT,
+                      init_params(jax.random.PRNGKey(0), TGT), 1.0),
+            PoolModel("spec-drf", DRF,
+                      init_params(jax.random.PRNGKey(7), DRF), 0.2)]
+
+
+def _toks(seed, n):
+    return np.random.default_rng(seed).integers(
+        1, TGT.vocab, size=n).astype(np.int32)
+
+
+REQS = [(_toks(10 + i, 3 + 2 * i), 6 + 3 * i) for i in range(4)]
+
+
+def _run(pool, ecfg, reqs=REQS, draft=None):
+    eng = ServeEngine(pool, ecfg)
+    rids = [eng.submit(0, t, m, draft=draft) for t, m in reqs]
+    out = eng.drain()
+    return {r: np.asarray(out[r]) for r in rids}, eng
+
+
+def _ecfg(paged, **kw):
+    base = dict(slots=4, max_seq=64, chunk=4)
+    if paged:
+        base.update(page_size=4, pages=80)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _assert_pool_recovered(eng):
+    for lane in eng._lanes.values():
+        assert sorted(lane.free) == list(range(eng.ecfg.slots))
+        assert not lane.active and not lane.queue
+        assert (lane.tok == 0).all() and (lane.pos == 0).all()
+        if lane.paged:
+            assert sorted(lane.pt.free) == \
+                list(range(1, eng.ecfg.resolved_pages + 1))
+            assert not lane.pt._held and (lane.pt.table == 0).all()
+
+
+# --------------------------------------------------------------- parity
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("spec_k", [1, 3, 5])
+def test_spec_tokens_bit_identical_to_nonspec(pool, paged, spec_k):
+    """THE tentpole property: every request's tokens from the speculative
+    engine equal the non-speculative engine's bit-for-bit, in both pool
+    regimes, for self-drafting (full acceptance) AND an independent
+    drafter (heavy rejection)."""
+    ref, _ = _run(pool, _ecfg(paged))
+    for draft in (0, 1):
+        out, eng = _run(pool, _ecfg(paged, spec_k=spec_k), draft=draft)
+        for r in ref:
+            np.testing.assert_array_equal(ref[r], out[r])
+        c = eng.counters()
+        assert c["spec_rounds"] > 0
+        assert c["spec_drafted"] == c["spec_accepted"] + c["spec_rejected"]
+        _assert_pool_recovered(eng)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_self_draft_full_acceptance(pool, paged):
+    """draft == target is the acceptance upper bound: the drafter's
+    logits are the target's, so every drafted token must be accepted.
+    This also pins draft-cache consistency across rounds — a single
+    position the drafter failed to ingest (e.g. taking the verify's bonus
+    token past the drafted window) would break equality from round two
+    on, not just lower the rate."""
+    out, eng = _run(pool, _ecfg(paged, spec_k=3), draft=0)
+    c = eng.counters()
+    assert c["spec_drafted"] > 0
+    assert c["spec_accepted"] == c["spec_drafted"]
+    assert c["spec_rejected"] == 0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_all_k_rejected_degenerates_to_plain_step(pool, paged):
+    """An independent random-init drafter agrees with the target
+    essentially never: rounds with zero accepted drafts must still
+    commit exactly one correct token each (the verify's own argmax), so
+    progress — and parity, checked above — never stalls."""
+    out, eng = _run(pool, _ecfg(paged, spec_k=3), draft=1)
+    c = eng.counters()
+    assert c["spec_rejected"] > 0
+    total = sum(m for _, m in REQS)
+    assert sum(len(v) for v in out.values()) == total
+
+
+def test_page_boundary_straddle_no_page_leaks(pool):
+    """spec_k not dividing page_size: verify write-ahead windows straddle
+    page boundaries every round, and near the region end they poke past
+    the last claimed page (trash-redirected, never claimed). After drain
+    the page pool must be exactly whole."""
+    ecfg = EngineConfig(slots=3, max_seq=64, chunk=4, page_size=4,
+                        pages=60, spec_k=3)
+    ref, _ = _run(pool, _ecfg(True))
+    out, eng = _run(pool, ecfg, draft=0)
+    for r in ref:
+        np.testing.assert_array_equal(ref[r], out[r])
+    _assert_pool_recovered(eng)
+
+
+def test_spec_zero_decode_retraces(pool):
+    """Once warm, spec rounds compile nothing: draft/verify jits are
+    cached per (config, spec_k) and acceptance variation is pure data.
+    Runs both drafters so rejection-heavy and acceptance-heavy rounds
+    share the same programs."""
+    for draft in (0, 1):
+        _run(pool, _ecfg(True, spec_k=3), draft=draft)    # warm
+    gateway.reset_trace_log()
+    n0 = len(gateway.TRACE_LOG)
+    for draft in (0, 1):
+        out, _ = _run(pool, _ecfg(True, spec_k=3), draft=draft)
+    assert len(gateway.TRACE_LOG) == n0, \
+        f"spec retrace: {list(gateway.TRACE_LOG)[n0:]}"
+
+
+# ------------------------------------------------- lifecycle edge cases
+def test_preemption_with_unverified_drafts_resumes_bit_identical(pool):
+    """Preemption between spec rounds throws away the uncommitted drafted
+    suffix by construction (only verified prefixes enter st.chunks); the
+    resumed request re-prefills prompt + committed tokens and must finish
+    bit-identical to its never-preempted twin."""
+    ecfg = EngineConfig(slots=3, max_seq=32, chunk=4, page_size=4,
+                        pages=8, reserve="initial", spec_k=3)
+    ref_ecfg = EngineConfig(slots=3, max_seq=32, chunk=4, page_size=4,
+                            pages=80)
+    reqs = [(_toks(50 + i, 5 + i), 12) for i in range(3)]
+    ref, _ = _run(pool, ref_ecfg, reqs=reqs)
+    eng = ServeEngine(pool, ecfg)
+    rids = [eng.submit(0, t, m, draft=0) for t, m in reqs]
+    out = eng.drain()
+    assert eng.preemptions > 0, "schedule failed to force a preemption"
+    resumed = 0
+    for rid, ref_rid in zip(rids, ref):
+        np.testing.assert_array_equal(np.asarray(out[rid]), ref[ref_rid])
+        resumed += eng.status(rid) == PREEMPTED_RESUMED
+    assert resumed > 0
+    _assert_pool_recovered(eng)
+
+
+@pytest.mark.parametrize("terminal", ["cancel", "expire"])
+def test_cancel_expire_mid_draft_discards_uncommitted(pool, terminal):
+    """A request cancelled/expired between spec rounds surfaces ONLY
+    committed tokens — an exact prefix of its solo reference. Uncommitted
+    drafts (already physically written into both KV pools) must never
+    leak into the partial."""
+    solo, _ = _run(pool, _ecfg(True), reqs=[(REQS[0][0], 12)])
+    solo_tokens = next(iter(solo.values()))
+    eng = ServeEngine(pool, _ecfg(True, spec_k=3))
+    if terminal == "cancel":
+        rid = eng.submit(0, REQS[0][0], 12, draft=0)
+        eng.step(); eng.step()
+        assert eng.cancel(rid) == CANCELLED
+        want = CANCELLED
+    else:
+        rid = eng.submit(0, REQS[0][0], 12, deadline=2, draft=0)
+        eng.step(); eng.step(); eng.step()
+        want = EXPIRED
+    out = eng.drain()
+    payload = out[rid]
+    assert isinstance(payload, Outcome) and payload.status == want
+    if payload.tokens is not None:
+        n = len(payload.tokens)
+        assert 0 < n < 12
+        np.testing.assert_array_equal(payload.tokens, solo_tokens[:n])
+    _assert_pool_recovered(eng)
+
+
+# ------------------------------------------------------ API validation
+def test_draft_requires_spec_mode(pool):
+    eng = ServeEngine(pool, _ecfg(False))
+    with pytest.raises(ValueError, match="spec_k"):
+        eng.submit(0, _toks(1, 4), 4, draft=1)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(pool, _ecfg(False, draft=1))
+
+
+def test_bad_drafters_rejected(pool):
+    from repro.models import init_params
+    eng = ServeEngine(pool, _ecfg(False, spec_k=2))
+    with pytest.raises(ValueError, match="pool index"):
+        eng.submit(0, _toks(1, 4), 4, draft=9)
+    big_vocab = ModelConfig(name="spec-vmismatch", arch_type="dense",
+                            n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                            d_ff=64, vocab=31, head_dim=16)
+    pool3 = pool + [PoolModel("vm", big_vocab,
+                              init_params(jax.random.PRNGKey(3), big_vocab),
+                              0.1),
+                    PoolModel("ssm", SSM, {}, 0.1)]
+    eng3 = ServeEngine(pool3, _ecfg(False, spec_k=2))
+    with pytest.raises(ValueError, match="token space"):
+        eng3.submit(0, _toks(1, 4), 4, draft=2)
+    with pytest.raises(TypeError, match="drafter"):
+        eng3.submit(0, _toks(1, 4), 4, draft=3)
+
+
+# ------------------------------------------- gateway: routing + drain()
+def _make_server(pool, ecfg):
+    router = routers.make(
+        "kmeans", RouterConfig(d_emb=16, num_models=2),
+        state={"centroids": jnp.zeros((1, 16)),
+               "A": jnp.array([[0.9, 0.5]]), "C": jnp.array([[1.0, 0.2]]),
+               "n": jnp.ones((1, 2))})
+    return RoutedServer(pool, router, engine_cfg=ecfg)
+
+
+def test_gateway_routes_cheaper_drafter(pool):
+    """The gateway pairs a speculative request with the router's best
+    strictly-cheaper model; the expensive target drafts with the cheap
+    one, the cheap target self-drafts (nothing cheaper exists)."""
+    srv = _make_server(pool, _ecfg(True, spec_k=3))
+    x = np.zeros(16, np.float32)
+    assert srv._pick_draft(0, x, 0.5) == 1
+    assert srv._pick_draft(1, x, 0.5) == 1
+    with pytest.raises(ValueError, match="spec"):
+        _make_server(pool, _ecfg(True)).submit("a b", draft_model=1)
+
+
+def test_gateway_drain_rids_passthrough(pool):
+    """Regression (ISSUE 9 satellite): RoutedServer.drain dropped the
+    engine's ``rids`` parameter — a selective drain through the gateway
+    silently drained (and CLEARED) every interleaved stream's results.
+    Now it passes through: draining one stream leaves the other's results
+    on the engine."""
+    srv = _make_server(pool, _ecfg(True))
+    ra = srv.submit("stream one alpha", max_new_tokens=6)
+    rb = srv.submit("stream two beta gamma", max_new_tokens=7)
+    out_a = srv.drain(rids=[ra])
+    assert ra in out_a and rb not in out_a
+    out_b = srv.drain([rb])
+    assert rb in out_b and out_b[rb].shape == (7,)
+    assert srv.drain() == {}
+
+
+def test_spec_counters_flow_through_gateway(pool):
+    """ServeEngine.counters() carries the spec accounting, so the FedLoop
+    sync-history snapshot (which stores counters() verbatim) picks it up
+    with no further plumbing."""
+    srv = _make_server(pool, _ecfg(True, spec_k=3))
+    srv.submit("gamma delta epsilon", max_new_tokens=8)
+    srv.drain()
+    c = srv.engine.counters()
+    for key in ("spec_rounds", "spec_drafted", "spec_accepted",
+                "spec_rejected"):
+        assert key in c
+    assert c["spec_drafted"] == c["spec_accepted"] + c["spec_rejected"] > 0
