@@ -1253,27 +1253,265 @@ def bench_resilience(smoke: bool) -> None:
     })
 
 
+# ---------------------------------------------------------------------------
+# mesh: cross-silo sharded fit + engine vs single device (subprocess
+# workers — XLA_FLAGS must force the device count before jax initializes)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_env(devices: int) -> dict:
+    """Worker environment: strip any inherited device-count forcing, then
+    force ``devices`` host CPU devices (1 = a plain single-device run)."""
+    import os
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    if devices > 1:
+        flags.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = str(C.REPO_ROOT / "src")
+    return env
+
+
+def _run_mesh_worker(task: dict) -> dict:
+    """Run one measurement in a fresh interpreter (its own device count)
+    and parse the MESHRESULT line it prints."""
+    import subprocess
+    import sys
+    cmd = [sys.executable, "-m", "benchmarks.perf_suite",
+           "--mesh-worker", json.dumps(task)]
+    proc = subprocess.run(cmd, env=_mesh_env(task["devices"]),
+                          capture_output=True, text=True, timeout=3000,
+                          cwd=C.REPO_ROOT)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh worker {task} failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("MESHRESULT "):
+            return json.loads(line[len("MESHRESULT "):])
+    raise RuntimeError(f"mesh worker {task} printed no MESHRESULT:\n"
+                       f"{proc.stdout}\n{proc.stderr}")
+
+
+def _mesh_fit_slab(n_clients: int, queries: int, d_emb: int,
+                   n_models: int) -> dict:
+    """Stacked federated slab with PowerLaw-skewed per-client sample masks
+    (the population regime the sharded fit targets: a Zipf head carries
+    the data, the long tail is mostly padding)."""
+    from repro.fed.scenarios import PowerLawScenario
+    rng = np.random.default_rng(7)
+    scen = PowerLawScenario(n_clients=n_clients, zipf_a=1.1, churn=0.15)
+    counts = np.minimum(
+        queries,
+        np.ceil(scen.popularity(0) * n_clients * queries * 0.5)
+    ).astype(np.int32)
+    return {
+        "x": rng.normal(size=(n_clients, queries, d_emb)).astype(np.float32),
+        "m": rng.integers(0, n_models,
+                          size=(n_clients, queries)).astype(np.int32),
+        "acc": (rng.random((n_clients, queries)) < 0.5).astype(np.float32),
+        "cost": rng.random((n_clients, queries)).astype(np.float32),
+        "w": (np.arange(queries)[None] < counts[:, None]).astype(np.float32),
+    }
+
+
+def _mesh_worker_fit(task: dict) -> dict:
+    """Measure one federated fit configuration in-process (the parent
+    forced our device count via XLA_FLAGS). Reports clients/s plus the
+    FIT_TRACE_LOG growth across the timed repeats (zero-retrace pin)."""
+    import time
+
+    import repro.sharding as shd
+    from repro.core import federated as F
+
+    N, D = int(task["n_clients"]), int(task["queries"])
+    rounds, cohort = int(task["rounds"]), task.get("cohort")
+    d_emb, n_models = 16, 8
+    data = _mesh_fit_slab(N, D, d_emb, n_models)
+    rcfg = RouterConfig(d_emb=d_emb, num_models=n_models, hidden=(32, 32))
+    fcfg = FedConfig(num_clients=N, batch_size=16, lr=1e-2)
+    mesh = shd.client_mesh(task["devices"]) if task["devices"] > 1 else None
+    if mesh is not None:
+        data = shd.shard_clients(data, mesh)
+    key = jax.random.PRNGKey(0)
+
+    def fit():
+        params, _ = F.fedavg(key, data, rcfg, fcfg, rounds=rounds,
+                             cohort=cohort, mesh=mesh)
+        jax.block_until_ready(params)
+
+    t0 = time.perf_counter()
+    fit()                                   # compile + warm caches
+    compile_s = time.perf_counter() - t0
+    n_trace = len(F.FIT_TRACE_LOG)
+    times = []
+    for i in range(int(task.get("repeats", 3))):
+        if task.get("profile") and i == 0:
+            with jax.profiler.trace(task["profile"]):
+                t0 = time.perf_counter()
+                fit()
+                times.append(time.perf_counter() - t0)
+        else:
+            t0 = time.perf_counter()
+            fit()
+            times.append(time.perf_counter() - t0)
+    per_round_clients = cohort if cohort else N
+    return {"fit_s": min(times), "compile_s": compile_s,
+            "clients_per_s": per_round_clients * rounds / min(times),
+            "retraces": len(F.FIT_TRACE_LOG) - n_trace}
+
+
+def _mesh_worker_engine(task: dict) -> dict:
+    """Measure engine decode tokens/s (the parent forced our device
+    count): a slot-saturating batch on a uniform pool, solo or with the
+    KV pool sharded slot-parallel over a "data" mesh. Token parity versus
+    the solo engine is pinned in tests/test_mesh.py; here we time."""
+    import time
+
+    import repro.sharding as shd
+    from repro.models import init_params
+    from repro.serve.engine import (TRACE_LOG, EngineConfig, ModelConfig,
+                                    ServeEngine)
+
+    slots, max_new = int(task["slots"]), int(task["max_new"])
+    cfg = ModelConfig(name="mesh-bench-dense", arch_type="dense",
+                      n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=257, head_dim=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pm = type("PM", (), {"cfg": cfg, "params": params})()
+    mesh = shd.data_mesh(task["devices"]) if task["devices"] > 1 else None
+    ecfg = EngineConfig(slots=slots, max_seq=128, chunk=8, page_size=None)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12))
+               for _ in range(2 * slots)]
+
+    def run(engine):
+        rids = [engine.submit(0, p, max_new) for p in prompts]
+        engine.drain(rids)
+
+    engine = ServeEngine([pm], ecfg, mesh=mesh)
+    run(engine)                              # compile + warm caches
+    n_trace = len(TRACE_LOG)
+    times = []
+    for _ in range(int(task.get("repeats", 3))):
+        t0 = time.perf_counter()
+        run(engine)
+        times.append(time.perf_counter() - t0)
+    toks = len(prompts) * max_new
+    return {"engine_s": min(times), "tokens_per_s": toks / min(times),
+            "retraces": len(TRACE_LOG) - n_trace}
+
+
+def _mesh_worker_main(payload: str) -> None:
+    task = json.loads(payload)
+    out = (_mesh_worker_fit(task) if task["kind"] == "fit"
+           else _mesh_worker_engine(task))
+    print("MESHRESULT " + json.dumps(out))
+
+
+def bench_mesh(smoke: bool, profile: str | None = None) -> None:
+    """Cross-silo mesh execution vs single device, each measurement in its
+    own interpreter (forced host device count): the sharded federated fit
+    (PowerLaw client population, full and cohort-sampled rounds) and the
+    slot-parallel engine decode. On hosts with fewer cores than devices
+    the mesh path pays pure dispatch + collective overhead with no
+    parallel hardware to win it back — ``meta.host_cpus`` records that so
+    CI gates the throughput floor on real parallelism being present."""
+    import os
+
+    devices = 8
+    if smoke:
+        fit_cases = [("fit_256c", dict(kind="fit", n_clients=256,
+                                       queries=8, rounds=2, repeats=2))]
+    else:
+        fit_cases = [
+            ("fit_1024c", dict(kind="fit", n_clients=1024, queries=16,
+                               rounds=3, repeats=3)),
+            ("fit_10240c_cohort512", dict(kind="fit", n_clients=10240,
+                                          queries=8, rounds=3, cohort=512,
+                                          repeats=3)),
+        ]
+    eng_case = dict(kind="engine", slots=8, max_new=8 if smoke else 32,
+                    repeats=2 if smoke else 3)
+
+    results = {}
+    for name, case in fit_cases + [("engine", eng_case)]:
+        for dev in (1, devices):
+            task = {**case, "devices": dev}
+            if profile and dev == devices and case["kind"] == "fit":
+                task["profile"] = os.path.join(profile, f"mesh_{name}")
+            results[(name, dev)] = _run_mesh_worker(task)
+
+    for name, case in fit_cases:
+        solo, mesh = results[(name, 1)], results[(name, devices)]
+        assert mesh["retraces"] == 0, f"{name}: mesh fit retraced"
+        C.emit(f"mesh_{name}_1dev", solo["fit_s"] * 1e6,
+               f"{solo['clients_per_s']:.0f} clients/s, single device")
+        C.emit(f"mesh_{name}_{devices}dev", mesh["fit_s"] * 1e6,
+               f"{mesh['clients_per_s']:.0f} clients/s, shard_map over "
+               f"{devices} forced host devices",
+               speedup_vs_baseline=solo["fit_s"] / mesh["fit_s"])
+    solo, mesh = results[("engine", 1)], results[("engine", devices)]
+    assert mesh["retraces"] == 0, "engine: mesh decode retraced"
+    C.emit("mesh_engine_1dev", solo["engine_s"] * 1e6,
+           f"{solo['tokens_per_s']:.0f} tokens/s, single device")
+    C.emit(f"mesh_engine_{devices}dev", mesh["engine_s"] * 1e6,
+           f"{mesh['tokens_per_s']:.0f} tokens/s, KV pool slot-parallel "
+           f"over {devices} forced host devices",
+           speedup_vs_baseline=solo["engine_s"] / mesh["engine_s"])
+    C.write_bench(_bench_file("mesh", smoke), meta={
+        "smoke": smoke, "devices": devices,
+        "host_cpus": os.cpu_count(),
+        "fit_speedup": {n: round(results[(n, 1)]["fit_s"]
+                                 / results[(n, devices)]["fit_s"], 3)
+                        for n, _ in fit_cases},
+        "engine_speedup": round(solo["engine_s"] / mesh["engine_s"], 3),
+    })
+
+
+SECTIONS = ("train", "route", "serve", "engine", "paged", "preempt",
+            "spec", "fedloop", "routerbench", "resilience", "mesh")
+
+
 def main() -> None:
+    import contextlib
+    import os
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workloads — validate the harness, not perf")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help="comma-separated subset of sections to run "
+                         f"(default: all of {','.join(SECTIONS)})")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace per section into "
+                         "DIR (TensorBoard format); off by default")
+    ap.add_argument("--mesh-worker", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.mesh_worker is not None:
+        _mesh_worker_main(args.mesh_worker)
+        return
 
-    bench_train(args.smoke)
-    bench_route(args.smoke)
-    bench_serve(args.smoke)
-    bench_engine(args.smoke)
-    bench_paged(args.smoke)
-    bench_preempt(args.smoke)
-    bench_spec(args.smoke)
-    bench_fedloop(args.smoke)
-    bench_routerbench(args.smoke)
-    bench_resilience(args.smoke)
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = set(sections) - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown sections: {sorted(unknown)} "
+                         f"(pick from {','.join(SECTIONS)})")
+    if args.profile:
+        os.makedirs(args.profile, exist_ok=True)
 
-    for f in (_bench_file(s, args.smoke)
-              for s in ("train", "route", "serve", "engine", "paged",
-                        "preempt", "spec", "fedloop", "routerbench",
-                        "resilience")):
+    for s in sections:
+        if s == "mesh":
+            # subprocess workers profile themselves (own device counts)
+            bench_mesh(args.smoke, profile=args.profile)
+            continue
+        ctx = (jax.profiler.trace(os.path.join(args.profile, s))
+               if args.profile else contextlib.nullcontext())
+        with ctx:
+            globals()[f"bench_{s}"](args.smoke)
+
+    for f in (_bench_file(s, args.smoke) for s in sections):
         blob = json.loads((C.REPO_ROOT / f).read_text())
         assert blob["records"], f"{f}: no records"
         assert all(np.isfinite(r["us_per_call"]) for r in blob["records"])

@@ -1,9 +1,14 @@
 """Federated MLP-Router training — paper Algorithm 1 (+ Appendix C.1).
 
 Clients are simulated as a stacked, padded pytree so one ``vmap`` runs every
-client's local epoch in parallel; on a TPU mesh the same function is
-``shard_map``-ped over the "data" axis (clients ↔ devices) and the FedAvg
-aggregation becomes a weighted ``psum`` — see launch/fed_train.py.
+client's local epoch in parallel; on a multi-device mesh the same round is
+``shard_map``-ped over a 1-D ``"clients"`` axis
+(``fedavg_round_sharded``): each device trains its own block of the
+stacked slab, cohort slabs are exchanged with masked ``psum``s, and the
+updates return to the (replicated) server aggregation through a sorted
+``all_gather`` — so every ``Aggregator`` strategy runs verbatim on the
+full global-order stack and the sharded fit is bit-for-bit the in-process
+one on a fixed key. ``fedavg(mesh=...)`` selects it.
 
 Client dataset layout (N clients, padded to D_max rows):
   {"x": (N, D, d_emb), "m": (N, D) int32, "acc": (N, D), "cost": (N, D),
@@ -18,9 +23,11 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import FedConfig, RouterConfig
 from repro.core import mlp_router as R
+from repro.sharding import shard_map
 from repro.train.optim import SGD, AdamW
 
 # Appended at *trace* time from inside ``fedavg_round`` — one entry per
@@ -204,12 +211,139 @@ def fedavg_round(params, data, key, rcfg: RouterConfig, fcfg: FedConfig,
     return new_params, avg_loss
 
 
+def pad_client_axis(data, multiple: int, staleness=None):
+    """Pad the stacked client axis up to a multiple of ``multiple`` with
+    empty clients (all-zero rows, ``w = 0`` — zero aggregation weight, so
+    they never move the params). Returns ``(data, staleness)`` — the
+    staleness vector, when given, pads with zeros. Used by mesh callers
+    whose organic client count doesn't divide the device axis."""
+    N = jax.tree.leaves(data)[0].shape[0]
+    pad = (-N) % int(multiple)
+    if pad == 0:
+        return data, staleness
+    data = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [jnp.asarray(a),
+             jnp.zeros((pad,) + a.shape[1:], jnp.asarray(a).dtype)]), data)
+    if staleness is not None:
+        staleness = jnp.concatenate(
+            [jnp.asarray(staleness, jnp.float32), jnp.zeros((pad,))])
+    return data, staleness
+
+
+def fedavg_round_sharded(params, data, key, rcfg: RouterConfig,
+                         fcfg: FedConfig, opt, max_steps: int, *,
+                         mesh: Mesh, full_batch=False, dp_sigma: float = 0.0,
+                         aggregator=None, loss_fn=None,
+                         cohort: Optional[int] = None, staleness=None):
+    """``fedavg_round`` under ``shard_map`` over a 1-D ``"clients"`` mesh:
+    the stacked slab stays sharded (N/n_dev clients per device), local
+    updates run device-parallel, and the server aggregation is replicated.
+
+    Bit-for-bit contract: every random draw (cohort permutation, active
+    mask, client keys, aggregation key) is computed *replicated* with the
+    exact key splits of the in-process round, and the client-update stacks
+    return to the aggregation through a tiled ``all_gather`` in global
+    client order — pure data movement, no arithmetic — so every
+    ``Aggregator`` strategy (including the sort-based robust ones and
+    secure-agg's pairwise masks) sees exactly the stack the in-process
+    path sees and the fit matches it bit-for-bit on a fixed key, for any
+    mesh shape.
+
+    ``cohort=C`` gathers the round's C-client slab across devices with a
+    masked ``psum`` exchange (each device contributes the cohort rows it
+    owns; adding zeros is exact), then splits it C/n_dev per device — the
+    compiled round stays independent of which clients were drawn, same as
+    in-process. The expensive stage — τ local steps × clients — is what
+    parallelizes; aggregation is O(N · |params|) and runs replicated.
+    """
+    N = jax.tree.leaves(data)[0].shape[0]
+    n_dev = mesh.shape["clients"]
+    Np = cohort if cohort is not None else N      # clients trained per round
+    L = Np // n_dev                               # ... per device
+    FIT_TRACE_LOG.append(("fedavg_round_sharded", N, cohort, n_dev,
+                          type(aggregator).__name__ if aggregator is not None
+                          else "default"))
+    upd = functools.partial(client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
+                            max_steps=max_steps, full_batch=full_batch,
+                            loss_fn=loss_fn)
+    if aggregator is None:
+        agg = _default_aggregator(dp_sigma)
+    elif dp_sigma > 0.0:
+        from repro.fed.aggregators import GaussianDPAggregator
+        agg = GaussianDPAggregator(sigma=dp_sigma, inner=aggregator)
+    else:
+        agg = aggregator
+    n_active = max(1, int(round(fcfg.participation * Np)))
+
+    def body(params, data_loc, key, stal):
+        d = jax.lax.axis_index("clients")
+        if cohort is not None:
+            key, k_coh = jax.random.split(key)
+            idx = jax.random.permutation(k_coh, N)[:cohort]   # replicated
+            lo = d * (N // n_dev)
+
+            def exchange(a):
+                # masked-psum cohort exchange: each device contributes the
+                # cohort rows it owns; zeros elsewhere add exactly.
+                rel = jnp.clip(idx - lo, 0, a.shape[0] - 1)
+                own = (idx >= lo) & (idx < lo + a.shape[0])
+                g = jnp.take(a, rel, axis=0)
+                g = jnp.where(own.reshape((cohort,) + (1,) * (a.ndim - 1)),
+                              g, jnp.zeros((), a.dtype))
+                return jax.lax.psum(g, "clients")
+
+            slab = jax.tree.map(exchange, data_loc)
+            data_loc = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, d * L, L, 0), slab)
+            if stal is not None:
+                stal = jnp.take(stal, idx, axis=0)
+        key, k_sel, k_cli, k_agg = jax.random.split(key, 4)
+        perm = jax.random.permutation(k_sel, Np)
+        active = jnp.zeros((Np,)).at[perm[:n_active]].set(1.0)
+        keys = jax.random.split(k_cli, Np)
+        keys_loc = jax.lax.dynamic_slice_in_dim(keys, d * L, L, 0)
+        cp_loc, closs_loc = jax.vmap(upd, in_axes=(None, 0, 0))(
+            params, data_loc, keys_loc)
+        # sorted gather: updates return to the server in global client
+        # order — pure data movement, so the aggregation below is the
+        # in-process code running on the in-process stack, verbatim.
+        cp = jax.tree.map(
+            lambda a: jax.lax.all_gather(a, "clients", axis=0, tiled=True),
+            cp_loc)
+        closs = jax.lax.all_gather(closs_loc, "clients", axis=0, tiled=True)
+        w_loc = jnp.sum(data_loc["w"], axis=-1)
+        wts = jax.lax.all_gather(w_loc, "clients", axis=0,
+                                 tiled=True) * active
+        extras = {}
+        if getattr(agg, "needs_prev", False):
+            extras["prev"] = params
+        if getattr(agg, "needs_staleness", False):
+            extras["staleness"] = (jnp.zeros_like(wts) if stal is None
+                                   else stal.astype(jnp.float32))
+        new_params = agg(cp, wts, k_agg, **extras)
+        wn = wts / jnp.maximum(jnp.sum(wts), 1e-12)
+        avg_loss = jnp.sum(closs * wn)
+        return new_params, avg_loss
+
+    if staleness is None:
+        fn = shard_map(lambda p, dt, k: body(p, dt, k, None), mesh,
+                       in_specs=(P(), P("clients"), P()),
+                       out_specs=(P(), P()))
+        return fn(params, data, key)
+    fn = shard_map(body, mesh,
+                   in_specs=(P(), P("clients"), P(), P()),
+                   out_specs=(P(), P()))
+    return fn(params, data, key, staleness)
+
+
 def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
            rounds: Optional[int] = None, optimizer: str = "adamw",
            init=None, full_batch: bool = False, freeze=None, distill=None,
            client_mask=None, dp_sigma: float = 0.0, aggregator=None,
            loss_fn: Optional[Callable] = None, cohort: Optional[int] = None,
-           staleness=None,
+           staleness=None, mesh: Optional[Mesh] = None,
+           donate_data: bool = False,
            eval_fn: Optional[Callable] = None, eval_every: int = 1):
     """Run T rounds of Algorithm 1. Returns (params, history dict).
 
@@ -238,9 +372,49 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     consumed by aggregators declaring ``needs_staleness``; providing it to
     a strategy that ignores it is an error (silent drops would fake
     async-tolerance).
+
+    ``mesh=Mesh(..., ("clients",))`` runs every round through
+    ``fedavg_round_sharded`` — the client slab sharded across devices,
+    bit-for-bit the in-process fit on a fixed key (pass the data through
+    ``sharding.shard_clients`` to keep the slab distributed end to end).
+    The mesh path supports every knob except the pytree-carrying ones
+    (freeze/distill/client_mask), which are rejected rather than silently
+    replicated. ``donate_data=True`` hands the stacked client slab to the
+    fit: once the fit drains, the caller's device buffers are released
+    (``is_deleted()`` turns true) instead of living until GC — safe only
+    when the caller won't reuse the slab, e.g. a per-sync harvest stack;
+    incompatible with ``eval_fn``, whose chunked driver reuses the slab
+    across chunks. (A jit donation annotation would be a no-op here: the
+    slab is read by every scan round, so XLA can never alias it.)
     """
     rounds = rounds if rounds is not None else fcfg.rounds
     N = data["x"].shape[0]
+    if mesh is not None:
+        pytree_kw = [n for n, v in (("freeze", freeze), ("distill", distill),
+                                    ("client_mask", client_mask))
+                     if v is not None]
+        if pytree_kw:
+            raise ValueError(
+                f"the mesh path supports only hashable knobs — "
+                f"{', '.join(pytree_kw)} carry pytrees that would pin the "
+                "sharded round to one fit; drop mesh= to use the "
+                "in-process simulation with those")
+        n_dev = mesh.shape["clients"]
+        if N % n_dev != 0:
+            raise ValueError(
+                f"N={N} stacked clients do not divide the {n_dev}-device "
+                "clients mesh — pad the stack (pad_client_axis) or resize "
+                "the mesh")
+        if cohort is not None and cohort < N and cohort % n_dev != 0:
+            raise ValueError(
+                f"cohort={cohort} does not divide the {n_dev}-device "
+                "clients mesh — each device trains cohort/n_dev clients "
+                "per round, so pick a multiple")
+    if donate_data and eval_fn is not None:
+        raise ValueError(
+            "donate_data=True with eval_fn: the chunked-eval driver "
+            "reuses the client slab across chunks, so it cannot be "
+            "donated — drop one of the two")
     if cohort is not None:
         if client_mask is not None:
             raise ValueError(
@@ -286,7 +460,7 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
     simple = (freeze is None and distill is None and client_mask is None
               and agg_hashable)
     cfg_key = (rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-               aggregator, loss_fn, cohort)
+               aggregator, loss_fn, cohort, mesh)
 
     if eval_fn is None:
         if simple:
@@ -296,7 +470,18 @@ def fedavg(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
                 _round_partial(*cfg_key, freeze, distill, client_mask),
                 rounds, donate=init is None)
         params, _, losses = _call_fit(fit, params, key, data, staleness)
-        return params, {"loss": np.asarray(losses).tolist(), "eval": []}
+        hist = {"loss": np.asarray(losses).tolist(), "eval": []}
+        if donate_data:
+            # A jit-level donation annotation can never alias the slab —
+            # every scan round reads it, so XLA has no dead window to
+            # reuse (the in-process path warns "not usable", shard_map
+            # drops the annotation). Honor the contract at the array
+            # level instead: np.asarray(losses) above drained the fit,
+            # so release the caller's buffers now — not at GC time.
+            for a in jax.tree.leaves(data):
+                if isinstance(a, jax.Array):
+                    a.delete()
+        return params, hist
 
     if eval_every > 1:
         def chunk_fn(E):
@@ -363,12 +548,14 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
     """Fuse T communication rounds into one ``lax.scan``: per-step key
     handling replicates the per-round loop exactly (split → round), so the
     result is bit-for-bit identical on a fixed key. Params are donated when
-    the caller does not hold the initial buffer (fresh init). Returns
+    the caller does not hold the initial buffer (fresh init); the client
+    slab is deliberately NOT in donate_argnums — every scan round reads
+    it, so the annotation can never alias (``fedavg(donate_data=True)``
+    releases the caller's buffers after the fit drains instead). Returns
     (params, advanced key, per-round losses) so chunked-eval fits can
     thread the key across chunks. ``staleness`` is an optional extra
     operand; the None default is resolved at trace time, so 3-arg callers
-    (and round_fns that predate the knob, e.g. the sharded mesh path) are
-    bit-for-bit the legacy scan."""
+    are bit-for-bit the legacy scan."""
     def run(params, key, data, staleness=None):
         def body(carry, _):
             params, key = carry
@@ -388,11 +575,19 @@ def _make_scan_fit(round_fn, rounds: int, *, donate: bool = True):
 
 
 def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                   aggregator, loss_fn=None, cohort=None, freeze=None,
-                   distill=None, client_mask=None):
+                   aggregator, loss_fn=None, cohort=None, mesh=None,
+                   freeze=None, distill=None, client_mask=None):
     """The one place a fedavg_round closure is built — every fit path
-    (cached or not) goes through it, so a new knob can't silently diverge
-    between the cached and fresh-jit variants."""
+    (cached or not, in-process or mesh-sharded) goes through it, so a new
+    knob can't silently diverge between the variants. ``mesh`` selects the
+    ``shard_map`` round; its unsupported pytree knobs were rejected by
+    ``fedavg`` before this point."""
+    if mesh is not None:
+        return functools.partial(
+            fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,
+            opt=_make_opt(fcfg, optimizer), max_steps=max_steps, mesh=mesh,
+            full_batch=full_batch, dp_sigma=dp_sigma, aggregator=aggregator,
+            loss_fn=loss_fn, cohort=cohort)
     return functools.partial(
         fedavg_round, rcfg=rcfg, fcfg=fcfg, opt=_make_opt(fcfg, optimizer),
         max_steps=max_steps, full_batch=full_batch, freeze=freeze,
@@ -402,18 +597,18 @@ def _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
 
 @functools.lru_cache(maxsize=64)
 def _round_fn_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator, loss_fn, cohort=None):
+                     aggregator, loss_fn, cohort=None, mesh=None):
     return jax.jit(_round_partial(rcfg, fcfg, optimizer, max_steps,
                                   full_batch, dp_sigma, aggregator, loss_fn,
-                                  cohort))
+                                  cohort, mesh))
 
 
 @functools.lru_cache(maxsize=64)
 def _scan_fit_cached(rcfg, fcfg, optimizer, max_steps, full_batch, dp_sigma,
-                     aggregator, loss_fn, cohort, rounds, donate):
+                     aggregator, loss_fn, cohort, mesh, rounds, donate):
     return _make_scan_fit(
         _round_partial(rcfg, fcfg, optimizer, max_steps, full_batch,
-                       dp_sigma, aggregator, loss_fn, cohort),
+                       dp_sigma, aggregator, loss_fn, cohort, mesh),
         rounds, donate=donate)
 
 

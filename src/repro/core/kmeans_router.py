@@ -99,6 +99,66 @@ def fed_kmeans_router(key, data, rcfg: RouterConfig, *, num_models=None,
     return {"centroids": centroids, "A": A, "C": C, "n": n}
 
 
+def fed_kmeans_router_sharded(key, data, rcfg: RouterConfig, *,
+                              num_models=None, mesh=None) -> dict:
+    """Algorithm 2 under ``shard_map`` over a 1-D ``"clients"`` mesh:
+    stage (i) — the expensive per-client local K-means — runs
+    device-parallel on each device's block of the stacked slab; the
+    (centroid, size) uploads and the per-(cluster, model) statistics
+    return to the server stages through tiled ``all_gather``s in global
+    client order (pure data movement), and stages (ii)+(iv) run
+    replicated — so the result is bit-for-bit ``fed_kmeans_router`` on a
+    fixed key, for any mesh shape."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import shard_map
+
+    M = num_models if num_models is not None else rcfg.num_models
+    N, D, d = data["x"].shape
+    n_dev = mesh.shape["clients"]
+    if N % n_dev != 0:
+        raise ValueError(
+            f"N={N} stacked clients do not divide the {n_dev}-device "
+            "clients mesh — pad the stack (federated.pad_client_axis) or "
+            "resize the mesh")
+    L = N // n_dev
+
+    def run(key, data_loc):
+        dd = jax.lax.axis_index("clients")
+        kl, kg = jax.random.split(key)
+        keys = jax.random.split(kl, N)                        # replicated
+        keys_loc = jax.lax.dynamic_slice_in_dim(keys, dd * L, L, 0)
+
+        def local(key_i, data_i):
+            cents, _ = kmeans(key_i, data_i["x"], rcfg.k_local,
+                              iters=rcfg.kmeans_iters, n_init=rcfg.n_init,
+                              mask=data_i["w"] > 0)
+            sizes = jnp.bincount(kops.kmeans_assign(data_i["x"], cents),
+                                 weights=data_i["w"], length=rcfg.k_local)
+            return cents, sizes
+
+        cents_l, sizes_l = jax.vmap(local)(keys_loc, data_loc)
+        ag = functools.partial(jax.lax.all_gather, axis_name="clients",
+                               axis=0, tiled=True)
+        cents, sizes = ag(cents_l), ag(sizes_l)
+        # (ii) server K-means over the uploads — replicated, verbatim
+        centroids, _ = kmeans(kg, cents.reshape(N * rcfg.k_local, d),
+                              rcfg.k_global, iters=rcfg.kmeans_iters,
+                              n_init=rcfg.n_init,
+                              weights=sizes.reshape(N * rcfg.k_local))
+        # (iii) per-client statistics on this device's block
+        a, c, n = jax.vmap(lambda di: _cluster_stats(
+            centroids, di, rcfg.k_global, M))(data_loc)
+        # (iv) gather then reduce replicated — same summation order as
+        # the in-process jnp.sum over the full stack
+        a, c, n = (jnp.sum(ag(a), 0), jnp.sum(ag(c), 0),
+                   jnp.sum(ag(n), 0))
+        A, C = _finalize(a, c, n, rcfg.c_max)
+        return {"centroids": centroids, "A": A, "C": C, "n": n}
+
+    fn = shard_map(run, mesh, in_specs=(P(), P("clients")), out_specs=P())
+    return fn(key, data)
+
+
 def local_kmeans_router(key, data_i, rcfg: RouterConfig, *,
                         num_models=None, k=None) -> dict:
     """Client-local (no-FL) baseline: own K-means + own statistics."""

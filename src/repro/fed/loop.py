@@ -30,9 +30,12 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
+import repro.sharding as shd
 from repro import routers
 from repro.config import FedConfig
+from repro.core import federated as F
 from repro.train import checkpoint as ckpt
 
 #: FedLoop.save() payload format version (bumped on layout changes).
@@ -49,6 +52,14 @@ class FedLoopConfig:
     #: capacity — static shapes, one compile for every sync
     cohort: Optional[int] = None  #: per-round client sampling inside each
     #: sync's fit (parametric families; see core/federated.fedavg)
+    mesh: Optional[Mesh] = None  #: cross-silo mesh for the sync fits: the
+    #: harvested client stack is padded to the "clients" axis (zero-weight
+    #: rows — they never move the params), sharded across devices, and the
+    #: whole fit runs under shard_map (core/federated.fedavg mesh path) —
+    #: bit-for-bit the in-process fit on the same padded stack. The padded
+    #: slab is donated into the compiled fit on parametric families. The
+    #: hot-swap after each sync is mesh-agnostic (state enters the route
+    #: jit as a traced argument either way)
 
 
 class FedLoop:
@@ -134,6 +145,18 @@ class FedLoop:
             if not self.cfg.pad_to_capacity:  # unpadded stacks skip empties
                 ids = [c for c in ids if len(harvest.buffer(c)) > 0]
             kw["staleness"] = self._staleness_vector(ids)
+        if self.cfg.mesh is not None:
+            # pad the stack to the clients axis (zero-weight rows), place
+            # it sharded, and run the whole sync fit on the mesh; the slab
+            # is freshly built each sync, so parametric fits may donate it
+            data, stal = F.pad_client_axis(
+                data, self.cfg.mesh.shape["clients"], kw.get("staleness"))
+            if stal is not None:
+                kw["staleness"] = stal
+            data = shd.shard_clients(data, self.cfg.mesh)
+            kw["mesh"] = self.cfg.mesh
+            if self.server.router.parametric:
+                kw["donate_data"] = True
         new_router, hist = routers.fit_federated(
             self.server.router, data, self.fcfg, key=key,
             rounds=self.cfg.rounds_per_sync, **kw)

@@ -21,10 +21,9 @@ if __name__ == "__main__":  # only force fake devices when run as a driver
 import argparse
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
-from repro import routers
+from repro import routers, sharding as shd
 from repro.config import FedConfig, RouterConfig
 from repro.core import policy
 from repro.data.partition import federated_split
@@ -32,8 +31,7 @@ from repro.data.synthetic import make_eval_corpus
 
 
 def make_client_mesh():
-    devs = np.array(jax.devices())
-    return Mesh(devs, ("clients",))
+    return shd.client_mesh()
 
 
 def fedavg_distributed(key, data, rcfg: RouterConfig, fcfg: FedConfig, *,
@@ -61,8 +59,11 @@ def main():
 
     mesh = make_client_mesh()
     print(f"devices: {len(jax.devices())}, clients: {args.clients}")
+    # keep the slab distributed end to end: each device holds its own
+    # block of clients, never the full stack
+    train = shd.shard_clients(split["train"], mesh)
     router, losses = fedavg_distributed(jax.random.PRNGKey(2),
-                                        split["train"], rcfg, fcfg,
+                                        train, rcfg, fcfg,
                                         rounds=args.rounds, mesh=mesh)
     tg = split["test_global"]
     *_, auc = policy.eval_router(router.predict, tg["x"], tg["acc_table"],

@@ -66,17 +66,25 @@ class KMeansRouter(Router):
         """Alg. 2: one-shot — local K-means upload, server K-means over
         centroids, one statistics round. ``rounds`` does not apply (and is
         ignored); fcfg is accepted for signature parity with parametric
-        families. ``mesh`` and parametric-only knobs are rejected rather
-        than silently dropped."""
-        if mesh is not None:
-            raise ValueError("the kmeans family is one-shot: there is no "
-                             "sharded fitting path — drop mesh=")
+        families. ``mesh=Mesh(..., ("clients",))`` runs the per-client
+        local stage device-parallel under ``shard_map`` — bit-for-bit the
+        in-process protocol on a fixed key (no client_mask on that path);
+        parametric-only knobs are rejected rather than silently dropped."""
         if kw:
             raise ValueError("kmeans fit_federated got unsupported "
                              f"options: {', '.join(sorted(kw))}")
-        state = KR.fed_kmeans_router(key, data, self.rcfg,
-                                     num_models=self._num_models,
-                                     client_mask=client_mask)
+        if mesh is not None:
+            if client_mask is not None:
+                raise ValueError("the kmeans mesh path supports only the "
+                                 "plain protocol — drop client_mask= or "
+                                 "mesh=")
+            state = KR.fed_kmeans_router_sharded(
+                key, data, self.rcfg, num_models=self._num_models,
+                mesh=mesh)
+        else:
+            state = KR.fed_kmeans_router(key, data, self.rcfg,
+                                         num_models=self._num_models,
+                                         client_mask=client_mask)
         new = self.with_state(state)
         hist = {"loss": [], "eval": [eval_fn(new)] if eval_fn else []}
         return new, hist

@@ -99,15 +99,14 @@ class MFRouter(Router):
                        mesh=None, **kw):
         """Alg. 1 via ``core.federated.fedavg`` with the MF loss — kw
         forwards optimizer/full_batch/freeze/distill/client_mask/dp_sigma/
-        aggregator/eval_every exactly like the MLP family. No sharded
-        path: drop mesh= to use the in-process simulation."""
-        if mesh is not None:
-            raise ValueError("the mf family has no sharded fitting path — "
-                             "drop mesh= to use the in-process simulation")
+        aggregator/cohort/eval_every exactly like the MLP family.
+        ``mesh=`` selects the same ``shard_map`` fit the MLP family uses
+        (the sharded round is family-agnostic through ``loss_fn``),
+        bit-for-bit the in-process fit on a fixed key."""
         wrapped = (None if eval_fn is None
                    else lambda p: eval_fn(self.with_state(p)))
         params, hist = F.fedavg(key, data, self.rcfg, fcfg, rounds=rounds,
-                                init=self._init_for_fit(key),
+                                init=self._init_for_fit(key), mesh=mesh,
                                 eval_fn=wrapped, loss_fn=MF.mf_loss, **kw)
         return self.with_state(params), hist
 

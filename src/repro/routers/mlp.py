@@ -7,23 +7,16 @@ both heads and the λ-utility argmax without materializing A and C.
 
 Federated fitting is iterative FedAvg. With ``mesh=None`` it is exactly
 ``core.federated.fedavg`` (bit-for-bit on a fixed key); with a 1-D client
-mesh it is the ``shard_map`` variant where each device runs its local
-clients' updates and the server aggregation is a weighted ``psum``.
+mesh it is the ``shard_map`` variant (``fedavg_round_sharded``) where each
+device trains its own block of the stacked client slab and the server
+aggregation runs replicated on the all-gathered update stack — every
+``Aggregator`` strategy, cohort sampling, dp_sigma, and staleness ride it,
+bit-for-bit the in-process fit on a fixed key.
 """
 from __future__ import annotations
 
-import functools
-import inspect
-
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-
-try:  # moved out of experimental in newer jax
-    from jax import shard_map
-except ImportError:  # jax<=0.4.x
-    from jax.experimental.shard_map import shard_map
 
 from repro.core import expansion as E
 from repro.core import federated as F
@@ -31,10 +24,6 @@ from repro.core import mlp_router as R
 from repro.kernels import ops as kops
 from repro.routers.base import Router
 from repro.routers.registry import register
-
-# the "replication check" kwarg was renamed check_rep → check_vma
-_CHECK_KW = ("check_vma" if "check_vma"
-             in inspect.signature(shard_map).parameters else "check_rep")
 
 
 @register("mlp")
@@ -114,28 +103,17 @@ class MLPRouter(Router):
                        mesh=None, **kw):
         """Alg. 1. mesh=None → in-process vmap simulation (≡ legacy
         ``fedavg``; kw forwards optimizer/full_batch/freeze/distill/
-        client_mask/dp_sigma/aggregator). mesh=Mesh(..., ("clients",)) →
-        shard_map across devices; that path supports only optimizer= of
-        the kw (its aggregation is a fixed weighted psum)."""
+        client_mask/dp_sigma/aggregator/cohort/staleness).
+        mesh=Mesh(..., ("clients",)) → shard_map across devices,
+        bit-for-bit the in-process fit on a fixed key; it carries every
+        knob except the pytree-valued ones (freeze/distill/client_mask,
+        rejected in ``F.fedavg``)."""
         init = self._init_for_fit(key)
         wrapped = (None if eval_fn is None
                    else lambda p: eval_fn(self.with_state(p)))
-        if mesh is not None:
-            unsupported = sorted(set(kw) - {"optimizer", "eval_every"})
-            if unsupported:
-                raise ValueError(
-                    f"the mesh path supports only optimizer=/eval_every= "
-                    f"(got {', '.join(unsupported)}) — drop mesh= to use "
-                    "the in-process simulation with those knobs")
-            params, hist = _fedavg_sharded(
-                key, data, self.rcfg, fcfg,
-                rounds=rounds if rounds is not None else fcfg.rounds,
-                mesh=mesh, init=init, num_models=self._num_models,
-                eval_fn=wrapped, **kw)
-        else:
-            params, hist = F.fedavg(key, data, self.rcfg, fcfg,
-                                    rounds=rounds, init=init,
-                                    eval_fn=wrapped, **kw)
+        params, hist = F.fedavg(key, data, self.rcfg, fcfg,
+                                rounds=rounds, init=init, mesh=mesh,
+                                eval_fn=wrapped, **kw)
         return self.with_state(params), hist
 
     def _fit_local(self, key, data_i, fcfg, *, steps: int = 400,
@@ -146,95 +124,3 @@ class MLPRouter(Router):
                                      init=self._init_for_fit(key), **kw)
         return self.with_state(params), {"loss": [float(l) for l in
                                                   np.asarray(losses)]}
-
-
-# ---------------------------------------------------------------------------
-# shard_map FedAvg (moved here from launch/fed_train.py so every entry point
-# reaches it through fit_federated(mesh=...))
-# ---------------------------------------------------------------------------
-
-
-def fedavg_round_sharded(params, data, key, rcfg, fcfg, opt, max_steps,
-                         mesh: Mesh):
-    """One FedAvg round with clients sharded across devices: local vmap per
-    device, server aggregation (Alg. 1 line 11) as a weighted psum."""
-    N = data["x"].shape[0]
-    n_dev = mesh.shape["clients"]
-    assert N % n_dev == 0, "num_clients must divide the client-mesh size"
-    key, k_sel, k_cli = jax.random.split(key, 3)
-    n_active = max(1, int(round(fcfg.participation * N)))
-    perm = jax.random.permutation(k_sel, N)
-    active = jnp.zeros((N,)).at[perm[:n_active]].set(1.0)
-    keys = jax.random.split(k_cli, N)
-
-    upd = functools.partial(F.client_update, rcfg=rcfg, fcfg=fcfg, opt=opt,
-                            max_steps=max_steps)
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(), P("clients"), P("clients"), P("clients")),
-        out_specs=(P(), P()),
-        **{_CHECK_KW: False})
-    def round_fn(params, data_shard, keys_shard, active_shard):
-        # local clients on this device
-        cp, closs = jax.vmap(lambda d, k: upd(params, d, k)[0:2],
-                             in_axes=(0, 0))(data_shard, keys_shard)
-        w = jnp.sum(data_shard["w"], axis=-1) * active_shard
-        wsum = jax.lax.psum(jnp.sum(w), "clients")
-        agg = jax.tree.map(
-            lambda s: jax.lax.psum(
-                jnp.tensordot(w, s.astype(jnp.float32), axes=1), "clients")
-            / jnp.maximum(wsum, 1e-12),
-            cp)
-        loss = jax.lax.psum(jnp.sum(closs * w), "clients") / jnp.maximum(
-            wsum, 1e-12)
-        return agg, loss
-
-    new_params, loss = round_fn(params, data, keys, active)
-    return jax.tree.map(lambda a, b: a.astype(b.dtype), new_params,
-                        params), loss
-
-
-@functools.lru_cache(maxsize=16)
-def _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps, mesh: Mesh,
-                             rounds, donate):
-    """Compiled scan-fused sharded fit, reused across repeated fits with
-    the same config/mesh (Mesh and the frozen configs are hashable)."""
-    round_fn = functools.partial(
-        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,
-        opt=F._make_opt(fcfg, optimizer), max_steps=max_steps, mesh=mesh)
-    return F._make_scan_fit(round_fn, rounds, donate=donate)
-
-
-def _fedavg_sharded(key, data, rcfg, fcfg, *, rounds: int, mesh: Mesh,
-                    init=None, num_models=None, optimizer: str = "adamw",
-                    eval_fn=None, eval_every: int = 1):
-    D_max = data["x"].shape[1]
-    # same local-work budget as the in-process path (F.fedavg)
-    max_steps = max(1, int(np.ceil(D_max / fcfg.batch_size))) \
-        * fcfg.local_epochs
-    key, k_init = jax.random.split(key)
-    params = init if init is not None else R.init_mlp_router(
-        k_init, rcfg, num_models=num_models)
-    if eval_fn is None:  # fuse the round loop — one dispatch, one host sync
-        fit = _sharded_scan_fit_cached(rcfg, fcfg, optimizer, max_steps,
-                                       mesh, rounds, init is None)
-        params, _, losses = fit(params, key, data)
-        return params, {"loss": np.asarray(losses).tolist(), "eval": []}
-
-    if eval_every > 1:  # chunked-eval: scan E rounds per eval sync
-        return F.chunked_eval_fit(
-            lambda E: _sharded_scan_fit_cached(rcfg, fcfg, optimizer,
-                                               max_steps, mesh, E, False),
-            params, key, data, rounds, eval_every, eval_fn)
-
-    step = jax.jit(functools.partial(
-        fedavg_round_sharded, rcfg=rcfg, fcfg=fcfg,
-        opt=F._make_opt(fcfg, optimizer), max_steps=max_steps, mesh=mesh))
-    hist = {"loss": [], "eval": []}
-    for _ in range(rounds):
-        key, k_r = jax.random.split(key)
-        params, loss = step(params, data, k_r)
-        hist["loss"].append(float(loss))
-        hist["eval"].append(eval_fn(params))
-    return params, hist

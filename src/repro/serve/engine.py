@@ -94,6 +94,7 @@ the chaos bench (``benchmarks/perf_suite.bench_preempt``).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import time
@@ -103,6 +104,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.sharding as shd
 from repro.config import ModelConfig
 from repro.models import model as mdl
 from repro.serve.kv_cache import (PageTable, alloc_draft_pool,
@@ -426,9 +428,10 @@ class _Lane:
     """Per-model engine state: the KV pool (paged or uniform) + host-side
     slot/page bookkeeping."""
 
-    def __init__(self, pm, ecfg: EngineConfig):
+    def __init__(self, pm, ecfg: EngineConfig, mesh=None):
         self.pm = pm
         self.ecfg = ecfg
+        self.mesh = mesh
         self.paged = bool(ecfg.page_size)
         if self.paged:
             self.pool = alloc_page_pool(pm.cfg, ecfg.resolved_pages,
@@ -438,6 +441,13 @@ class _Lane:
         else:
             self.pool = alloc_slot_pool(pm.cfg, ecfg.slots, ecfg.max_seq)
             self.pt = None
+        #: the params handle the decode stages feed the jitted programs —
+        #: replicated over the mesh when one is live (so every pool-sharded
+        #: dispatch is one mesh program), the model's own buffers otherwise
+        self.params = pm.params
+        if mesh is not None:
+            self.pool = shd.shard_kv_pool(self.pool, mesh)
+            self.params = shd.replicate(pm.params, mesh)
         self.free: List[int] = list(range(ecfg.slots))[::-1]
         self.active: Dict[int, _Active] = {}             # slot -> request
         self.queue: Deque[_Pending] = collections.deque()
@@ -451,6 +461,9 @@ class _Lane:
         #: draft prefill of their next matching occupant overwrites them
         #: (write-before-validity, same invariant as the target pool).
         self.draft_pools: Dict[int, object] = {}
+        #: drafter pool index → its params handle (replicated on a mesh),
+        #: filled alongside draft_pools
+        self.draft_params: Dict[int, object] = {}
 
 
 class ServeEngine:
@@ -460,8 +473,25 @@ class ServeEngine:
     ``drain`` steps until idle and returns {request id: np tokens}.
     """
 
-    def __init__(self, pool: List, ecfg: Optional[EngineConfig] = None):
+    def __init__(self, pool: List, ecfg: Optional[EngineConfig] = None, *,
+                 mesh=None):
         self.ecfg = ecfg or EngineConfig()
+        #: cross-silo mesh execution (repro.sharding): with a live Mesh the
+        #: per-lane KV pools are placed via ``shard_kv_pool`` (slot dim over
+        #: "data" — slot-parallel decode, bit-identical tokens; Hkv dim over
+        #: "heads" — tensor-parallel attention), params replicate, and every
+        #: jitted stage traces under ``ENGINE_RULES`` so the attention
+        #: code's logical-axis annotations bind to mesh axes. Host-side
+        #: bookkeeping (slots, page tables, queues) is untouched, so the
+        #: zero-retrace guarantees carry over verbatim.
+        self.mesh = mesh
+        if mesh is not None and not any(a in mesh.shape
+                                        for a in ("data", "heads")):
+            raise ValueError(
+                f"ServeEngine mesh carries axes {tuple(mesh.shape)} — the "
+                "engine shards over \"data\" (slot-parallel) and/or "
+                "\"heads\" (tensor-parallel); build one with "
+                "sharding.data_mesh()/head_mesh()/make_mesh()")
         if self.ecfg.reserve not in ("lifetime", "initial"):
             raise ValueError(f"EngineConfig.reserve={self.ecfg.reserve!r}: "
                              "expected 'lifetime' or 'initial'")
@@ -527,6 +557,15 @@ class ServeEngine:
         #: it). Reset by assigning 0; bench_paged's in-flight-per-byte
         #: numerator.
         self.peak_active: int = 0
+
+    def _rules(self):
+        """Logical-axis rules context for the jitted stages: on a mesh the
+        attention code's ``constrain`` annotations bind to the engine axes
+        at trace time (rules naming axes the mesh doesn't carry replicate);
+        solo it's a no-op, so the stage programs are unchanged."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.use_rules(self.mesh, shd.ENGINE_RULES)
 
     def _region_len(self, n_tokens: int, max_new: int) -> int:
         return region_len(n_tokens, max_new, self.ecfg.chunk)
@@ -644,7 +683,8 @@ class ServeEngine:
         self._next_rid += 1
         lane = self._lanes.get(int(model_idx))
         if lane is None:
-            lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg)
+            lane = self._lanes[int(model_idx)] = _Lane(pm, self.ecfg,
+                                                       self.mesh)
         pend = _Pending(rid, toks, max_new, t_submit=time.perf_counter(),
                         deadline=(self._steps + int(deadline)
                                   if deadline is not None else None),
@@ -961,17 +1001,25 @@ class ServeEngine:
         starts from the target-committed ``lane.tok``."""
         dpm = self.pool[draft_idx]
         if draft_idx not in lane.draft_pools:
-            lane.draft_pools[draft_idx] = alloc_draft_pool(
-                dpm.cfg, self.ecfg.slots, self.ecfg.max_seq,
-                self.ecfg.spec_k)
+            dpool = alloc_draft_pool(dpm.cfg, self.ecfg.slots,
+                                     self.ecfg.max_seq, self.ecfg.spec_k)
+            if self.mesh is not None:
+                dpool = shd.shard_kv_pool(dpool, self.mesh)
+                lane.draft_params[draft_idx] = shd.replicate(dpm.params,
+                                                             self.mesh)
+            else:
+                lane.draft_params[draft_idx] = dpm.params
+            lane.draft_pools[draft_idx] = dpool
         S = len(full)
         S_b = next_pow2(S)
         toks_p = np.zeros((1, S_b), np.int32)
         toks_p[0, :S] = full
-        _, kv = _prefill_fn(dpm.cfg)(dpm.params, jnp.asarray(toks_p),
-                                     jnp.int32(S - 1))
-        lane.draft_pools[draft_idx] = _admit_fn(dpm.cfg)(
-            lane.draft_pools[draft_idx], kv, jnp.int32(slot))
+        with self._rules():
+            _, kv = _prefill_fn(dpm.cfg)(lane.draft_params[draft_idx],
+                                         jnp.asarray(toks_p),
+                                         jnp.int32(S - 1))
+            lane.draft_pools[draft_idx] = _admit_fn(dpm.cfg)(
+                lane.draft_pools[draft_idx], kv, jnp.int32(slot))
 
     def _admit(self, lane: _Lane) -> None:
         if lane.paged:
@@ -986,9 +1034,11 @@ class ServeEngine:
             S_b = next_pow2(S)
             toks_p = np.zeros((1, S_b), np.int32)
             toks_p[0, :S] = full
-            tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
-                                        jnp.int32(S - 1))
-            lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
+            with self._rules():
+                tok0, kv = _prefill_fn(cfg)(lane.params,
+                                            jnp.asarray(toks_p),
+                                            jnp.int32(S - 1))
+                lane.pool = _admit_fn(cfg)(lane.pool, kv, jnp.int32(slot))
             if self.ecfg.spec_k:
                 self._admit_draft(lane, slot, req.draft, full)
             self.admission_lat.append(time.perf_counter() - req.t_submit)
@@ -1050,10 +1100,12 @@ class ServeEngine:
                 toks_p[r, :S] = self._full_prompt(req)
                 last[r] = S - 1
                 pages_mat[r] = pages[:n_pp]
-            tok0, kv = _prefill_fn(cfg)(lane.pm.params, jnp.asarray(toks_p),
-                                        jnp.asarray(last))
-            lane.pool = _write_pages_fn(cfg)(lane.pool, kv,
-                                             jnp.asarray(pages_mat))
+            with self._rules():
+                tok0, kv = _prefill_fn(cfg)(lane.params,
+                                            jnp.asarray(toks_p),
+                                            jnp.asarray(last))
+                lane.pool = _write_pages_fn(cfg)(lane.pool, kv,
+                                                 jnp.asarray(pages_mat))
             tok0 = np.asarray(tok0)
             now = time.perf_counter()
             for r, (req, slot, S, _, pages) in enumerate(items):
@@ -1110,21 +1162,23 @@ class ServeEngine:
             mask[slots] = True
             tok_m = np.where(mask, lane.tok, 0).astype(np.int32)
             pos_m = np.where(mask, lane.pos, 0).astype(np.int32)
-            lane.draft_pools[d], dr = _draft_fn(dpm.cfg, k)(
-                dpm.params, lane.draft_pools[d], jnp.asarray(tok_m),
-                jnp.asarray(pos_m))
+            with self._rules():
+                lane.draft_pools[d], dr = _draft_fn(dpm.cfg, k)(
+                    lane.draft_params[d], lane.draft_pools[d],
+                    jnp.asarray(tok_m), jnp.asarray(pos_m))
             dr = np.asarray(dr)
             drafted[slots] = dr[slots]
         ver_tok = np.concatenate([lane.tok[:, None], drafted[:, :k - 1]],
                                  axis=1)
-        if lane.paged:
-            lane.pool, g = _verify_paged_fn(cfg, T)(
-                lane.pm.params, lane.pool, jnp.asarray(lane.pt.table),
-                jnp.asarray(ver_tok), jnp.asarray(lane.pos))
-        else:
-            lane.pool, g = _verify_fn(cfg, T)(
-                lane.pm.params, lane.pool, jnp.asarray(ver_tok),
-                jnp.asarray(lane.pos))
+        with self._rules():
+            if lane.paged:
+                lane.pool, g = _verify_paged_fn(cfg, T)(
+                    lane.params, lane.pool, jnp.asarray(lane.pt.table),
+                    jnp.asarray(ver_tok), jnp.asarray(lane.pos))
+            else:
+                lane.pool, g = _verify_fn(cfg, T)(
+                    lane.params, lane.pool, jnp.asarray(ver_tok),
+                    jnp.asarray(lane.pos))
         g = np.asarray(g)                                 # (slots, T)
         self.spec_rounds += 1
         for slot in list(lane.active):
@@ -1164,14 +1218,15 @@ class ServeEngine:
 
     def _decode_chunk(self, lane: _Lane) -> None:
         cfg, ecfg = lane.pm.cfg, self.ecfg
-        if lane.paged:
-            lane.pool, tok, pos, out = _chunk_paged_fn(cfg, ecfg.chunk)(
-                lane.pm.params, lane.pool, jnp.asarray(lane.pt.table),
-                jnp.asarray(lane.tok), jnp.asarray(lane.pos))
-        else:
-            lane.pool, tok, pos, out = _chunk_fn(cfg, ecfg.chunk)(
-                lane.pm.params, lane.pool, jnp.asarray(lane.tok),
-                jnp.asarray(lane.pos))
+        with self._rules():
+            if lane.paged:
+                lane.pool, tok, pos, out = _chunk_paged_fn(cfg, ecfg.chunk)(
+                    lane.params, lane.pool, jnp.asarray(lane.pt.table),
+                    jnp.asarray(lane.tok), jnp.asarray(lane.pos))
+            else:
+                lane.pool, tok, pos, out = _chunk_fn(cfg, ecfg.chunk)(
+                    lane.params, lane.pool, jnp.asarray(lane.tok),
+                    jnp.asarray(lane.pos))
         out = np.asarray(out)
         active_mask = np.zeros((ecfg.slots,), bool)
         active_mask[list(lane.active)] = True

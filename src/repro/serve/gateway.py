@@ -130,7 +130,8 @@ class RoutedServer:
                  engine_cfg: Optional[EngineConfig] = None,
                  harvest: "Optional[HarvestStore]" = None,
                  fault_plan: "Optional[FaultPlan]" = None,
-                 max_retries: int = 2, retry_backoff: float = 0.0):
+                 max_retries: int = 2, retry_backoff: float = 0.0,
+                 mesh=None):
         if not isinstance(router, Router):
             raise TypeError(
                 "RoutedServer takes a repro.routers.Router — build one with "
@@ -161,8 +162,12 @@ class RoutedServer:
         self._route_fn = self._make_route_fn(router)
         self._route_fn_router = router
         # One continuous-batching engine per server: per-model slot pools
-        # are allocated lazily on first traffic to that model.
-        self.engine = ServeEngine(pool, engine_cfg)
+        # are allocated lazily on first traffic to that model. ``mesh``
+        # selects cross-silo execution — KV pools sharded over the mesh's
+        # "data"/"heads" axes, decode dispatched as one mesh program (see
+        # ServeEngine); the per-request fallback path stays solo.
+        self.mesh = mesh
+        self.engine = ServeEngine(pool, engine_cfg, mesh=mesh)
         # Harvest layer (repro.fed): per-client EvalBuffers fed by routed
         # traffic. Outcome scores arrive asynchronously via
         # report_outcome(); un-reported entries wait (bounded) in

@@ -201,10 +201,13 @@ def test_fit_federated_mesh_contract(split):
         eval_fn=lambda rt: seen.append(rt.num_models) or len(seen))
     assert r.num_models == 5
     assert len(hist["loss"]) == 2 and hist["eval"] == [1, 2]
+    # hashable knobs (dp_sigma, aggregator, cohort) ride the mesh; the
+    # pytree-carrying ones are named and rejected instead of silently
+    # pinning the sharded round to one compiled fit.
     with pytest.raises(ValueError, match="mesh path supports only"):
         routers.fit_federated(routers.make("mlp", RCFG), split["train"],
                               FCFG, key=jax.random.PRNGKey(2), mesh=mesh,
-                              dp_sigma=0.1)
+                              freeze={"w": True})
 
 
 def test_mesh_path_local_epochs_consistent_with_inprocess(split):
@@ -229,9 +232,13 @@ def test_mesh_path_local_epochs_consistent_with_inprocess(split):
 def test_kmeans_rejects_unsupported_fit_options(split):
     from jax.sharding import Mesh
     mesh = Mesh(np.array(jax.devices()[:1]), ("clients",))
-    with pytest.raises(ValueError, match="no .*sharded fitting path"):
+    # the kmeans mesh path exists now, but only for the plain protocol —
+    # combining it with client_mask names the conflict instead of
+    # silently dropping one.
+    with pytest.raises(ValueError, match="kmeans mesh path supports only"):
         routers.fit_federated(routers.make("kmeans", RCFG), split["train"],
-                              FCFG, key=jax.random.PRNGKey(3), mesh=mesh)
+                              FCFG, key=jax.random.PRNGKey(3), mesh=mesh,
+                              client_mask=np.ones(3, np.float32))
     with pytest.raises(ValueError, match="unsupported options: dp_sigma"):
         routers.fit_federated(routers.make("kmeans", RCFG), split["train"],
                               FCFG, key=jax.random.PRNGKey(3), dp_sigma=0.1)
